@@ -1,0 +1,39 @@
+"""Multi-lane scaling (paper Sec. III: 'a simple multi-lane fabric ...
+scales throughput'): encode+decode throughput vs lane count."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import coder, spc
+from repro.data.pipeline import image_rows
+
+
+def run(t: int = 1024, lane_counts=(8, 32, 128, 512), seed: int = 0):
+    counts = np.bincount(image_rows(8, 4096, seed=seed).ravel(),
+                         minlength=256)
+    tbl = jax.tree.map(jnp.asarray, spc.tables_from_counts_np(counts))
+    out = {}
+    for lanes in lane_counts:
+        rows = jnp.asarray(image_rows(lanes, t, seed=seed), jnp.int32)
+        enc_fn = jax.jit(lambda s: coder.encode(s, tbl))
+        enc = enc_fn(rows)
+        jax.block_until_ready(enc.buf)
+        t0 = time.perf_counter()
+        enc = enc_fn(rows)
+        jax.block_until_ready(enc.buf)
+        dt = time.perf_counter() - t0
+        out[lanes] = lanes * t / dt / 1e6  # Msym/s
+    return out
+
+
+def main(emit):
+    r = run()
+    base = r[min(r)]
+    for lanes, msps in sorted(r.items()):
+        emit(f"lanes_{lanes}_throughput_Msym_s", msps,
+             f"scaling x{msps/base:.1f} vs {min(r)} lanes")

@@ -1,0 +1,59 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig4a_speed,...]
+
+Prints ``name,us_per_call,derived`` CSV (us_per_call column holds the
+figure's primary value when the metric is not a latency).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+
+jax.config.update("jax_platforms", "cpu")
+
+from benchmarks import (bench_lanes, bench_ratio, bench_search, bench_spc,
+                        bench_speed)
+
+SUITES = {
+    "fig4a_speed": bench_speed.main,
+    "fig4b_search": bench_search.main,
+    "fig4c_ratio": bench_ratio.main,
+    "lanes": bench_lanes.main,
+    "spc": bench_spc.main,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite names")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    print("name,us_per_call,derived")
+
+    def emit(name, value, derived=""):
+        print(f"{name},{value:.4f},{derived}", flush=True)
+
+    failures = 0
+    for name, fn in SUITES.items():
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        try:
+            fn(emit)
+            print(f"# suite {name} done in {time.time()-t0:.1f}s",
+                  flush=True)
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"# suite {name} FAILED: {e}", flush=True)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

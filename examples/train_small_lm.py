@@ -1,0 +1,83 @@
+"""End-to-end driver: train a compact probability model, then use it for
+neural lossless compression (the paper's full hardware-software codesign
+loop, Fig. 1).
+
+    PYTHONPATH=src python examples/train_small_lm.py [--steps 300]
+
+1. trains ras-pimc (the paper's compact NN probability generator) on a
+   synthetic token stream for a few hundred steps with the fault-tolerant
+   loop (checkpoints + restart manager);
+2. compresses held-out streams with the trained model through SPC + rANS;
+3. decompresses with model-top-k prediction-guided decoding and verifies
+   bit-exactness;
+4. shows the compression-ratio ladder: static histogram < trained neural.
+"""
+
+import argparse
+import tempfile
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.core import bitstream
+from repro.data.pipeline import token_stream
+from repro.models import init_model
+from repro.serve.compress import histogram_compress, lm_compress, \
+    lm_decompress
+from repro.train.fault_tolerance import RestartManager
+from repro.train.train_loop import init_train_state, make_train_step
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=300)
+args = ap.parse_args()
+
+cfg = get_smoke_config("ras-pimc").with_(grad_accum=1)
+params = init_model(cfg, jax.random.PRNGKey(0))
+state = init_train_state(params)
+step_fn = jax.jit(make_train_step(cfg, base_lr=3e-3))
+
+b, s = 16, 128
+
+
+def batch_fn(i):
+    toks = token_stream(cfg.vocab_size, (b, s + 1), seed=1000 + i)
+    return {"tokens": jnp.asarray(toks[:, :-1], jnp.int32),
+            "labels": jnp.asarray(toks[:, 1:], jnp.int32)}
+
+
+print(f"training ras-pimc for {args.steps} steps ...")
+with tempfile.TemporaryDirectory() as ckpt:
+    mgr = RestartManager(ckpt, save_every=100)
+
+    def wrapped(st, batch):
+        st, m = step_fn(st, batch)
+        if int(st.step) % 50 == 0:
+            print(f"  step {int(st.step):4d} loss "
+                  f"{float(m['loss'])/np.log(2):.3f} bits/sym")
+        return st, m
+
+    state = mgr.run(state, wrapped, batch_fn, args.steps)
+
+# --- compress held-out data
+lanes, t = 8, 256
+test = jnp.asarray(token_stream(cfg.vocab_size, (lanes, t), seed=9), jnp.int32)
+raw_bytes = lanes * t  # symbols are bytes-scale (vocab 256)
+
+enc_h, _ = histogram_compress(np.asarray(test), cfg.vocab_size)
+cr_hist = raw_bytes / bitstream.compressed_size(np.asarray(enc_h.length))
+
+stats = lm_compress(state.params, cfg, test)
+cr_lm = raw_bytes / bitstream.compressed_size(np.asarray(stats.enc.length))
+print(f"\ncompression ratio: static-histogram {cr_hist:.3f} -> "
+      f"trained neural {cr_lm:.3f} "
+      f"(model entropy {float(stats.model_xent_bits):.2f} bits/sym)")
+
+dec, probes = lm_decompress(state.params, cfg, stats.enc, t)
+exact = np.array_equal(np.asarray(dec), np.asarray(test))
+print(f"decompression bit-exact: {exact}; "
+      f"avg CDF probes/symbol {float(probes):.2f} "
+      f"(model-top-k speculation)")
+assert exact and cr_lm > cr_hist
+print("OK: neural rANS beats the classical static table, bit-exactly.")

@@ -1,0 +1,107 @@
+"""HLO-text analysis: per-device collective bytes from a compiled module.
+
+cost_analysis() has no collective accounting, so §Roofline's third term is
+derived here: parse the (post-SPMD, per-partition) HLO and sum the operand
+bytes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute.  Operand shapes are resolved through a name->shape map
+built from the instruction stream.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# `%name = dtype[d0,d1]{layout} opcode(...)` (also tuple results)
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(?[^)=]*?\)?)\s+"
+    r"([\w\-]+)\(([^)]*)\)")
+_SHAPE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_COMPUTATION = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\([^)]*\)\s*->")
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Returns {op: {"count","bytes"}, "total_bytes", "body_bytes",
+    "entry_bytes"}.
+
+    ``body_bytes`` are collectives inside while-loop body computations —
+    the cost analysis counts those once per *body*, so the roofline layer
+    multiplies them by the loop-trip correction; ``entry_bytes`` execute
+    once per step.
+    """
+    shapes: dict[str, int] = {}
+    stats: dict[str, dict] = defaultdict(lambda: {"count": 0, "bytes": 0})
+    body_bytes = 0
+    entry_bytes = 0
+    in_loop_body = False
+    for line in hlo_text.splitlines():
+        cm = _COMPUTATION.match(line)
+        if cm and "{" in line:
+            cname = cm.group(2)
+            in_loop_body = (cm.group(1) is None
+                            and ("while" in cname or "body" in cname
+                                 or "scan" in cname or "cond" in cname))
+        m = _INSTR.match(line)
+        if not m:
+            continue
+        name, type_str, opcode, operands = m.groups()
+        nbytes = _shape_bytes(type_str)
+        shapes[name] = nbytes
+        for coll in COLLECTIVES:
+            if opcode.startswith(coll):
+                # operand bytes (the data a chip must move); fall back to
+                # the result size when operand shapes are unknown.
+                ops = 0
+                for ref in operands.split(","):
+                    ref = ref.strip().lstrip("%")
+                    ref = ref.split(" ")[0]
+                    ops += shapes.get(ref, 0)
+                nb = ops if ops else nbytes
+                stats[coll]["count"] += 1
+                stats[coll]["bytes"] += nb
+                if in_loop_body:
+                    body_bytes += nb
+                else:
+                    entry_bytes += nb
+                break
+    out = {k: dict(v) for k, v in stats.items()}
+    out["total_bytes"] = sum(v["bytes"] for v in stats.values())
+    out["body_bytes"] = body_bytes
+    out["entry_bytes"] = entry_bytes
+    return out
+
+
+def op_histogram(hlo_text: str, top: int = 15) -> list[tuple[str, int]]:
+    """Opcode frequency — remat/redundancy smell test (duplicate fusions)."""
+    counts: dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _INSTR.match(line)
+        if m:
+            counts[m.group(3)] += 1
+    return sorted(counts.items(), key=lambda kv: -kv[1])[:top]

@@ -1,0 +1,74 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline tables from the
+recorded dry-run JSONs.
+
+    PYTHONPATH=src python -m repro.analysis.report experiments/dryrun
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+
+def load(out_dir: str):
+    recs = []
+    for name in sorted(os.listdir(out_dir)):
+        if name.endswith(".json"):
+            recs.append(json.load(open(os.path.join(out_dir, name))))
+    return recs
+
+
+def dryrun_table(recs) -> str:
+    lines = ["| mesh | arch | shape | status | GB/chip | lower s | compile s |",
+             "|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r["status"] == "OK":
+            lines.append(
+                f"| {r['mesh']} | {r['arch']} | {r['shape']} | OK | "
+                f"{r['memory_analysis']['total_per_chip_gb']:.2f} | "
+                f"{r['lower_s']} | {r['compile_s']} |")
+        elif r["status"] == "SKIP":
+            lines.append(f"| {r['mesh']} | {r['arch']} | {r['shape']} | "
+                         f"SKIP | — | — | — |")
+        else:
+            lines.append(f"| {r['mesh']} | {r['arch']} | {r['shape']} | "
+                         f"**FAIL** | — | — | — |")
+    return "\n".join(lines)
+
+
+def roofline_table(recs, mesh="pod16x16") -> str:
+    lines = ["| arch | shape | compute s | memory s | coll s | dominant | "
+             "useful/HLO | peak frac | GB/chip | mult |",
+             "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r["status"] != "OK" or r["mesh"] != mesh:
+            continue
+        rf = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {rf['compute_s']:.2f} | "
+            f"{rf['memory_s']:.2f} | {rf['collective_s']:.3f} | "
+            f"**{rf['dominant']}** | {rf['useful_flops_ratio']:.2f} | "
+            f"{rf['peak_fraction']:.2%} | "
+            f"{r['memory_analysis']['total_per_chip_gb']:.2f} | "
+            f"{rf['scan_multiplier']:.0f} |")
+    return "\n".join(lines)
+
+
+def main():
+    out_dir = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun"
+    recs = load(out_dir)
+    ok = sum(r["status"] == "OK" for r in recs)
+    skip = sum(r["status"] == "SKIP" for r in recs)
+    fail = sum(r["status"] == "FAIL" for r in recs)
+    print(f"## cells: {ok} OK, {skip} SKIP, {fail} FAIL\n")
+    print("### Dry-run\n")
+    print(dryrun_table(recs))
+    print("\n### Roofline (single pod, 16x16)\n")
+    print(roofline_table(recs, "pod16x16"))
+    print("\n### Roofline (multi-pod, 2x16x16)\n")
+    print(roofline_table(recs, "pod2x16x16"))
+
+
+if __name__ == "__main__":
+    main()

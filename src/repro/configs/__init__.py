@@ -1,0 +1,5 @@
+from repro.configs.registry import (ARCH_IDS, SHAPES, ShapeSpec, get_config,
+                                    get_smoke_config, grid, shape_applicable)
+
+__all__ = ["ARCH_IDS", "SHAPES", "ShapeSpec", "get_config",
+           "get_smoke_config", "grid", "shape_applicable"]

@@ -1,0 +1,48 @@
+"""llama3-405b [dense]: 126L d=16384 128H (GQA kv=8) ff=53248 v=128256.
+
+Fitting notes (DESIGN.md §5): FSDP over the data axis + gradient
+accumulation (16 microbatches) + remat + sequence-chunked loss are on by
+default — this is what brings per-device memory inside a v5e HBM at 256/512
+chips.  [arXiv:2407.21783; unverified]
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3-405b",
+    family="dense",
+    n_layers=126,
+    d_model=16384,
+    n_heads=128,
+    n_kv_heads=8,
+    d_ff=53248,
+    vocab_size=128256,
+    head_dim=128,
+    rope_theta=500_000.0,
+    tp=16,
+    dtype="bfloat16",
+    grad_accum=8,               # microbatch 32 divides both dp extents
+    moment_dtype="bfloat16",    # 6.3 GB moments/chip instead of 12.7
+    grad_dtype="bfloat16",      # 3.2 GB grads/chip instead of 6.3
+    attn_impl="blockwise",
+    act_pspec=(("pod", "data"), "model", None),  # SP residuals
+)
+
+SMOKE = ModelConfig(
+    name="llama3-405b-smoke",
+    family="dense",
+    n_layers=3,
+    d_model=128,
+    n_heads=8,
+    n_kv_heads=2,
+    d_ff=256,
+    vocab_size=512,
+    head_dim=16,
+    tp=1,
+    dtype="float32",
+    remat=False,
+    grad_accum=2,
+    logits_chunk=8,
+    attn_impl="blockwise",
+    attn_block=8,
+)

@@ -1,0 +1,40 @@
+"""qwen1.5-4b [dense]: 40L d=2560 20H (GQA kv=20) ff=6912 v=151936, QKV bias.
+
+TP note: 20 q heads pad to 32 for tp=16 (zero-init extras); kv=20 is not
+divisible by 16 so kv projections replicate over model (+FSDP over data).
+[hf:Qwen/Qwen1.5-0.5B; hf]
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen1.5-4b",
+    family="dense",
+    n_layers=40,
+    d_model=2560,
+    n_heads=20,
+    n_kv_heads=20,
+    d_ff=6912,
+    vocab_size=151936,
+    head_dim=128,
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+    tp=16,
+    dtype="bfloat16",
+)
+
+SMOKE = ModelConfig(
+    name="qwen1.5-4b-smoke",
+    family="dense",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=128,
+    vocab_size=512,
+    head_dim=16,
+    qkv_bias=True,
+    tp=1,
+    dtype="float32",
+    remat=False,
+)

@@ -1,0 +1,28 @@
+"""ras-pimc: the paper's own compact image-probability model (PiMC-style).
+
+A small autoregressive context model over 8-bit pixel symbols (alphabet 256)
+that feeds the SPC + rANS fabric in the compression benchmarks — the "PC /
+compact NN" probability generator of Fig. 1/2.  Not part of the assigned
+dry-run grid; used by examples/compress_images.py and bench_ratio.py.
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="ras-pimc",
+    family="dense",
+    n_layers=4,
+    d_model=256,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=512,
+    vocab_size=256,
+    head_dim=64,
+    tie_embeddings=True,
+    tp=1,
+    dtype="float32",
+    remat=False,
+)
+
+SMOKE = CONFIG.with_(name="ras-pimc-smoke", n_layers=2, d_model=64,
+                     d_ff=128, head_dim=16)

@@ -1,0 +1,76 @@
+"""Architecture registry + assigned input shapes.
+
+Every assigned architecture registers its exact ``ModelConfig`` (and a
+reduced ``smoke`` variant for CPU tests) under its pool id; the shape table
+below is the assigned (arch x shape) grid for the dry-run.
+"""
+
+from __future__ import annotations
+
+import importlib
+from dataclasses import dataclass
+
+from repro.models.config import ModelConfig
+
+ARCH_IDS = (
+    "llama-3.2-vision-11b",
+    "qwen1.5-4b",
+    "qwen3-4b",
+    "qwen3-32b",
+    "llama3-405b",
+    "mixtral-8x22b",
+    "phi3.5-moe-42b-a6.6b",
+    "mamba2-130m",
+    "seamless-m4t-large-v2",
+    "recurrentgemma-2b",
+    # the paper's own compact image-probability model (extra, not in the grid)
+    "ras-pimc",
+)
+
+_MODULES = {a: a.replace("-", "_").replace(".", "_") for a in ARCH_IDS}
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+
+def get_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+    return mod.CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+    return mod.SMOKE
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    """(runnable, reason-if-skipped) per the assignment's shape rules."""
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return False, ("full quadratic attention at 524k context; "
+                       "sub-quadratic archs only (DESIGN.md "
+                       "§Arch-applicability)")
+    return True, ""
+
+
+def grid():
+    """All 40 assigned (arch, shape) cells with applicability."""
+    for arch in ARCH_IDS:
+        if arch == "ras-pimc":
+            continue
+        cfg = get_config(arch)
+        for sname, sh in SHAPES.items():
+            ok, why = shape_applicable(cfg, sh)
+            yield arch, sname, ok, why

@@ -1,0 +1,31 @@
+"""repro.core — the RAS paper's contribution as a composable JAX module.
+
+Public surface:
+  spc        — mixed-precision probability module (BF16 -> fixed point, T1)
+  coder      — multi-lane two-stage rANS encode/decode (T2, T4)
+  predictors — prediction-guided decoding anchors (T3)
+  bitstream  — per-lane container format
+  golden     — scalar numpy reference (the bit-exactness oracle)
+  python_baseline — the paper's Fig-4(a) software comparison target
+"""
+
+from repro.core import constants
+from repro.core.spc import (TableSet, build_tables, quantize_probs,
+                            tables_from_logits, tables_from_probs, decode_lut,
+                            store_bf16)
+from repro.core.coder import (EncState, DecState, EncodedLanes, encode,
+                              decode, encode_put, decode_get, encoder_init,
+                              encoder_flush, decoder_init, find_symbol,
+                              umulhi32, barrett_div, default_cap)
+from repro.core.predictors import (NeighborAverage, LastValue, ZeroPredictor,
+                                   Prediction, model_topk_candidates)
+
+__all__ = [
+    "constants", "TableSet", "build_tables", "quantize_probs",
+    "tables_from_logits", "tables_from_probs", "decode_lut", "store_bf16",
+    "EncState", "DecState", "EncodedLanes", "encode", "decode", "encode_put",
+    "decode_get", "encoder_init", "encoder_flush", "decoder_init",
+    "find_symbol", "umulhi32", "barrett_div", "default_cap",
+    "NeighborAverage", "LastValue", "ZeroPredictor", "Prediction",
+    "model_topk_candidates",
+]

@@ -1,0 +1,79 @@
+"""Multi-lane bitstream container (host-side pack/unpack).
+
+The RAS bitstream is per-lane independent (the fabric's lanes never share
+coder state — Sec. III), so the container is simply:
+
+    magic(4) | version(1) | prob_bits(1) | reserved(2)
+    | lanes(u32) | n_symbols(u32)
+    | per-lane length (u32 * lanes)
+    | concatenated lane payloads
+
+Pack/unpack are numpy-only; the device-side representation is
+``coder.EncodedLanes`` (padded (lanes, cap) uint8 + start/length).
+"""
+
+from __future__ import annotations
+
+import struct
+from typing import NamedTuple
+
+import numpy as np
+
+from repro.core import constants as C
+
+MAGIC = b"RAS1"
+_HEADER = struct.Struct("<4sBBHII")
+
+
+class Container(NamedTuple):
+    payload: bytes
+    prob_bits: int
+    lanes: int
+    n_symbols: int
+
+
+def pack(enc_buf: np.ndarray, start: np.ndarray, length: np.ndarray,
+         n_symbols: int, prob_bits: int = C.PROB_BITS) -> bytes:
+    """EncodedLanes arrays (host numpy) -> container bytes."""
+    enc_buf = np.asarray(enc_buf, np.uint8)
+    start = np.asarray(start, np.int64)
+    length = np.asarray(length, np.int64)
+    lanes = enc_buf.shape[0]
+    out = bytearray()
+    out += _HEADER.pack(MAGIC, 1, prob_bits, 0, lanes, n_symbols)
+    out += np.asarray(length, np.uint32).tobytes()
+    for i in range(lanes):
+        out += enc_buf[i, start[i]:start[i] + length[i]].tobytes()
+    return bytes(out)
+
+
+def unpack(blob: bytes) -> tuple[np.ndarray, np.ndarray, Container]:
+    """Container bytes -> ((lanes, cap) uint8 padded buf, start, meta).
+
+    The returned buffer is forward-readable from ``start`` per lane, i.e.
+    directly consumable by ``coder.decoder_init``.
+    """
+    magic, version, prob_bits, _, lanes, n_symbols = _HEADER.unpack_from(blob)
+    if magic != MAGIC:
+        raise ValueError("not a RAS container")
+    if version != 1:
+        raise ValueError(f"unsupported container version {version}")
+    off = _HEADER.size
+    length = np.frombuffer(blob, np.uint32, lanes, off).astype(np.int64)
+    off += 4 * lanes
+    cap = int(length.max()) if lanes else 0
+    buf = np.zeros((lanes, cap), np.uint8)
+    start = (cap - length).astype(np.int32)
+    for i in range(lanes):
+        n = int(length[i])
+        buf[i, cap - n:] = np.frombuffer(blob, np.uint8, n, off)
+        off += n
+    meta = Container(payload=b"", prob_bits=prob_bits, lanes=lanes,
+                     n_symbols=n_symbols)
+    return buf, start, meta
+
+
+def compressed_size(length: np.ndarray) -> int:
+    """Total container size in bytes for reporting compression ratios."""
+    lanes = len(length)
+    return _HEADER.size + 4 * lanes + int(np.sum(length))

@@ -1,0 +1,413 @@
+"""Vectorized multi-lane rANS coder (the RAS fabric, TPU-native).
+
+This is the paper's Fig. 2 middle block re-derived for a SIMD machine:
+
+  * **multi-lane fabric** (Sec. III): ``lanes`` independent rANS states are
+    updated in lockstep as vectors; each lane owns a private byte stream
+    (the RTL's per-lane MS/low-bit state memories become a ``(lanes, cap)``
+    buffer with per-lane write pointers);
+  * **two-stage update** (Sec. IV-B): the quotient path ``a1 = (s//f) << n``
+    and remainder path ``a2 = (s mod f) + C`` are independent vector ops —
+    we use the algebraically identical ryg form ``s + bias + q * cmpl``
+    (bias folds C and the f==1 corner, cmpl = 2**n - f) so the hot loop is
+    one mulhi, one shift, one madd;
+  * **unified div/mod datapath** (Sec. IV-A): division is Barrett
+    multiply-high against the SPC-precomputed reciprocal — exact for every
+    state < 2**31 (hypothesis-verified), no integer divide on the hot path;
+  * **byte-level renormalization**: the data-dependent while-loop is a fixed
+    ``MAX_RENORM_STEPS``(=2)-stage masked pipeline (provably sufficient,
+    see core/constants.py) — the TPU analogue of the paper's staged renorm;
+  * **prediction-guided decoding** (Sec. IV-C): window-gated binary search
+    with verified fallback, plus the beyond-paper candidate (model-top-k)
+    speculation; both leave the bitstream untouched and are instrumented to
+    reproduce Fig. 4(b)'s search-step counts.
+
+Bit-exactness contract: for identical tables, :func:`encode` produces byte
+streams identical to ``core.golden`` / ``core.python_baseline``, and
+:func:`decode` inverts them exactly.  Everything is jit/scan-compatible.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import constants as C
+from repro.core.spc import TableSet
+
+_U32 = jnp.uint32
+_U8 = jnp.uint8
+_I32 = jnp.int32
+_M16 = _U32(0xFFFF)
+
+
+# ---------------------------------------------------------------------------
+# exact 32x32 -> high-32 multiply from 16-bit limbs (no 64-bit types needed)
+# ---------------------------------------------------------------------------
+
+def umulhi32(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Exact high 32 bits of a 32x32 unsigned product, in pure uint32 ops.
+
+    TPU VPUs have no 64-bit integer path; the RTL has a real divider.  This
+    limb decomposition is the TPU-native replacement: all partial products
+    fit uint32 and every carry is accounted (proof in DESIGN.md §4).
+    """
+    a = a.astype(_U32)
+    b = b.astype(_U32)
+    al, ah = a & _M16, a >> 16
+    bl, bh = b & _M16, b >> 16
+    ll = al * bl
+    lh = al * bh
+    hl = ah * bl
+    hh = ah * bh
+    mid = (ll >> 16) + (lh & _M16) + (hl & _M16)
+    return hh + (lh >> 16) + (hl >> 16) + (mid >> 16)
+
+
+def barrett_div(s: jax.Array, rcp: jax.Array, rshift: jax.Array) -> jax.Array:
+    """floor(s / f) via the SPC reciprocal; exact for s < 2**31, f >= 2."""
+    return umulhi32(s, rcp) >> rshift
+
+
+# ---------------------------------------------------------------------------
+# per-lane table gathers (tables may be shared (K,) or per-lane (lanes, K))
+# ---------------------------------------------------------------------------
+
+class _SymEntry(NamedTuple):
+    freq: jax.Array
+    start: jax.Array   # C(x)
+    rcp: jax.Array
+    rshift: jax.Array
+    bias: jax.Array
+    cmpl: jax.Array
+    x_max: jax.Array
+
+
+def _gather(field: jax.Array, x: jax.Array) -> jax.Array:
+    if field.ndim == 1:
+        return field[x]
+    return jnp.take_along_axis(field, x[..., None].astype(_I32),
+                               axis=-1)[..., 0]
+
+
+def gather_symbol(tbl: TableSet, x: jax.Array) -> _SymEntry:
+    return _SymEntry(freq=_gather(tbl.freq, x),
+                     start=_gather(tbl.cdf[..., :-1], x),
+                     rcp=_gather(tbl.rcp, x),
+                     rshift=_gather(tbl.rshift, x),
+                     bias=_gather(tbl.bias, x),
+                     cmpl=_gather(tbl.cmpl, x),
+                     x_max=_gather(tbl.x_max, x))
+
+
+# ---------------------------------------------------------------------------
+# encoder
+# ---------------------------------------------------------------------------
+
+class EncState(NamedTuple):
+    """Multi-lane encoder state.  ``buf[lane, ptr[lane]:]`` is the stream
+    (written backward so the decoder reads forward — rANS is LIFO)."""
+
+    s: jax.Array     # (lanes,) uint32
+    buf: jax.Array   # (lanes, cap) uint8
+    ptr: jax.Array   # (lanes,) int32, next free slot - 1 is at ptr-1
+
+
+def encoder_init(lanes: int, cap: int) -> EncState:
+    return EncState(s=jnp.full((lanes,), C.RANS_L, _U32),
+                    buf=jnp.zeros((lanes, cap), _U8),
+                    ptr=jnp.full((lanes,), cap, _I32))
+
+
+def _emit_backward(buf, ptr, byte, cond):
+    """Masked one-byte backward emit; non-emitting lanes scatter out of
+    bounds and are dropped (the RTL's lane clock gating)."""
+    lanes, cap = buf.shape
+    lane_idx = jnp.arange(lanes)
+    widx = jnp.where(cond, ptr - 1, cap)
+    buf = buf.at[lane_idx, widx].set(byte, mode="drop")
+    return buf, ptr - cond.astype(_I32)
+
+
+def encode_put(st: EncState, x: jax.Array, tbl: TableSet) -> EncState:
+    """Push one symbol per lane (Eq. 1 + two-stage renorm)."""
+    e = gather_symbol(tbl, x)
+    s, buf, ptr = st.s, st.buf, st.ptr
+    # stage A: byte renorm (fixed 2-step masked pipeline)
+    for _ in range(C.MAX_RENORM_STEPS):
+        cond = s >= e.x_max
+        buf, ptr = _emit_backward(buf, ptr, (s & _U32(0xFF)).astype(_U8), cond)
+        s = jnp.where(cond, s >> C.RENORM_SHIFT, s)
+    # stage B: two-path update. a1 = q<<n and a2 = (s - q f) + C are fused
+    # into s + bias + q*cmpl (identical integer result, incl. f==1 corner).
+    q = barrett_div(s, e.rcp, e.rshift)
+    s = s + e.bias + q * e.cmpl
+    return EncState(s, buf, ptr)
+
+
+def encoder_flush(st: EncState) -> EncState:
+    """Write the 4-byte big-endian final state header (read first on decode)."""
+    s, buf, ptr = st.s, st.buf, st.ptr
+    true = jnp.ones_like(s, bool)
+    for shift in (0, 8, 16, 24):
+        buf, ptr = _emit_backward(
+            buf, ptr, ((s >> shift) & _U32(0xFF)).astype(_U8), true)
+    return EncState(s, buf, ptr)
+
+
+class EncodedLanes(NamedTuple):
+    buf: jax.Array      # (lanes, cap) uint8
+    start: jax.Array    # (lanes,) int32: stream begins at buf[lane, start:]
+    length: jax.Array   # (lanes,) int32 bytes per lane
+
+
+def default_cap(n_symbols: int) -> int:
+    # worst case 2 bytes/symbol + 4-byte state header, padded for alignment
+    return 2 * n_symbols + 8
+
+
+@functools.partial(jax.jit, static_argnames=("cap",))
+def encode_records(symbols: jax.Array, tbl: TableSet,
+                   cap: int | None = None) -> EncodedLanes:
+    """Scatter-free encode: §Perf hillclimb H2 (see EXPERIMENTS.md).
+
+    The scan carries only the lane states and *stacks* fixed-shape renorm
+    records as scan outputs (a sequential write, not a scatter); one
+    vectorized compaction pass builds the byte streams.  Bit-identical to
+    :func:`encode` (same emission order, same compaction as the Pallas
+    kernel path).
+    """
+    lanes, t_len = symbols.shape
+    cap = default_cap(t_len) if cap is None else cap
+    per_position = tbl.freq.ndim in (2, 3) and tbl.freq.shape[0] == t_len
+
+    def step(s, xs):
+        if per_position:
+            x_t, tbl_t = xs
+        else:
+            x_t, tbl_t = xs, tbl
+        e = gather_symbol(tbl_t, x_t)
+        recs = []
+        for _ in range(C.MAX_RENORM_STEPS):
+            cond = s >= e.x_max
+            recs.append(((s & _U32(0xFF)).astype(_U8), cond))
+            s = jnp.where(cond, s >> C.RENORM_SHIFT, s)
+        q = barrett_div(s, e.rcp, e.rshift)
+        s = s + e.bias + q * e.cmpl
+        (b0, c0), (b1, c1) = recs
+        return s, (b0, c0, b1, c1)
+
+    xs = (symbols.T, tbl) if per_position else symbols.T
+    s0 = jnp.full((lanes,), C.RANS_L, _U32)
+    s, (b0, c0, b1, c1) = jax.lax.scan(step, s0, xs, reverse=True)
+    # stack into kernel-compatible (T, 2, lanes) records and compact
+    bytes_rec = jnp.stack([b0, b1], axis=1)
+    mask_rec = jnp.stack([c0, c1], axis=1).astype(_U8)
+    from repro.kernels.ops import compact_records
+    return compact_records(bytes_rec, mask_rec, s, cap)
+
+
+@functools.partial(jax.jit, static_argnames=("cap",))
+def encode(symbols: jax.Array, tbl: TableSet,
+           cap: int | None = None) -> EncodedLanes:
+    """Encode ``(lanes, T)`` int symbols against shared tables ``(K,)``.
+
+    Per-position tables: pass a TableSet whose fields have a leading T dim,
+    matched to ``symbols.shape[1]`` (all lanes share position tables — the
+    neural-prior layout where the model emits one distribution per step).
+    """
+    lanes, t_len = symbols.shape
+    cap = default_cap(t_len) if cap is None else cap
+    # per-position tables: leading T dim, rows either shared (T, K) or
+    # per-lane (T, lanes, K) — the neural-prior layouts.
+    per_position = tbl.freq.ndim in (2, 3) and tbl.freq.shape[0] == t_len
+
+    def step(st, xs):
+        if per_position:
+            x_t, tbl_t = xs
+            return encode_put(st, x_t, tbl_t), None
+        return encode_put(st, xs, tbl), None
+
+    xs = (symbols.T, tbl) if per_position else symbols.T  # scan over T
+    st, _ = jax.lax.scan(step, encoder_init(lanes, cap), xs, reverse=True)
+    st = encoder_flush(st)
+    return EncodedLanes(buf=st.buf, start=st.ptr,
+                        length=jnp.asarray(cap, _I32) - st.ptr)
+
+
+# ---------------------------------------------------------------------------
+# decoder
+# ---------------------------------------------------------------------------
+
+class DecState(NamedTuple):
+    s: jax.Array    # (lanes,) uint32
+    ptr: jax.Array  # (lanes,) int32 read cursor into buf
+
+
+def decoder_init(enc: EncodedLanes) -> DecState:
+    lanes, cap = enc.buf.shape
+    lane_idx = jnp.arange(lanes)
+    s = jnp.zeros((lanes,), _U32)
+    ptr = enc.start
+    for _ in range(4):
+        byte = enc.buf[lane_idx, jnp.clip(ptr, 0, cap - 1)].astype(_U32)
+        s = (s << 8) | byte
+        ptr = ptr + 1
+    return DecState(s=s, ptr=ptr)
+
+
+def _bsearch(cdf: jax.Array, slot: jax.Array, lo: jax.Array, hi: jax.Array,
+             n_iter: int):
+    """Masked fixed-depth binary search: find x with cdf[x] <= slot < cdf[x+1].
+
+    Counts only the *active* iterations per lane — each one is a CDF probe,
+    the unit of Fig. 4(b).
+    """
+    steps = jnp.zeros_like(lo)
+    for _ in range(n_iter):
+        active = (hi - lo) > 1
+        mid = (lo + hi) >> 1
+        c_mid = _gather(cdf, mid)
+        # equality early-commit: cdf[mid] == slot proves symbol == mid
+        # (f >= 1 guarantees slot < cdf[mid+1]); the bracket collapses and
+        # later iterations stop counting — matches the paper's <log2|S|
+        # baseline averages.
+        eq = active & (c_mid == slot)
+        go_right = c_mid <= slot
+        lo = jnp.where(active & go_right, mid, lo)
+        hi = jnp.where(eq, mid + 1, jnp.where(active & ~go_right, mid, hi))
+        steps = steps + active.astype(_I32)
+    return lo, steps
+
+
+def _ceil_log2(k: int) -> int:
+    return max(1, (k - 1).bit_length())
+
+
+def find_symbol(tbl: TableSet, slot: jax.Array,
+                mu: jax.Array | None = None,
+                delta: int | jax.Array | None = None,
+                candidates: jax.Array | None = None):
+    """State-to-symbol inversion with optional speculation (Sec. IV-C).
+
+    Returns (symbol, probes) where ``probes`` counts CDF accesses per lane:
+    candidate verifies cost 1 each, window verify costs 1, every binary
+    step costs 1.  Fallback lanes pay the verify + the full search — the
+    paper's "bounded penalty" — so worst case equals the baseline.
+    """
+    cdf = tbl.cdf
+    k = tbl.alphabet_size
+    lanes = slot.shape[0]
+    lo0 = jnp.zeros((lanes,), _I32)
+    hi0 = jnp.full((lanes,), k, _I32)
+    probes = jnp.zeros((lanes,), _I32)
+    found = jnp.zeros((lanes,), bool)
+    x_spec = jnp.zeros((lanes,), _I32)
+
+    # --- candidate speculation (model-top-k trial symbols, O(1) verify each)
+    if candidates is not None:
+        for j in range(candidates.shape[-1]):
+            cand = jnp.clip(candidates[:, j].astype(_I32), 0, k - 1)
+            ok = ((_gather(cdf, cand) <= slot)
+                  & (slot < _gather(cdf, cand + 1)))
+            probes = probes + (~found).astype(_I32)
+            x_spec = jnp.where(~found & ok, cand, x_spec)
+            found = found | ok
+
+    # --- window-gated search (neighbour-average bracket [mu-d, mu+d])
+    if mu is not None:
+        d = jnp.asarray(delta, _I32)
+        lo_w = jnp.clip(mu.astype(_I32) - d, 0, k - 1)
+        hi_w = jnp.clip(mu.astype(_I32) + d + 1, 1, k)
+        hit = ((_gather(cdf, lo_w) <= slot) & (slot < _gather(cdf, hi_w))
+               & ~found)
+        probes = probes + (~found).astype(_I32)  # the window verify probe
+        lo0 = jnp.where(hit, lo_w, lo0)
+        hi0 = jnp.where(hit, hi_w, hi0)
+
+    # --- binary search over the (possibly narrowed) bracket
+    lo0 = jnp.where(found, x_spec, lo0)
+    hi0 = jnp.where(found, x_spec + 1, hi0)
+    x, steps = _bsearch(cdf, slot, lo0, hi0, _ceil_log2(k))
+    return x, probes + steps
+
+
+def decode_get(st: DecState, buf: jax.Array, tbl: TableSet,
+               prob_bits: int = C.PROB_BITS,
+               mu: jax.Array | None = None,
+               delta: int | jax.Array | None = None,
+               candidates: jax.Array | None = None,
+               lut: jax.Array | None = None):
+    """Pop one symbol per lane.  Returns (state', symbol, probes).
+
+    ``lut``: optional 2**prob_bits slot->symbol table (spc.decode_lut) —
+    beyond-paper O(1) inversion for *static* tables: one gather replaces
+    the whole CDF search (§Perf hillclimb H3).
+    """
+    lanes, cap = buf.shape
+    lane_idx = jnp.arange(lanes)
+    mask = _U32((1 << prob_bits) - 1)
+    s, ptr = st.s, st.ptr
+
+    slot = s & mask
+    if lut is not None:
+        x = lut[slot].astype(_I32)
+        probes = jnp.ones((lanes,), _I32)
+    else:
+        x, probes = find_symbol(tbl, slot, mu=mu, delta=delta,
+                                candidates=candidates)
+    f = _gather(tbl.freq, x)
+    start = _gather(tbl.cdf[..., :-1], x)
+    s = f * (s >> prob_bits) + slot - start
+    # fixed 2-step masked byte refill
+    for _ in range(C.MAX_RENORM_STEPS):
+        cond = s < _U32(C.RANS_L)
+        byte = buf[lane_idx, jnp.clip(ptr, 0, cap - 1)].astype(_U32)
+        s = jnp.where(cond, (s << C.RENORM_SHIFT) | byte, s)
+        ptr = ptr + cond.astype(_I32)
+    return DecState(s, ptr), x, probes
+
+
+@functools.partial(jax.jit, static_argnames=("n_symbols", "prob_bits",
+                                             "predictor", "use_lut"))
+def decode(enc: EncodedLanes, n_symbols: int, tbl: TableSet,
+           prob_bits: int = C.PROB_BITS, predictor=None,
+           use_lut: bool = False):
+    """Decode ``n_symbols`` per lane.  Returns (symbols (lanes,T), avg_probes).
+
+    ``predictor`` is one of core.predictors (hashable NamedTuple of static
+    config) driving prediction-guided decoding; None = baseline full binary
+    search.  Per-position tables: TableSet with leading T dim as in encode.
+    ``use_lut``: static tables only — O(1) slot->symbol inversion.
+    """
+    lanes = enc.buf.shape[0]
+    per_position = (tbl.freq.ndim in (2, 3)
+                    and tbl.freq.shape[0] == n_symbols)
+    ctx0 = predictor.init(lanes) if predictor is not None else jnp.zeros((lanes, 0), _I32)
+    lut = None
+    if use_lut:
+        assert not per_position, "LUT path requires a static table"
+        from repro.core.spc import decode_lut
+        lut = decode_lut(tbl, prob_bits)
+
+    def step(carry, tbl_t):
+        st, ctx = carry
+        t = tbl if not per_position else tbl_t
+        if predictor is not None:
+            pred = predictor.predict(ctx)
+            st, x, probes = decode_get(st, enc.buf, t, prob_bits,
+                                       mu=pred.mu, delta=pred.delta,
+                                       candidates=pred.candidates)
+            ctx = predictor.update(ctx, x)
+        else:
+            st, x, probes = decode_get(st, enc.buf, t, prob_bits, lut=lut)
+        return (st, ctx), (x, probes)
+
+    xs = tbl if per_position else None
+    (_, _), (sym_t, probes_t) = jax.lax.scan(
+        step, (decoder_init(enc), ctx0), xs, length=n_symbols)
+    avg_probes = jnp.mean(probes_t.astype(jnp.float32))
+    return sym_t.T, avg_probes

@@ -1,0 +1,113 @@
+"""Decoder-side speculation predictors (paper Sec. IV-C).
+
+A predictor proposes where in the alphabet the next symbol probably lives so
+the decoder can run a *window-gated* CDF search instead of a full binary
+search.  The paper's contract, which we keep exactly:
+
+  * the predictor emits an anchor ``mu`` and tolerance ``delta`` defining the
+    bracket [mu - delta, mu + delta];
+  * the decoder verifies the bracket against the CDF and falls back to the
+    full search on a miss — **bit-exactness is never at risk**, only the
+    number of CDF probes changes;
+  * "more expressive fixed-point predictors can be plugged in without
+    changing the interface".
+
+Two families are provided:
+
+  * :class:`NeighborAverage` — the paper's hardware-cheap image predictor
+    (Fig. 3: window = [avg-8, avg+8], dichotomous refinement), with
+    last-value / zero fallback, expressed over a running context of the
+    previously *decoded* symbols (available identically in HW and here).
+  * :class:`ModelTopK` — beyond-paper: when the probability generator is an
+    LM, its own distribution already ranks candidates; speculate on the
+    top-k token ids (each verified with a single O(1) CDF probe — the
+    "trial symbol" path of Fig. 2 — before the windowed/binary fallback).
+
+All predictors are pure functions over uint32/int32 arrays so they live
+inside ``lax.scan`` decode loops.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+_I32 = jnp.int32
+
+
+class Prediction(NamedTuple):
+    mu: jax.Array        # (lanes,) int32 anchor symbol
+    delta: jax.Array     # scalar or (lanes,) int32 half-window
+    candidates: jax.Array | None = None  # (lanes, k) int32 trial symbols or None
+
+
+class NeighborAverage(NamedTuple):
+    """Running-mean-of-last-``window`` predictor with last-value/zero fallback.
+
+    Matches the paper's Fig. 3 mechanism for raster-scan image symbols: the
+    anchor is the average of the most recent neighbourhood; ``delta`` is the
+    static tolerance (paper uses 8).
+    """
+
+    window: int = 4
+    delta: int = 8
+
+    def init(self, lanes: int) -> jax.Array:
+        # context: last `window` decoded symbols per lane; -1 = empty slot.
+        return jnp.full((lanes, self.window), -1, _I32)
+
+    def predict(self, ctx: jax.Array) -> Prediction:
+        valid = ctx >= 0
+        n_valid = jnp.sum(valid, axis=-1)
+        ssum = jnp.sum(jnp.where(valid, ctx, 0), axis=-1)
+        # average of valid neighbours; last-value when only one; zero when none
+        mu = jnp.where(n_valid > 0, ssum // jnp.maximum(n_valid, 1), 0)
+        return Prediction(mu=mu.astype(_I32), delta=jnp.int32(self.delta))
+
+    def update(self, ctx: jax.Array, decoded: jax.Array) -> jax.Array:
+        return jnp.concatenate(
+            [ctx[:, 1:], decoded.astype(_I32)[:, None]], axis=1)
+
+
+class LastValue(NamedTuple):
+    """Degenerate neighbour predictor: anchor = previous symbol."""
+
+    delta: int = 8
+
+    def init(self, lanes: int) -> jax.Array:
+        return jnp.zeros((lanes, 1), _I32)
+
+    def predict(self, ctx: jax.Array) -> Prediction:
+        return Prediction(mu=ctx[:, 0], delta=jnp.int32(self.delta))
+
+    def update(self, ctx: jax.Array, decoded: jax.Array) -> jax.Array:
+        return decoded.astype(_I32)[:, None]
+
+
+class ZeroPredictor(NamedTuple):
+    """Anchor 0 — the paper's "zero fallback"; useful for residual streams."""
+
+    delta: int = 8
+
+    def init(self, lanes: int) -> jax.Array:
+        return jnp.zeros((lanes, 0), _I32)
+
+    def predict(self, ctx: jax.Array) -> Prediction:
+        lanes = ctx.shape[0]
+        return Prediction(mu=jnp.zeros((lanes,), _I32),
+                          delta=jnp.int32(self.delta))
+
+    def update(self, ctx: jax.Array, decoded: jax.Array) -> jax.Array:
+        return ctx
+
+
+def model_topk_candidates(logits: jax.Array, k: int) -> jax.Array:
+    """(lanes, V) logits -> (lanes, k) trial symbols for candidate speculation.
+
+    The LM-compression analogue of the paper's trial-symbol path: the model's
+    own top-k tokens are verified against the CDF with O(1) probes each.
+    """
+    _, idx = jax.lax.top_k(logits, k)
+    return idx.astype(_I32)

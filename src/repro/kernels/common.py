@@ -1,0 +1,68 @@
+"""Shared helpers for the RAS Pallas kernels.
+
+TPU adaptation notes (DESIGN.md §2):
+
+  * Dynamic per-lane gathers/scatters (the RTL's per-lane FIFO pointers and
+    CDF probes) have no native TPU vector instruction.  We lower every such
+    access to a **one-hot contraction**: ``table[idx]`` becomes
+    ``sum(onehot(idx, K) * table)`` which the MXU/VPU executes as dense
+    vector math.  This is the canonical TPU pattern for data-dependent
+    addressing and is what the kernels below emit.
+  * The lane dimension is kept **last** and sized in multiples of 128 so a
+    lane group maps onto one VREG row; all per-lane quantities are
+    ``(lanes,)`` vectors.
+  * All integer math is uint32 with the same limb tricks as repro.core, so
+    the kernels are bit-exact replicas of the reference pipeline.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_U32 = jnp.uint32
+# numpy scalar (not a jnp array) so Pallas kernels see a literal, not a
+# captured device constant.
+_M16 = np.uint32(0xFFFF)
+
+
+def umulhi32(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Exact 32x32 -> high 32 bits via 16-bit limbs (kernel-local copy)."""
+    a = a.astype(_U32)
+    b = b.astype(_U32)
+    al, ah = a & _M16, a >> 16
+    bl, bh = b & _M16, b >> 16
+    ll = al * bl
+    lh = al * bh
+    hl = ah * bl
+    hh = ah * bh
+    mid = (ll >> 16) + (lh & _M16) + (hl & _M16)
+    return hh + (lh >> 16) + (hl >> 16) + (mid >> 16)
+
+
+def onehot_gather(table: jax.Array, idx: jax.Array) -> jax.Array:
+    """``table[idx]`` as a one-hot contraction.
+
+    table: (K,) uint32/int32; idx: (lanes,) int32  ->  (lanes,) table dtype.
+    Exactly one mask element is hot per lane, so a uint32 sum cannot wrap.
+    """
+    k = table.shape[-1]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (idx.shape[0], k), 1)
+    hot = iota == idx[:, None].astype(jnp.int32)
+    vals = jnp.where(hot, jnp.broadcast_to(table[None, :], hot.shape),
+                     jnp.zeros_like(table, shape=hot.shape))
+    return jnp.sum(vals, axis=1, dtype=table.dtype)
+
+
+def onehot_gather_rows(buf: jax.Array, row_idx: jax.Array) -> jax.Array:
+    """``buf[row_idx[lane], lane]`` per-lane row gather via one-hot.
+
+    buf: (cap, lanes); row_idx: (lanes,) int32 -> (lanes,) buf dtype.
+    Out-of-range rows gather 0 (used for exhausted stream reads).
+    """
+    cap, lanes = buf.shape
+    iota = jax.lax.broadcasted_iota(jnp.int32, (cap, lanes), 0)
+    hot = iota == row_idx[None, :].astype(jnp.int32)
+    vals = jnp.where(hot, buf, jnp.zeros_like(buf))
+    return jnp.sum(vals.astype(jnp.int32), axis=0).astype(buf.dtype)

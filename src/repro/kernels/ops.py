@@ -1,0 +1,97 @@
+"""jit'd public wrappers around the RAS Pallas kernels.
+
+``rans_encode`` = kernel (fixed-shape renorm records) + vectorized XLA
+stream compaction; the result is byte-identical to ``repro.core.coder.encode``
+and therefore to the scalar golden reference.  ``rans_decode`` wraps the
+prediction-guided decode kernel.  ``spc_quantize`` wraps the mass-correction
+kernel.  All default to ``interpret=True`` (this container is CPU-only; on a
+real TPU pass interpret=False).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import constants as C
+from repro.core.coder import EncodedLanes, default_cap
+from repro.core.spc import TableSet, build_tables
+from repro.kernels.rans_decode import rans_decode_lanes
+from repro.kernels.rans_encode import rans_encode_records
+
+_U32 = jnp.uint32
+_U8 = jnp.uint8
+_I32 = jnp.int32
+
+
+@functools.partial(jax.jit, static_argnames=("cap",))
+def compact_records(bytes_rec: jax.Array,   # (T, 2, lanes) uint8
+                    mask_rec: jax.Array,    # (T, 2, lanes) uint8 0/1
+                    states: jax.Array,      # (lanes,) uint32 final states
+                    cap: int) -> EncodedLanes:
+    """Fixed-shape renorm records -> right-aligned per-lane streams.
+
+    Emission order is t descending then renorm step ascending (exactly the
+    encoder's emit order); the stream stores emissions reversed, preceded by
+    the 4-byte big-endian state header.
+    """
+    t_len, r, lanes = bytes_rec.shape
+    seq_b = bytes_rec[::-1].reshape(t_len * r, lanes)
+    seq_m = mask_rec[::-1].reshape(t_len * r, lanes).astype(_I32)
+    n_emit = jnp.sum(seq_m, axis=0)                   # (lanes,)
+    pos = jnp.cumsum(seq_m, axis=0) - seq_m           # exclusive prefix
+    length = 4 + n_emit
+    start = cap - length
+    idx = start[None, :] + 4 + (n_emit[None, :] - 1 - pos)
+    idx = jnp.where(seq_m > 0, idx, cap)              # dropped when not emitted
+    lane_ix = jnp.broadcast_to(jnp.arange(lanes)[None, :], idx.shape)
+    buf = jnp.zeros((lanes, cap), _U8)
+    buf = buf.at[lane_ix.reshape(-1), idx.reshape(-1)].set(
+        seq_b.reshape(-1), mode="drop")
+    lane = jnp.arange(lanes)
+    for i, shift in enumerate((24, 16, 8, 0)):
+        buf = buf.at[lane, start + i].set(
+            ((states >> shift) & _U32(0xFF)).astype(_U8))
+    return EncodedLanes(buf=buf, start=start, length=length)
+
+
+def rans_encode(symbols: jax.Array, tbl: TableSet,
+                cap: int | None = None,
+                prob_bits: int = C.PROB_BITS,
+                lane_block: int = 128,
+                interpret: bool = True) -> EncodedLanes:
+    """Kernel-backed multi-lane encode (bit-exact vs. core/golden)."""
+    lanes, t_len = symbols.shape
+    cap = default_cap(t_len) if cap is None else cap
+    rec_b, rec_m, states = rans_encode_records(
+        symbols, tbl.freq, tbl.x_max, tbl.rcp, tbl.rshift, tbl.bias,
+        tbl.cmpl, prob_bits=prob_bits, lane_block=lane_block,
+        interpret=interpret)
+    return compact_records(rec_b, rec_m, states[0], cap)
+
+
+def rans_decode(enc: EncodedLanes, n_symbols: int, tbl: TableSet,
+                prob_bits: int = C.PROB_BITS,
+                use_pred: bool = False, window: int = 4, delta: int = 8,
+                lane_block: int = 128,
+                interpret: bool = True):
+    """Kernel-backed decode; returns (symbols (lanes,T), avg probes/symbol)."""
+    sym, probes = rans_decode_lanes(
+        enc.buf, enc.start, tbl.freq, tbl.cdf, t_len=n_symbols,
+        prob_bits=prob_bits, use_pred=use_pred, window=window, delta=delta,
+        lane_block=lane_block, interpret=interpret)
+    avg = jnp.mean(probes.astype(jnp.float32)) / n_symbols
+    return sym, avg
+
+
+def spc_quantize_tables(probs: jax.Array,
+                        prob_bits: int = C.PROB_BITS,
+                        batch_block: int = 8,
+                        interpret: bool = True) -> TableSet:
+    """Kernel-backed SPC: batched probs -> full TableSet."""
+    from repro.kernels.spc_quantize import spc_quantize
+    freq = spc_quantize(probs, prob_bits=prob_bits, batch_block=batch_block,
+                        interpret=interpret)
+    return build_tables(freq, prob_bits)

@@ -1,0 +1,114 @@
+"""Pallas TPU kernel: multi-lane rANS encode (paper Sec. IV-B, T2+T4).
+
+Kernel shape (hardware adaptation — see DESIGN.md §2):
+
+  * grid over **lane blocks** (lane dim last, multiples of 128 = VREG width);
+    each grid step owns ``lane_block`` independent rANS states held in
+    registers across a ``fori_loop`` over symbols (the RTL's "stationary
+    dataflow: state and symbols stay resident, probabilities stream");
+  * the data-dependent byte FIFO of the RTL is split out of the kernel: the
+    kernel emits **fixed-shape renorm records** ``bytes (T, 2, lanes)`` +
+    ``mask (T, 2, lanes)`` (at most MAX_RENORM_STEPS=2 bytes per symbol,
+    provable), and a vectorized XLA scatter in ops.py compacts them into
+    per-lane streams.  This keeps the kernel free of dynamic addressing —
+    pure VPU math at one symbol per "cycle" (loop step), exactly the
+    paper's two-stage pipeline;
+  * table lookups (freq/rcp/bias/cmpl/x_max by symbol) are one-hot
+    contractions against VMEM-resident SPC tables (shared by all lanes —
+    the paper's shared CDF/frequency tables behind the SPC).
+
+VMEM budget per grid step (BlockSpec):
+    symbols  T x Lb x 4   B
+    records  T x 2 x Lb x 2 B   (bytes + mask, uint8)
+    tables   6 x K x 4    B
+  For T=4096, Lb=128, K=256: ~4.2 MB — fits a single VMEM partition.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import constants as C
+from repro.kernels.common import onehot_gather, umulhi32
+
+_U32 = jnp.uint32
+_U8 = jnp.uint8
+
+
+def _encode_kernel(sym_ref, freq_ref, xmax_ref, rcp_ref, rshift_ref,
+                   bias_ref, cmpl_ref,
+                   bytes_ref, mask_ref, state_ref,
+                   *, t_len: int, prob_bits: int):
+    lanes = sym_ref.shape[1]
+    freq = freq_ref[0]
+    xmax = xmax_ref[0]
+    rcp = rcp_ref[0]
+    rshift = rshift_ref[0]
+    bias = bias_ref[0]
+    cmpl = cmpl_ref[0]
+
+    def body(i, s):
+        t = t_len - 1 - i  # rANS is LIFO: walk symbols in reverse
+        x = sym_ref[pl.dslice(t, 1), :][0]
+        e_xmax = onehot_gather(xmax, x)
+        # stage A: fixed 2-step byte renorm -> fixed-shape records
+        for j in range(C.MAX_RENORM_STEPS):
+            cond = s >= e_xmax
+            byte = (s & _U32(0xFF)).astype(_U8)
+            bytes_ref[pl.dslice(t, 1), pl.dslice(j, 1), :] = (
+                byte.reshape(1, 1, lanes))
+            mask_ref[pl.dslice(t, 1), pl.dslice(j, 1), :] = (
+                cond.astype(_U8).reshape(1, 1, lanes))
+            s = jnp.where(cond, s >> C.RENORM_SHIFT, s)
+        # stage B: two-path update (Barrett quotient || remainder+CDF)
+        q = umulhi32(s, onehot_gather(rcp, x)) >> onehot_gather(rshift, x)
+        s = s + onehot_gather(bias, x) + q * onehot_gather(cmpl, x)
+        return s
+
+    s0 = jnp.full((lanes,), C.RANS_L, _U32)
+    s = jax.lax.fori_loop(0, t_len, body, s0)
+    state_ref[0, :] = s
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("prob_bits", "lane_block", "interpret"))
+def rans_encode_records(symbols: jax.Array,   # (lanes, T) int32
+                        freq: jax.Array, x_max: jax.Array, rcp: jax.Array,
+                        rshift: jax.Array, bias: jax.Array, cmpl: jax.Array,
+                        prob_bits: int = C.PROB_BITS,
+                        lane_block: int = 128,
+                        interpret: bool = True):
+    """Run the encode kernel; returns (bytes (T,2,lanes), mask, states)."""
+    lanes, t_len = symbols.shape
+    if lanes % lane_block:
+        raise ValueError(f"lanes={lanes} not a multiple of {lane_block}")
+    k = freq.shape[-1]
+    grid = (lanes // lane_block,)
+
+    tbl_spec = pl.BlockSpec((1, k), lambda i: (0, 0))
+    out = pl.pallas_call(
+        functools.partial(_encode_kernel, t_len=t_len, prob_bits=prob_bits),
+        grid=grid,
+        in_specs=[pl.BlockSpec((t_len, lane_block), lambda i: (0, i))]
+        + [tbl_spec] * 6,
+        out_specs=[
+            pl.BlockSpec((t_len, C.MAX_RENORM_STEPS, lane_block),
+                         lambda i: (0, 0, i)),
+            pl.BlockSpec((t_len, C.MAX_RENORM_STEPS, lane_block),
+                         lambda i: (0, 0, i)),
+            pl.BlockSpec((1, lane_block), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t_len, C.MAX_RENORM_STEPS, lanes), _U8),
+            jax.ShapeDtypeStruct((t_len, C.MAX_RENORM_STEPS, lanes), _U8),
+            jax.ShapeDtypeStruct((1, lanes), _U32),
+        ],
+        interpret=interpret,
+    )(symbols.T.astype(jnp.int32), freq.reshape(1, k), x_max.reshape(1, k),
+      rcp.reshape(1, k), rshift.reshape(1, k), bias.reshape(1, k),
+      cmpl.reshape(1, k))
+    return out

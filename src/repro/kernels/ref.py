@@ -1,0 +1,36 @@
+"""Pure-jnp oracles for every Pallas kernel (the per-kernel ref.py contract).
+
+Each oracle is the *already-validated* core implementation (which is itself
+checked byte-for-byte against the scalar golden reference), so
+kernel == ref == golden is a single equivalence chain:
+
+    rans_encode  -> repro.core.coder.encode        (byte-identical streams)
+    rans_decode  -> repro.core.coder.decode        (identical symbols+probes)
+    spc_quantize -> repro.core.spc.quantize_probs  (identical frequencies)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import coder, constants as C, spc
+from repro.core.predictors import NeighborAverage
+
+
+def rans_encode_ref(symbols: jax.Array, tbl: spc.TableSet,
+                    cap: int | None = None) -> coder.EncodedLanes:
+    return coder.encode(symbols, tbl, cap=cap)
+
+
+def rans_decode_ref(enc: coder.EncodedLanes, n_symbols: int,
+                    tbl: spc.TableSet, use_pred: bool = False,
+                    window: int = 4, delta: int = 8):
+    pred = NeighborAverage(window=window, delta=delta) if use_pred else None
+    sym, avg = coder.decode(enc, n_symbols, tbl, predictor=pred)
+    return sym, avg
+
+
+def spc_quantize_ref(probs: jax.Array,
+                     prob_bits: int = C.PROB_BITS) -> jax.Array:
+    return spc.quantize_probs(probs, prob_bits)

@@ -1,0 +1,87 @@
+"""Pallas TPU kernel: SPC BF16 -> fixed-point quantization with mass
+correction (paper Sec. IV-A, T1).
+
+The host/XLA reference (core/spc.py) uses two stable argsorts for the
+largest-remainder correction.  Sorting is hostile to the TPU vector unit, so
+the kernel computes **pairwise stable ranks as dense K x K comparisons** —
+an MXU-shaped reformulation that produces *identical* integer frequencies:
+
+    rank_desc(i) = #{j : r_j > r_i} + #{j < i : r_j == r_i}
+    rank_asc(i)  = #{j : r_j < r_i} + #{j < i : r_j == r_i}
+
+and the negative-delta waterfill's exclusive prefix-capacity becomes a masked
+matrix-vector product  cum_excl(i) = sum_j [rank_asc(j) < rank_asc(i)] cap(j).
+
+VMEM: the (Bb, K, K) comparison cube dominates — Bb=8, K=256 -> 4 MB fp32.
+Tile the batch dim via the grid for larger alphabets.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import constants as C
+
+_U32 = jnp.uint32
+_I32 = jnp.int32
+
+
+def _spc_quantize_kernel(p_ref, freq_ref, *, prob_bits: int):
+    total = 1 << prob_bits
+    k = p_ref.shape[1]
+    # single BF16 -> fixed-point conversion (the paper's one-shot cast)
+    p = p_ref[...].astype(jnp.bfloat16).astype(jnp.float32)
+    p = jnp.where(jnp.isfinite(p) & (p > 0), p, 0.0)
+    scaled = p * jnp.float32(total)
+    f0 = jnp.maximum(1, jnp.round(scaled)).astype(_I32)       # (B, K)
+    delta = total - jnp.sum(f0, axis=1, keepdims=True)        # (B, 1)
+    resid = scaled - f0.astype(jnp.float32)
+
+    # pairwise stable ranks (dense comparisons instead of argsort)
+    ri = resid[:, :, None]                                    # (B, K, 1)
+    rj = resid[:, None, :]                                    # (B, 1, K)
+    jlt = jax.lax.broadcasted_iota(_I32, (1, k, k), 2) < \
+        jax.lax.broadcasted_iota(_I32, (1, k, k), 1)          # j < i
+    eq_tie = (rj == ri) & jlt
+    rank_desc = jnp.sum(((rj > ri) | eq_tie).astype(_I32), axis=2)
+    rank_asc = jnp.sum(((rj < ri) | eq_tie).astype(_I32), axis=2)
+
+    # delta > 0: base share + largest-remainder top-up
+    f_pos = f0 + delta // k + (rank_desc < delta % k).astype(_I32)
+
+    # delta < 0: waterfill smallest residual first, capacity f0 - 1
+    need = -delta                                             # (B, 1)
+    cap = f0 - 1                                              # (B, K)
+    before = (rank_asc[:, None, :] < rank_asc[:, :, None])    # (B, i, j)
+    cum_excl = jnp.sum(before.astype(jnp.float32)
+                       * cap[:, None, :].astype(jnp.float32),
+                       axis=2).astype(_I32)
+    take = jnp.clip(need - cum_excl, 0, cap)
+    f_neg = f0 - take
+
+    f = jnp.where(delta >= 0, f_pos, f_neg)
+    freq_ref[...] = f.astype(_U32)
+
+
+@functools.partial(jax.jit, static_argnames=("prob_bits", "batch_block",
+                                             "interpret"))
+def spc_quantize(probs: jax.Array,          # (B, K) float
+                 prob_bits: int = C.PROB_BITS,
+                 batch_block: int = 8,
+                 interpret: bool = True) -> jax.Array:
+    """Batched BF16->fixed-point quantization.  Returns (B, K) uint32 freqs."""
+    b, k = probs.shape
+    if b % batch_block:
+        raise ValueError(f"batch {b} not a multiple of {batch_block}")
+    return pl.pallas_call(
+        functools.partial(_spc_quantize_kernel, prob_bits=prob_bits),
+        grid=(b // batch_block,),
+        in_specs=[pl.BlockSpec((batch_block, k), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((batch_block, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, k), _U32),
+        interpret=interpret,
+    )(probs.astype(jnp.float32))

@@ -1,0 +1,161 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production mesh and record memory/cost/collective analysis.
+
+MUST be run as its own process (`python -m repro.launch.dryrun ...`) — the
+two lines above run before any jax import so the 512 placeholder devices
+exist before jax locks the device count.  Never set that flag globally:
+smoke tests and benchmarks see 1 device.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k --mesh pod
+  python -m repro.launch.dryrun --all --mesh both --out experiments/dryrun
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.analysis import roofline
+from repro.configs.registry import SHAPES, grid, shape_applicable, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import build_cell
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: str | None = None, verbose: bool = True,
+             fsdp: bool = True, overrides: dict | None = None,
+             tag: str = "") -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    chips = mesh.devices.size
+    shape = SHAPES[shape_name]
+    cfg = get_config(arch)
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+               "status": "SKIP", "reason": why}
+        _emit(rec, out_dir, verbose)
+        return rec
+
+    t0 = time.time()
+    try:
+        fn, args, in_sh, out_sh, donate, cfg = build_cell(
+            arch, shape_name, mesh, fsdp=fsdp, overrides=overrides)
+        with jax.set_mesh(mesh):
+            jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                             donate_argnums=donate)
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            mem = compiled.memory_analysis()
+            rep = roofline.analyze(compiled, cfg, shape, arch, mesh_name,
+                                   chips)
+        rec = {
+            "arch": arch, "shape": shape_name, "mesh": mesh_name,
+            "status": "OK", "tag": tag,
+            "fsdp": fsdp, "overrides": overrides,
+            "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+            "memory_analysis": {
+                "argument_bytes": int(mem.argument_size_in_bytes),
+                "output_bytes": int(mem.output_size_in_bytes),
+                "temp_bytes": int(mem.temp_size_in_bytes),
+                "alias_bytes": int(mem.alias_size_in_bytes),
+                "total_per_chip_gb": round(
+                    (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                     + mem.temp_size_in_bytes
+                     - mem.alias_size_in_bytes) / 2**30, 3),
+            },
+            "roofline": json.loads(rep.to_json()),
+        }
+    except Exception as e:  # noqa: BLE001 — record the failure, keep going
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+               "status": "FAIL", "error": f"{type(e).__name__}: {e}",
+               "trace": traceback.format_exc()[-2000:]}
+    _emit(rec, out_dir, verbose)
+    return rec
+
+
+def _emit(rec: dict, out_dir: str | None, verbose: bool):
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        suffix = f"__{rec['tag']}" if rec.get("tag") else ""
+        path = os.path.join(
+            out_dir,
+            f"{rec['mesh']}__{rec['arch']}__{rec['shape']}{suffix}.json")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+    if verbose:
+        if rec["status"] == "OK":
+            r = rec["roofline"]
+            print(f"[OK]   {rec['mesh']:12s} {rec['arch']:24s} "
+                  f"{rec['shape']:12s} mem={rec['memory_analysis']['total_per_chip_gb']:7.2f}GB "
+                  f"compute={r['compute_s']*1e3:8.2f}ms "
+                  f"mem={r['memory_s']*1e3:8.2f}ms "
+                  f"coll={r['collective_s']*1e3:8.2f}ms "
+                  f"dom={r['dominant']}", flush=True)
+        elif rec["status"] == "SKIP":
+            print(f"[SKIP] {rec['mesh']:12s} {rec['arch']:24s} "
+                  f"{rec['shape']:12s} ({rec['reason'][:60]})", flush=True)
+        else:
+            print(f"[FAIL] {rec['mesh']:12s} {rec['arch']:24s} "
+                  f"{rec['shape']:12s} {rec['error'][:200]}", flush=True)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["pod", "multipod", "both"],
+                    default="pod")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--no-fsdp", action="store_true",
+                    help="replicate weights over data (inference mode)")
+    ap.add_argument("--set", action="append", default=[],
+                    help="config override key=value (hillclimb knobs)")
+    ap.add_argument("--tag", default="", help="suffix for output json")
+    args = ap.parse_args(argv)
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        for cast in (int, float):
+            try:
+                v = cast(v)
+                break
+            except ValueError:
+                continue
+        if v in ("true", "false"):
+            v = v == "true"
+        overrides[k] = v
+
+    meshes = {"pod": [False], "multipod": [True],
+              "both": [False, True]}[args.mesh]
+    fails = 0
+    if args.all:
+        for multi in meshes:
+            for arch, shape_name, ok, why in grid():
+                rec = run_cell(arch, shape_name, multi, args.out,
+                               fsdp=not args.no_fsdp,
+                               overrides=overrides or None, tag=args.tag)
+                fails += rec["status"] == "FAIL"
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        for multi in meshes:
+            rec = run_cell(args.arch, args.shape, multi, args.out,
+                           fsdp=not args.no_fsdp,
+                           overrides=overrides or None, tag=args.tag)
+            fails += rec["status"] == "FAIL"
+    sys.exit(1 if fails else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Production mesh builders.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — required for the dry-run's forced-512-device
+initialization order.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 chips per pod; 2 pods when multi_pod (512 chips total)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh_for(devices: int, model_parallel: int = 16):
+    """Elastic helper: largest (data, model) mesh for a survivor set."""
+    model = min(model_parallel, devices)
+    while devices % model:
+        model -= 1
+    return jax.make_mesh((devices // model, model), ("data", "model"))

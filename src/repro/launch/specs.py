@@ -1,0 +1,167 @@
+"""Dry-run cell builder: (arch x shape x mesh) -> (step_fn, abstract args,
+shardings).  Nothing here allocates device memory — weights, optimizer
+state, caches and batches are all ShapeDtypeStructs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.tree_util import DictKey, tree_map_with_path
+
+from repro.configs.registry import SHAPES, ShapeSpec, get_config
+from repro.models.config import ModelConfig
+from repro.models.layers import logits as logits_fn
+from repro.models.param import abstract_params
+from repro.models.transformer import (decode_step, forward, init_cache,
+                                      make_model_defs)
+from repro.parallel.sharding import batch_pspec, param_shardings
+from repro.train.train_loop import init_train_state, make_train_step
+
+
+def tune_for_shape(cfg: ModelConfig, shape: ShapeSpec) -> ModelConfig:
+    """Shape-dependent framework defaults (fit requirements, not tuning)."""
+    if shape.kind == "prefill" and shape.seq_len >= 32_768 \
+            and cfg.attn_impl == "naive":
+        # a naive (B,H,32k,32k) score tensor cannot exist on any chip
+        cfg = cfg.with_(attn_impl="blockwise", attn_block=2048)
+    if shape.kind != "train":
+        cfg = cfg.with_(grad_accum=1)
+    elif cfg.grad_accum < 8:
+        # fit requirement, not tuning: the remat stash scales with the local
+        # microbatch; accum=8 keeps every arch's train_4k inside v5e HBM
+        # (qwen3-4b: 100 GB -> 13 GB/chip).  Microbatch 32 divides both the
+        # 16-way and 32-way DP extents.
+        cfg = cfg.with_(grad_accum=8)
+    return cfg
+
+
+def _dp_axes_for(mesh, global_batch: int):
+    return batch_pspec(mesh, global_batch, ndim=1)[0]
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec, mesh):
+    """Training batch ShapeDtypeStructs + shardings."""
+    b, s = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    specs = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+             "labels": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    if cfg.family == "vlm":
+        specs["memory"] = jax.ShapeDtypeStruct(
+            (b, cfg.memory_tokens, cfg.d_model), dt)
+    if cfg.is_encdec:
+        specs["enc_inputs"] = jax.ShapeDtypeStruct(
+            (b, cfg.memory_tokens, cfg.d_model), dt)
+    shard = jax.tree.map(
+        lambda sds: NamedSharding(
+            mesh, batch_pspec(mesh, shape.global_batch, sds.ndim)), specs)
+    return specs, shard
+
+
+def cache_shardings(cfg: ModelConfig, mesh, cache_abs, global_batch: int):
+    """Path-aware cache shardings: batch over DP; KV heads over model when
+    divisible, else the *sequence* dim of KV caches shards over model
+    (decode context parallelism — the llama3-405b 32k-cache fit lever);
+    SSM/RG-LRU state shards its feature dim over model."""
+    model_n = mesh.shape["model"]
+    b_axes = _dp_axes_for(mesh, global_batch)
+
+    def spec(path, leaf):
+        keys = [k.key for k in path if isinstance(k, DictKey)]
+        dims: list = [None] * leaf.ndim
+        if leaf.ndim >= 2:
+            dims[1] = b_axes           # (layer_stack, batch, ...)
+        if "kv" in keys and leaf.ndim == 5:
+            if cfg.kv_sharded:
+                dims[3] = "model"
+            elif leaf.shape[2] % model_n == 0:
+                dims[2] = "model"      # context-parallel cache
+        elif keys and keys[-1] in ("h", "conv"):
+            if leaf.shape[-1] % model_n == 0:
+                dims[-1] = "model"
+        return NamedSharding(mesh, P(*dims))
+
+    return tree_map_with_path(spec, cache_abs)
+
+
+def build_cell(arch: str, shape_name: str, mesh, *, fsdp: bool = True,
+               overrides: dict | None = None):
+    """Returns (fn, args, in_shardings, out_shardings, donate, cfg)."""
+    shape = SHAPES[shape_name]
+    cfg = tune_for_shape(get_config(arch), shape)
+    if overrides:
+        cfg = cfg.with_(**overrides)
+    multi_pod = "pod" in mesh.axis_names
+    if cfg.act_pspec is not None and not multi_pod:
+        # drop the pod axis from activation constraints on the single pod
+        fixed = tuple(tuple(a for a in ax if a != "pod") if
+                      isinstance(ax, tuple) else ax for ax in cfg.act_pspec)
+        cfg = cfg.with_(act_pspec=fixed)
+    if cfg.act_pspec is None and shape.kind != "decode":
+        # default residual-stream constraint: batch over the DP axes
+        b_axes = batch_pspec(mesh, shape.global_batch, 1)[0]
+        cfg = cfg.with_(act_pspec=(b_axes, None, None))
+
+    defs = make_model_defs(cfg)
+    p_abs = abstract_params(defs, jnp.dtype(cfg.dtype))
+    p_shard = param_shardings(cfg, mesh, defs, fsdp=fsdp)
+    b, s = shape.global_batch, shape.seq_len
+
+    if shape.kind == "train":
+        state_abs = jax.eval_shape(
+            functools.partial(init_train_state,
+                              moment_dtype=jnp.dtype(cfg.moment_dtype)),
+            p_abs)
+        rep = NamedSharding(mesh, P())
+        state_shard = type(state_abs)(
+            params=p_shard,
+            opt=type(state_abs.opt)(step=rep, m=p_shard, v=p_shard),
+            step=rep, error=None)
+        batch_abs, batch_shard = batch_specs(cfg, shape, mesh)
+        fn = make_train_step(cfg)
+        return (fn, (state_abs, batch_abs), (state_shard, batch_shard),
+                (state_shard, None), (0,), cfg)
+
+    if shape.kind == "prefill":
+        batch_abs, batch_shard = batch_specs(cfg, shape, mesh)
+        batch_abs.pop("labels")
+        batch_shard.pop("labels")
+
+        def prefill_step(params, batch):
+            """Compression direction: all per-position distributions."""
+            x, _ = forward(params, batch["tokens"], cfg,
+                           memory=batch.get("memory"),
+                           enc_inputs=batch.get("enc_inputs"))
+            return logits_fn(params["tok"], x, cfg).astype(jnp.bfloat16)
+
+        return (prefill_step, (p_abs, batch_abs), (p_shard, batch_shard),
+                None, (), cfg)
+
+    # decode: one token against a seq_len cache (serve_step)
+    cache_abs = jax.eval_shape(
+        functools.partial(init_cache, cfg, b, s))
+    cache_shard = cache_shardings(cfg, mesh, cache_abs, b)
+    tok_abs = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    tok_shard = NamedSharding(mesh, batch_pspec(mesh, b, 2))
+    pos_abs = jax.ShapeDtypeStruct((), jnp.int32)
+    pos_shard = NamedSharding(mesh, P())
+    args = [p_abs, cache_abs, tok_abs, pos_abs]
+    in_sh = [p_shard, cache_shard, tok_shard, pos_shard]
+    lg_shard = NamedSharding(mesh, P(batch_pspec(mesh, b, 1)[0], "model"))
+    needs_mem = cfg.family == "vlm" or cfg.is_encdec
+    if needs_mem:
+        args.append(jax.ShapeDtypeStruct(
+            (b, cfg.memory_tokens, cfg.d_model), jnp.dtype(cfg.dtype)))
+        in_sh.append(NamedSharding(mesh, batch_pspec(mesh, b, 3)))
+
+        def serve_step(params, cache, token, pos, memory):
+            return decode_step(params, cache, token, pos, cfg, memory=memory)
+    else:
+        def serve_step(params, cache, token, pos):
+            return decode_step(params, cache, token, pos, cfg)
+
+    return (serve_step, tuple(args), tuple(in_sh),
+            (lg_shard, cache_shard), (1,), cfg)

@@ -1,0 +1,64 @@
+"""Training launcher.
+
+Two modes:
+  * real run (CPU-scale):  python -m repro.launch.train --arch ras-pimc
+        --steps 200 --batch 8 --seq 128 --ckpt /tmp/ckpt
+    runs the full fault-tolerant loop (RestartManager + StragglerMonitor +
+    periodic checkpoints) on the smoke config of the chosen arch.
+  * production lowering is exercised by launch/dryrun.py (same step fn).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.data.pipeline import train_batch
+from repro.models import init_model
+from repro.train.fault_tolerance import RestartManager
+from repro.train.train_loop import init_train_state, make_train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="ras-pimc")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt", default="/tmp/repro_ckpt")
+    ap.add_argument("--save-every", type=int, default=50)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch).with_(grad_accum=1)
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    state = init_train_state(params)
+    step_fn = jax.jit(make_train_step(cfg, base_lr=args.lr))
+
+    last_loss = [None]
+
+    def wrapped(state, batch):
+        state, metrics = step_fn(state, batch)
+        last_loss[0] = float(metrics["loss"])
+        if int(state.step) % 10 == 0:
+            print(f"step {int(state.step):5d} loss {last_loss[0]:.4f} "
+                  f"lr {float(metrics['lr']):.2e}", flush=True)
+        return state, metrics
+
+    def batch_fn(i):
+        return jax.tree.map(jnp.asarray,
+                            train_batch(cfg, args.batch, args.seq, step=i))
+
+    mgr = RestartManager(args.ckpt, save_every=args.save_every)
+    state = mgr.run(state, wrapped, batch_fn, args.steps)
+    print(f"done: {int(state.step)} steps, final loss {last_loss[0]:.4f}, "
+          f"{len(mgr.monitor.slow_steps)} straggler steps, "
+          f"{mgr.failures} restarts")
+    return state
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+from repro.models.config import ModelConfig
+from repro.models.transformer import (abstract_model, decode_step, forward,
+                                      init_cache, init_model, loss_fn,
+                                      make_model_defs)
+
+__all__ = ["ModelConfig", "abstract_model", "decode_step", "forward",
+           "init_cache", "init_model", "loss_fn", "make_model_defs"]

@@ -1,0 +1,249 @@
+"""GQA attention: self/cross, naive & blockwise(flash-style), KV/ring caches.
+
+TP mapping (DESIGN.md §5): q/out heads are padded to a multiple of ``cfg.tp``
+and sharded over the model axis; kv projections shard only when
+``n_kv_heads % tp == 0`` (else they replicate over model and FSDP-shard over
+data).  Padded q heads are zero-initialized in both wq and wo so the function
+equals the true-head architecture at init.
+
+Two attention schedules:
+  * ``naive``     — full (B,H,Sq,Skv) score tensor; baseline for roofline.
+  * ``blockwise`` — lax.scan over KV chunks with online softmax (flash-style
+    in pure XLA); the memory-roofline lever for the 32k shapes.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_rope, rmsnorm
+from repro.models.param import ParamDef
+
+_NEG = -1e30
+
+
+def kv_head_map(cfg: ModelConfig) -> np.ndarray:
+    """Static q-head -> kv-head index map (GQA groups; padded heads -> 0)."""
+    h, kv, hp = cfg.n_heads, cfg.n_kv_heads, cfg.n_heads_padded
+    g = h // kv
+    return np.asarray([min(i // g, kv - 1) for i in range(h)]
+                      + [0] * (hp - h), np.int32)
+
+
+def make_attn_defs(cfg: ModelConfig, cross: bool = False) -> dict:
+    d, dh = cfg.d_model, cfg.head_dim_
+    hp, kv = cfg.n_heads_padded, cfg.n_kv_heads
+    kv_axis = "kv_heads" if cfg.kv_sharded else "kv_heads_repl"
+    out = {
+        "wq": ParamDef((d, hp, dh), ("embed", "heads", None),
+                       true_sizes=(None, cfg.n_heads, None)),
+        "wk": ParamDef((d, kv, dh), ("embed", kv_axis, None)),
+        "wv": ParamDef((d, kv, dh), ("embed", kv_axis, None)),
+        "wo": ParamDef((hp, dh, d), ("heads", None, "embed"),
+                       true_sizes=(cfg.n_heads, None, None)),
+    }
+    if cfg.qkv_bias:
+        out["bq"] = ParamDef((hp, dh), ("heads", None), init="zeros")
+        out["bk"] = ParamDef((kv, dh), (kv_axis, None), init="zeros")
+        out["bv"] = ParamDef((kv, dh), (kv_axis, None), init="zeros")
+    if cfg.qk_norm:
+        out["q_norm"] = ParamDef((dh,), (None,), init="ones")
+        out["k_norm"] = ParamDef((dh,), (None,), init="ones")
+    return out
+
+
+def _project_qkv(p: dict, x: jax.Array, cfg: ModelConfig,
+                 mem: jax.Array | None = None):
+    """x -> q (B,S,Hp,Dh); kv source is ``mem`` for cross attention."""
+    src = x if mem is None else mem
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", src, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", src, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    if cfg.qk_norm:
+        q = rmsnorm({"scale": p["q_norm"]}, q, cfg.norm_eps)
+        k = rmsnorm({"scale": p["k_norm"]}, k, cfg.norm_eps)
+    return q, k, v
+
+
+def _expand_kv(k: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """(B,S,KV,Dh) -> (B,S,Hp,Dh) via the static GQA head map."""
+    if k.shape[2] == cfg.n_heads_padded:
+        return k
+    return jnp.take(k, jnp.asarray(kv_head_map(cfg)), axis=2)
+
+
+def _mask(q_idx, kv_idx, causal: bool, window: int):
+    ok = jnp.ones(jnp.broadcast_shapes(q_idx.shape, kv_idx.shape), bool)
+    if causal:
+        ok &= kv_idx <= q_idx
+    if window:
+        ok &= kv_idx > q_idx - window
+    return ok
+
+
+def _naive_attn(q, k, v, causal, window, q_offset=0):
+    b, sq, h, dh = q.shape
+    skv = k.shape[1]
+    scale = 1.0 / math.sqrt(dh)
+    # bf16 operands, f32 accumulation (MXU-native); no f32 copies of q/k —
+    # §Perf memory-term lever (bit-identical: bf16 products are exact in f32)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    q_idx = (jnp.arange(sq) + q_offset)[:, None]
+    kv_idx = jnp.arange(skv)[None, :]
+    s = jnp.where(_mask(q_idx, kv_idx, causal, window)[None, None], s, _NEG)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v)
+
+
+def _blockwise_attn(q, k, v, causal, window, block, q_offset=0):
+    """Flash-style online-softmax scan over KV chunks (pure XLA)."""
+    b, sq, h, dh = q.shape
+    skv = k.shape[1]
+    blk = min(block, skv)
+    n_chunks = math.ceil(skv / blk)
+    pad = n_chunks * blk - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(b, n_chunks, blk, h, dh).swapaxes(0, 1)
+    vc = v.reshape(b, n_chunks, blk, h, dh).swapaxes(0, 1)
+    scale = 1.0 / math.sqrt(dh)
+    q_idx = (jnp.arange(sq) + q_offset)[:, None]
+
+    def step(carry, xs):
+        m, l, acc = carry
+        j, kj, vj = xs
+        kv_idx = j * blk + jnp.arange(blk)[None, :]
+        ok = _mask(q_idx, kv_idx, causal, window)          # (Sq, blk)
+        ok = ok & (kv_idx < skv)                           # kv padding
+        # bf16-in / f32-accumulate: no materialized f32 q/k/v copies
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, kj,
+                       preferred_element_type=jnp.float32) * scale
+        s = jnp.where(ok[None, None], s, _NEG)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        corr = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None]) * ok[None, None]
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = (acc * corr[..., None]
+               + jnp.einsum("bhqk,bkhd->bhqd", p.astype(q.dtype), vj,
+                            preferred_element_type=jnp.float32))
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, h, sq), _NEG, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    a0 = jnp.zeros((b, h, sq, dh), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0), (jnp.arange(n_chunks), kc, vc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.swapaxes(1, 2).astype(q.dtype)
+
+
+def attn_forward(p: dict, x: jax.Array, cfg: ModelConfig,
+                 mem: jax.Array | None = None,
+                 window: int | None = None,
+                 positions: jax.Array | None = None) -> jax.Array:
+    """Full-sequence attention (training / prefill).  Cross if mem given."""
+    cross = mem is not None
+    q, k, v = _project_qkv(p, x, cfg, mem)
+    if not cross:
+        pos = (positions if positions is not None
+               else jnp.arange(x.shape[1])[None, :])
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    k = _expand_kv(k, cfg)
+    v = _expand_kv(v, cfg)
+    win = cfg.sliding_window if window is None else window
+    causal = not cross
+    if cfg.attn_impl == "blockwise":
+        out = _blockwise_attn(q, k, v, causal, win, cfg.attn_block)
+    else:
+        out = _naive_attn(q, k, v, causal, win)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# KV cache (decode) — linear or ring-buffer (local attention)
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
+                  dtype) -> dict:
+    kv, dh = cfg.n_kv_heads, cfg.head_dim_
+    return {"k": jnp.zeros((batch, max_len, kv, dh), dtype),
+            "v": jnp.zeros((batch, max_len, kv, dh), dtype)}
+
+
+def attn_decode(p: dict, x1: jax.Array, cache: dict, pos: jax.Array,
+                cfg: ModelConfig, mem: jax.Array | None = None,
+                window: int | None = None):
+    """One-token decode.  x1: (B,1,D); pos: scalar int32 absolute position.
+
+    With ``window`` (or cfg.sliding_window/local_window) and a cache sized
+    to the window, indexing is a ring buffer — O(window) memory at 500k+
+    context.  Cross-attention decodes against full ``mem`` (no cache).
+    """
+    if mem is not None:
+        q, k, v = _project_qkv(p, x1, cfg, mem)
+        k = _expand_kv(k, cfg)
+        v = _expand_kv(v, cfg)
+        out = _naive_attn(q, k, v, causal=False, window=0)
+        return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), cache
+
+    q, k, v = _project_qkv(p, x1, cfg, None)
+    posb = jnp.asarray(pos)[None]
+    q = apply_rope(q, posb[None, :], cfg.rope_theta)
+    k = apply_rope(k, posb[None, :], cfg.rope_theta)
+    cache_len = cache["k"].shape[1]
+    slot = pos % cache_len
+    # §Perf (llama3-405b decode_32k): masked ring write instead of
+    # dynamic_update_slice — elementwise select keeps the context-parallel
+    # cache sharded (DUS at a traced offset forced SPMD to materialize the
+    # full cache per chip: 2x cache temp + reshard).
+    hot = (jnp.arange(cache_len) == slot)[None, :, None, None]
+    ck = jnp.where(hot, k.astype(cache["k"].dtype), cache["k"])
+    cv = jnp.where(hot, v.astype(cache["v"].dtype), cache["v"])
+
+    scale = 1.0 / math.sqrt(cfg.head_dim_)
+    hp, kv = cfg.n_heads_padded, cfg.n_kv_heads
+    grouped = kv > 0 and hp % kv == 0
+    if grouped:
+        # §Perf: grouped GQA decode — contract q-head groups against the kv
+        # cache directly, never materializing the (S, H) expanded cache
+        # (16x the cache bytes for kv=8, H=128).
+        g = hp // kv
+        qg = q.reshape(q.shape[0], 1, kv, g, q.shape[-1])
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, ck,
+                       preferred_element_type=jnp.float32) * scale
+    else:
+        kf = _expand_kv(ck, cfg)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, kf,
+                       preferred_element_type=jnp.float32) * scale
+    idx = jnp.arange(cache_len)
+    # Unified ring semantics (covers the linear cache too, where slot == pos):
+    # age of the entry in each slot; unwritten slots have age > pos.
+    age = (slot - idx) % cache_len
+    valid = age <= pos
+    win = window if window is not None else (cfg.local_window
+                                             or cfg.sliding_window)
+    if win:
+        valid &= age < win
+    vshape = (1,) * (s.ndim - 1) + (cache_len,)
+    s = jnp.where(valid.reshape(vshape), s, _NEG)
+    prob = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    if grouped:
+        out = jnp.einsum("bhgqk,bkhd->bqhgd", prob, cv)
+        out = out.reshape(out.shape[0], 1, hp, out.shape[-1])
+    else:
+        vf = _expand_kv(cv, cfg)
+        out = jnp.einsum("bhqk,bkhd->bqhd", prob, vf)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, {"k": ck, "v": cv}

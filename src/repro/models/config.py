@@ -1,0 +1,169 @@
+"""ModelConfig: one dataclass describing every architecture in the pool.
+
+Derived quantities (padded head counts, pattern stages, parameter counts)
+are computed here so configs/, launch/ and analysis/ agree on them.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field, replace
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+
+    head_dim: int | None = None      # default d_model // n_heads
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    tie_embeddings: bool = False
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-5
+
+    # MoE
+    n_experts: int = 0
+    topk_experts: int = 2
+    moe_impl: str = "capacity"       # capacity | dense
+    capacity_factor: float = 1.25
+
+    # SSM (mamba2 / SSD)
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_headdim: int = 64
+    ssm_chunk: int = 128
+    conv_width: int = 4
+
+    # hybrid (recurrentgemma): layer-kind pattern, tiled over depth
+    block_pattern: tuple[str, ...] = ()   # e.g. ("rec", "rec", "attn")
+    local_window: int = 0                 # local attention window (0 = full)
+    sliding_window: int = 0               # SWA for dense archs (mixtral)
+    rglru_c: float = 8.0
+
+    # encoder-decoder (seamless) / cross-attn (vlm)
+    encoder_layers: int = 0
+    cross_attn_every: int = 0             # vlm: 1 cross layer per N
+    memory_tokens: int = 0                # stub modality frontend length
+    memory_dim: int = 0                   # frontend embedding dim (=d_model)
+
+    # distribution / fitting knobs
+    tp: int = 1                           # model-axis size heads are padded to
+    attn_impl: str = "naive"              # naive | blockwise
+    attn_block: int = 1024                # kv-chunk for blockwise attention
+    remat: bool = True
+    scan_layers: bool = True
+    dtype: str = "float32"
+    logits_chunk: int = 0                 # 0 = unchunked loss
+    grad_accum: int = 1
+    moment_dtype: str = "float32"         # bf16 halves optimizer HBM (405b)
+    grad_dtype: str = "float32"           # bf16 grads: the 405b fit lever
+    act_pspec: tuple | None = None        # activation sharding constraint
+                                          # (e.g. sequence-parallel residuals)
+
+    # ---- derived ----------------------------------------------------------
+    @property
+    def head_dim_(self) -> int:
+        return self.head_dim or self.d_model // max(self.n_heads, 1)
+
+    @property
+    def n_heads_padded(self) -> int:
+        """Q heads padded up to a multiple of tp (zero-init extras keep the
+        function exact; see DESIGN.md §5)."""
+        if self.n_heads == 0:
+            return 0
+        return math.ceil(self.n_heads / self.tp) * self.tp
+
+    @property
+    def kv_sharded(self) -> bool:
+        """KV heads shard over the model axis only when divisible; otherwise
+        they replicate over model (+ FSDP over data when enabled)."""
+        return self.n_kv_heads > 0 and self.n_kv_heads % self.tp == 0
+
+    @property
+    def vocab_padded(self) -> int:
+        return math.ceil(self.vocab_size / 256) * 256
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.encoder_layers > 0
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def supports_long_context(self) -> bool:
+        return self.family in ("ssm", "hybrid")
+
+    @property
+    def pattern(self) -> tuple[str, ...]:
+        """Layer-kind pattern unit (scanned); defaults per family."""
+        if self.block_pattern:
+            return self.block_pattern
+        if self.family == "ssm":
+            return ("ssm",)
+        if self.family == "moe":
+            return ("attn_moe",)
+        if self.family == "vlm" and self.cross_attn_every:
+            return ("attn",) * (self.cross_attn_every - 1) + ("cross",)
+        return ("attn",)
+
+    @property
+    def stages(self) -> tuple[tuple[tuple[str, ...], int], ...]:
+        """(pattern, repeats) stages covering n_layers; the tail partial
+        pattern becomes its own stage so scan stacks stay homogeneous."""
+        pat = self.pattern
+        full, rem = divmod(self.n_layers, len(pat))
+        out = []
+        if full:
+            out.append((pat, full))
+        if rem:
+            out.append((pat[:rem], 1))
+        return tuple(out)
+
+    def with_(self, **kw) -> "ModelConfig":
+        return replace(self, **kw)
+
+    # rough parameter count for MODEL_FLOPS (6*N*D) reporting
+    def param_count_estimate(self) -> int:
+        d, dh = self.d_model, self.head_dim_
+        h, kv = self.n_heads, self.n_kv_heads
+        attn = d * dh * (h + 2 * kv) + h * dh * d
+        if self.qkv_bias:
+            attn += dh * (h + 2 * kv)
+        mlp = 3 * d * self.d_ff
+        moe = self.n_experts * 3 * d * self.d_ff + d * self.n_experts
+        ssm_inner = self.ssm_expand * d
+        ssm = (d * (2 * ssm_inner + 2 * self.ssm_state
+                    + ssm_inner // max(self.ssm_headdim, 1))
+               + ssm_inner * d) if self.family == "ssm" else 0
+        per_kind = {
+            "attn": attn + mlp,
+            "attn_moe": attn + moe,
+            "cross": 2 * attn + mlp,
+            "ssm": ssm,
+            "rec": (d * 3 * ssm_inner + ssm_inner * d) + mlp,
+        }
+        total = 0
+        for pat, reps in self.stages:
+            total += reps * sum(per_kind.get(k, attn + mlp) for k in pat)
+        if self.is_encdec:
+            total += self.encoder_layers * (attn + mlp)
+        total += self.vocab_padded * d * (1 if self.tie_embeddings else 2)
+        return total
+
+    def active_param_count_estimate(self) -> int:
+        """MoE: experts count only at topk/n_experts duty cycle."""
+        if self.n_experts == 0:
+            return self.param_count_estimate()
+        full = self.param_count_estimate()
+        moe_part = self.n_layers * self.n_experts * 3 * self.d_model * self.d_ff
+        active_part = self.n_layers * self.topk_experts * 3 * self.d_model * self.d_ff
+        return full - moe_part + active_part

@@ -1,0 +1,111 @@
+"""Mixture-of-Experts FFN: top-k routing with two dispatch schedules.
+
+``capacity`` (default, the at-scale path): GShard-style — tokens are ranked
+within their expert by a cumulative one-hot, dropped beyond capacity
+C = ceil(topk * N / E * capacity_factor), scattered into an (E, C, D) buffer,
+run through batched expert matmuls, and combined back with router weights.
+FLOPs scale with *active* parameters; with experts sharded over the model
+axis the scatter/gather lower to the expert-parallel all-to-all.
+
+``dense`` (reference): every expert computes every token; exact (no drops),
+used by tests to validate the capacity path and by small smoke configs.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.param import ParamDef
+
+
+def make_moe_defs(cfg: ModelConfig) -> dict:
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    return {
+        "router": ParamDef((d, e), ("embed", None)),
+        "wi_gate": ParamDef((e, d, ff), ("experts", "embed", "mlp")),
+        "wi_up": ParamDef((e, d, ff), ("experts", "embed", "mlp")),
+        "wo": ParamDef((e, ff, d), ("experts", "mlp", "embed")),
+    }
+
+
+def _route(p: dict, x2: jax.Array, cfg: ModelConfig):
+    """x2: (N, D) -> (weights (N,k), ids (N,k), aux load-balance loss)."""
+    logits = jnp.einsum("nd,de->ne", x2, p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, ids = jax.lax.top_k(probs, cfg.topk_experts)
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    # Switch-style aux loss: E * sum_e f_e * p_e
+    e = cfg.n_experts
+    f_e = jnp.mean(jax.nn.one_hot(ids[:, 0], e, dtype=jnp.float32), axis=0)
+    p_e = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(f_e * p_e)
+    return w.astype(x2.dtype), ids, aux
+
+
+def moe_dense(p: dict, x: jax.Array, cfg: ModelConfig):
+    b, s, d = x.shape
+    x2 = x.reshape(-1, d)
+    w, ids, aux = _route(p, x2, cfg)
+    gates = jnp.zeros((x2.shape[0], cfg.n_experts), x.dtype)
+    for k in range(cfg.topk_experts):
+        gates = gates + jax.nn.one_hot(ids[:, k], cfg.n_experts,
+                                       dtype=x.dtype) * w[:, k:k + 1]
+    g = jnp.einsum("nd,edf->nef", x2, p["wi_gate"])
+    u = jnp.einsum("nd,edf->nef", x2, p["wi_up"])
+    y = jnp.einsum("nef,efd->ned", jax.nn.silu(g) * u, p["wo"])
+    out = jnp.einsum("ned,ne->nd", y, gates)
+    return out.reshape(b, s, d), aux
+
+
+def moe_capacity(p: dict, x: jax.Array, cfg: ModelConfig):
+    """Group-limited capacity dispatch (GShard-style).
+
+    Tokens are ranked within their *batch row* (the DP shard unit), so the
+    dispatch buffer is (B, E, C, D) with B sharded over data — §Perf fix:
+    global ranking produced an unsharded (E, topk*N_global*1.25/E, D)
+    buffer (10 GB f32/chip on mixtral prefill_32k).
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.topk_experts
+    n = b * s
+    w, ids, aux = _route(p, x.reshape(-1, d), cfg)
+    w = w.reshape(b, s, k)
+    ids = ids.reshape(b, s, k)
+    cap = int(math.ceil(k * s / e * cfg.capacity_factor))
+    cap = max(4, -(-cap // 4) * 4)  # round up to multiple of 4
+
+    # flatten assignments token-major within each row: a = (s, slot_k)
+    eid = ids.reshape(b, s * k)                            # (B, A)
+    wgt = w.reshape(b, s * k)
+    tok = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(s), k)[None], (b, s * k))
+    onehot = jax.nn.one_hot(eid, e, dtype=jnp.int32)       # (B, A, E)
+    rank = (jnp.cumsum(onehot, axis=1) - onehot)           # pos within expert
+    rank = jnp.sum(rank * onehot, axis=-1)                 # (B, A)
+    keep = rank < cap
+    slot = jnp.where(keep, eid * cap + rank, e * cap)      # OOB -> dropped
+
+    bidx = jnp.broadcast_to(jnp.arange(b)[:, None], slot.shape)
+    buf = jnp.zeros((b, e * cap, d), x.dtype)
+    buf = buf.at[bidx, slot].set(
+        jnp.take_along_axis(x, tok[..., None], axis=1), mode="drop")
+    buf = buf.reshape(b, e, cap, d)
+    g = jnp.einsum("becd,edf->becf", buf, p["wi_gate"])
+    u = jnp.einsum("becd,edf->becf", buf, p["wi_up"])
+    yb = jnp.einsum("becf,efd->becd", jax.nn.silu(g) * u, p["wo"])
+
+    flat = yb.reshape(b, e * cap, d)
+    gathered = flat[bidx, jnp.minimum(slot, e * cap - 1)]
+    gathered = gathered * keep[..., None] * wgt[..., None]
+    out = gathered.reshape(b, s, k, d).sum(axis=2)         # token-major fold
+    return out, aux
+
+
+def moe(p: dict, x: jax.Array, cfg: ModelConfig):
+    if cfg.moe_impl == "dense":
+        return moe_dense(p, x, cfg)
+    return moe_capacity(p, x, cfg)

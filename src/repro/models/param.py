@@ -1,0 +1,99 @@
+"""Parameter machinery: declarative defs with logical sharding axes.
+
+Model code builds a pytree of :class:`ParamDef` (shape + logical axis names +
+init rule).  From that single source of truth we derive:
+
+  * ``init_params``     — materialized arrays (deterministic per path),
+  * ``abstract_params`` — ShapeDtypeStruct tree for AOT lowering (the
+                          multi-pod dry-run never allocates weights),
+  * ``pspec_tree``      — PartitionSpec tree via logical->mesh axis rules
+                          (parallel/sharding.py owns the rule sets).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class ParamDef:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]          # logical axis name per dim
+    init: str = "normal"                  # normal | zeros | ones
+    scale: float = 0.02
+    # padding-to-TP support: true (unpadded) extent per dim, None = full.
+    # Entries beyond the true size are zero-initialized so padded heads are
+    # function-preserving (DESIGN.md §5).
+    true_sizes: tuple[int | None, ...] | None = None
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+        if self.true_sizes is not None:
+            assert len(self.true_sizes) == len(self.shape)
+
+
+def _is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def _flatten(tree, prefix=()):
+    if _is_def(tree):
+        yield prefix, tree
+        return
+    for k in sorted(tree):
+        yield from _flatten(tree[k], prefix + (k,))
+
+
+def init_params(tree, key: jax.Array, dtype=jnp.float32):
+    """Materialize every ParamDef; rng folded per path so order-independent."""
+
+    def make(path, d: ParamDef):
+        if d.init == "zeros":
+            return jnp.zeros(d.shape, dtype)
+        if d.init == "ones":
+            return jnp.ones(d.shape, dtype)
+        import zlib
+        sub = key
+        for p in path:
+            # crc32: stable across processes (unlike str hash) -> checkpoints
+            # re-initialize identically on restart
+            sub = jax.random.fold_in(sub, zlib.crc32(str(p).encode()))
+        w = jax.random.normal(sub, d.shape, jnp.float32) * d.scale
+        if d.true_sizes is not None:
+            for dim, ts in enumerate(d.true_sizes):
+                if ts is not None and ts < d.shape[dim]:
+                    mask = (jnp.arange(d.shape[dim]) < ts).reshape(
+                        [-1 if i == dim else 1 for i in range(len(d.shape))])
+                    w = w * mask
+        return w.astype(dtype)
+
+    return _map_tree(tree, make)
+
+
+def abstract_params(tree, dtype=jnp.float32):
+    """ShapeDtypeStruct tree — the dry-run's no-allocation weight stand-in."""
+    return _map_tree(tree, lambda _, d: jax.ShapeDtypeStruct(d.shape, dtype))
+
+
+def pspec_tree(tree, rules: dict[str, str | tuple | None]):
+    """Logical axes -> PartitionSpec via ``rules`` (missing names replicate)."""
+
+    def to_spec(_, d: ParamDef):
+        return P(*[rules.get(a) if a is not None else None for a in d.axes])
+
+    return _map_tree(tree, to_spec)
+
+
+def _map_tree(tree, fn, path=()):
+    if _is_def(tree):
+        return fn(path, tree)
+    return {k: _map_tree(v, fn, path + (k,)) for k, v in tree.items()}
+
+
+def param_count(tree) -> int:
+    return sum(int(np.prod(d.shape)) for _, d in _flatten(tree))

@@ -1,0 +1,97 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Block structure (Griffin "recurrent block"):
+
+    x -> [W_x -> causal conv(4) -> RG-LRU]  (.)  [W_y -> GeLU]  -> W_out
+
+RG-LRU (diagonal gates — TPU-adapted from Griffin's block-diagonal; noted in
+DESIGN.md):
+
+    r_t = sigmoid(w_a . u_t + b_a)          (recurrence gate)
+    i_t = sigmoid(w_i . u_t + b_i)          (input gate)
+    log a_t = -c * softplus(Lambda) * r_t
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+
+The linear recurrence runs as a log-space ``associative_scan`` over the
+sequence (parallel depth O(log S) — this is what makes recurrentgemma a
+long_500k architecture), and as an O(1) state update in decode.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.param import ParamDef
+from repro.models.ssm import _causal_conv
+
+
+def rglru_width(cfg: ModelConfig) -> int:
+    return cfg.d_model  # RecurrentGemma: lru_width == d_model
+
+
+def make_rglru_defs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    w = rglru_width(cfg)
+    return {
+        "w_x": ParamDef((d, w), ("embed", "ssm_inner")),
+        "w_y": ParamDef((d, w), ("embed", "ssm_inner")),
+        "conv_w": ParamDef((cfg.conv_width, w), (None, "ssm_inner")),
+        "conv_b": ParamDef((w,), ("ssm_inner",), init="zeros"),
+        "gate_a_w": ParamDef((w,), ("ssm_inner",), init="normal"),
+        "gate_a_b": ParamDef((w,), ("ssm_inner",), init="zeros"),
+        "gate_i_w": ParamDef((w,), ("ssm_inner",), init="normal"),
+        "gate_i_b": ParamDef((w,), ("ssm_inner",), init="zeros"),
+        "lam": ParamDef((w,), ("ssm_inner",), init="ones"),
+        "w_out": ParamDef((w, d), ("ssm_inner", "embed")),
+    }
+
+
+def _rglru_gates(p: dict, u: jax.Array, cfg: ModelConfig):
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf * p["gate_a_w"] + p["gate_a_b"])
+    i = jax.nn.sigmoid(uf * p["gate_i_w"] + p["gate_i_b"])
+    log_a = -cfg.rglru_c * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+    return a, beta * i * uf
+
+
+def rglru_forward(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    u = jnp.einsum("bsd,dw->bsw", x, p["w_x"])
+    gy = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["w_y"]))
+    u = _causal_conv(u, p["conv_w"], p["conv_b"])
+    a, b = _rglru_gates(p, u, cfg)
+
+    # linear recurrence h_t = a_t h_{t-1} + b_t  via associative scan
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    out = h.astype(x.dtype) * gy
+    return jnp.einsum("bsw,wd->bsd", out, p["w_out"])
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int, dtype) -> dict:
+    w = rglru_width(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, w), dtype),
+        "h": jnp.zeros((batch, w), jnp.float32),
+    }
+
+
+def rglru_decode_step(p: dict, x1: jax.Array, cache: dict,
+                      cfg: ModelConfig):
+    u1 = jnp.einsum("bsd,dw->bsw", x1, p["w_x"])
+    gy = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x1, p["w_y"]))
+    hist = jnp.concatenate([cache["conv"], u1], axis=1)
+    u = (jnp.einsum("bwc,wc->bc", hist, p["conv_w"])
+         + p["conv_b"])[:, None, :]
+    a, b = _rglru_gates(p, u, cfg)
+    h = a[:, 0] * cache["h"] + b[:, 0]
+    out = h[:, None, :].astype(x1.dtype) * gy
+    y = jnp.einsum("bsw,wd->bsd", out, p["w_out"])
+    return y, {"conv": hist[:, 1:], "h": h}

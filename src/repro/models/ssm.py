@@ -1,0 +1,228 @@
+"""Mamba-2 SSD (state-space duality) mixer — attention-free sequence layer.
+
+Implements the chunked SSD algorithm (arXiv:2405.21060): the linear
+recurrence
+
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * x_t (x) B_t        (state (H,P,N))
+    y_t = h_t . C_t + D * x_t
+
+is evaluated as intra-chunk quadratic attention-like einsums plus an
+inter-chunk state scan — O(S * Q) work, O(1)-state decode.  ``ssd_sequential``
+is the step-by-step oracle used by tests; ``ssm_decode_step`` is the serving
+path (this is what makes mamba2 run the long_500k shape).
+
+TP note: the input projection is stored **per component** (z, x, B, C, dt)
+rather than as one fused matrix so each output dim shards cleanly over the
+model axis (the fused concat width is not divisible by tp=16); the tiny
+per-head dt projection replicates.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import rmsnorm
+from repro.models.param import ParamDef
+
+
+def ssm_dims(cfg: ModelConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    heads = d_in // cfg.ssm_headdim
+    groups = 1
+    return d_in, heads, groups
+
+
+def make_ssm_defs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    d_in, heads, groups = ssm_dims(cfg)
+    gn = groups * cfg.ssm_state
+    return {
+        "wz": ParamDef((d, d_in), ("embed", "ssm_inner")),
+        "wx": ParamDef((d, d_in), ("embed", "ssm_inner")),
+        "wb": ParamDef((d, gn), ("embed", "ssm_state")),
+        "wc": ParamDef((d, gn), ("embed", "ssm_state")),
+        "wdt": ParamDef((d, heads), ("embed", None)),
+        "conv_x_w": ParamDef((cfg.conv_width, d_in), (None, "ssm_inner")),
+        "conv_x_b": ParamDef((d_in,), ("ssm_inner",), init="zeros"),
+        "conv_b_w": ParamDef((cfg.conv_width, gn), (None, "ssm_state")),
+        "conv_b_b": ParamDef((gn,), ("ssm_state",), init="zeros"),
+        "conv_c_w": ParamDef((cfg.conv_width, gn), (None, "ssm_state")),
+        "conv_c_b": ParamDef((gn,), ("ssm_state",), init="zeros"),
+        "A_log": ParamDef((heads,), (None,), init="zeros"),
+        "D": ParamDef((heads,), (None,), init="ones"),
+        "dt_bias": ParamDef((heads,), (None,), init="zeros"),
+        "norm_scale": ParamDef((d_in,), ("ssm_inner",), init="ones"),
+        "out_proj": ParamDef((d_in, d), ("ssm_inner", "embed")),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over (B,S,C) with taps (W,C)."""
+    width = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(width):
+        out = out + xp[:, i:i + x.shape[1], :] * w[i]
+    return out + b
+
+
+def ssd_chunked(x, dt, a_head, bm, cm, chunk: int):
+    """x:(B,S,H,P) dt:(B,S,H) a_head:(H,) bm/cm:(B,S,G,N) -> y:(B,S,H,P)."""
+    b, s, h, p = x.shape
+    g, n = bm.shape[2], bm.shape[3]
+    q = min(chunk, s)
+    if s % q:
+        # zero-pad to a chunk multiple: dt=0 -> decay=1 and zero input, so
+        # padded steps are state-neutral; outputs are sliced back.
+        pad = q - s % q
+        zpad = lambda t: jnp.pad(t, [(0, 0), (0, pad)] +
+                                 [(0, 0)] * (t.ndim - 2))
+        out = ssd_chunked(zpad(x), zpad(dt), a_head, zpad(bm), zpad(cm), q)
+        return out[:, :s]
+    nc = s // q
+    rep = h // g
+    bh = jnp.repeat(bm, rep, axis=2)            # (B,S,H,N)
+    ch = jnp.repeat(cm, rep, axis=2)
+    dtf = dt.astype(jnp.float32)
+    da = dtf * a_head.astype(jnp.float32)       # (B,S,H) log-decay
+    xdt = (x.astype(jnp.float32)
+           * dtf[..., None])                    # dt-weighted input
+
+    def r4(t):  # (B,S,...) -> (B,nc,Q,...)
+        return t.reshape((b, nc, q) + t.shape[2:])
+
+    da_c, xdt_c = r4(da), r4(xdt)
+    bh_c, ch_c = r4(bh.astype(jnp.float32)), r4(ch.astype(jnp.float32))
+    cs = jnp.cumsum(da_c, axis=2)               # (B,nc,Q,H) inclusive
+
+    # --- intra-chunk: y_i += sum_{j<=i} exp(cs_i - cs_j) (C_i.B_j) xdt_j
+    diff = cs[:, :, :, None, :] - cs[:, :, None, :, :]     # (B,nc,i,j,H)
+    tri = jnp.tril(jnp.ones((q, q), bool))[None, None, :, :, None]
+    el = jnp.exp(jnp.where(tri, diff, -jnp.inf))
+    scores = jnp.einsum("bcihn,bcjhn->bcijh", ch_c, bh_c)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", scores * el, xdt_c)
+
+    # --- chunk-final states: S_c = sum_j exp(cs_end - cs_j) xdt_j (x) B_j
+    dec_end = jnp.exp(cs[:, :, -1:, :] - cs)               # (B,nc,Q,H)
+    s_c = jnp.einsum("bcjh,bcjhn,bcjhp->bchpn", dec_end, bh_c, xdt_c)
+
+    # --- inter-chunk recurrence over nc chunks
+    chunk_decay = jnp.exp(cs[:, :, -1, :])                 # (B,nc,H)
+
+    def scan_fn(hprev, xs):
+        dec, s_new = xs                                    # (B,H), (B,H,P,N)
+        h_out = hprev                                      # state BEFORE chunk
+        return dec[..., None, None] * hprev + s_new, h_out
+
+    h0 = jnp.zeros((b, h, p, n), jnp.float32)
+    _, h_before = jax.lax.scan(
+        scan_fn, h0, (chunk_decay.swapaxes(0, 1), s_c.swapaxes(0, 1)))
+    h_before = h_before.swapaxes(0, 1)                     # (B,nc,H,P,N)
+
+    y_inter = jnp.einsum("bcihn,bchpn->bcihp", ch_c, h_before) \
+        * jnp.exp(cs)[..., None]
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    return y.astype(x.dtype)
+
+
+def ssd_sequential(x, dt, a_head, bm, cm):
+    """Step-by-step oracle for tests (identical math, O(S) scan)."""
+    b, s, h, p = x.shape
+    g, n = bm.shape[2], bm.shape[3]
+    rep = h // g
+    bh = jnp.repeat(bm, rep, axis=2).astype(jnp.float32)
+    ch = jnp.repeat(cm, rep, axis=2).astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+
+    def step(hprev, xs):
+        xt, dtt, bt, ct = xs
+        decay = jnp.exp(dtt * a_head)[..., None, None]     # (B,H,1,1)
+        upd = jnp.einsum("bhp,bhn->bhpn", xt * dtt[..., None], bt)
+        hnew = decay * hprev + upd
+        yt = jnp.einsum("bhpn,bhn->bhp", hnew, ct)
+        return hnew, yt
+
+    h0 = jnp.zeros((b, h, p, n), jnp.float32)
+    xs = (x.astype(jnp.float32).swapaxes(0, 1), dtf.swapaxes(0, 1),
+          bh.swapaxes(0, 1), ch.swapaxes(0, 1))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return ys.swapaxes(0, 1).astype(x.dtype)
+
+
+def _project(p: dict, x: jax.Array):
+    z = jnp.einsum("bsd,dk->bsk", x, p["wz"])
+    xs = jnp.einsum("bsd,dk->bsk", x, p["wx"])
+    bm = jnp.einsum("bsd,dk->bsk", x, p["wb"])
+    cm = jnp.einsum("bsd,dk->bsk", x, p["wc"])
+    dt = jnp.einsum("bsd,dk->bsk", x, p["wdt"])
+    return z, xs, bm, cm, dt
+
+
+def ssm_forward(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Full mamba2 mixer: proj -> conv -> SSD -> gated norm -> out_proj."""
+    b, s, _ = x.shape
+    d_in, heads, groups = ssm_dims(cfg)
+    z, xs, bm, cm, dt = _project(p, x)
+    xs = jax.nn.silu(_causal_conv(xs, p["conv_x_w"], p["conv_x_b"]))
+    bm = jax.nn.silu(_causal_conv(bm, p["conv_b_w"], p["conv_b_b"]))
+    cm = jax.nn.silu(_causal_conv(cm, p["conv_c_w"], p["conv_c_b"]))
+    xh = xs.reshape(b, s, heads, cfg.ssm_headdim)
+    bmh = bm.reshape(b, s, groups, cfg.ssm_state)
+    cmh = cm.reshape(b, s, groups, cfg.ssm_state)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a_head = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y = ssd_chunked(xh, dtv, a_head, bmh, cmh, cfg.ssm_chunk)
+    y = y + xh * p["D"][:, None].astype(y.dtype)
+    y = y.reshape(b, s, d_in)
+    y = rmsnorm({"scale": p["norm_scale"]}, y * jax.nn.silu(z), cfg.norm_eps)
+    return jnp.einsum("bsk,kd->bsd", y, p["out_proj"])
+
+
+# ---------------------------------------------------------------------------
+# decode: O(1) state update
+# ---------------------------------------------------------------------------
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype) -> dict:
+    d_in, heads, groups = ssm_dims(cfg)
+    conv_dim = d_in + 2 * groups * cfg.ssm_state
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, conv_dim), dtype),
+        "h": jnp.zeros((batch, heads, cfg.ssm_headdim, cfg.ssm_state),
+                       jnp.float32),
+    }
+
+
+def ssm_decode_step(p: dict, x1: jax.Array, cache: dict,
+                    cfg: ModelConfig):
+    """x1: (B,1,D) -> (y (B,1,D), cache')."""
+    b = x1.shape[0]
+    d_in, heads, groups = ssm_dims(cfg)
+    gn = groups * cfg.ssm_state
+    z, xs, bm, cm, dt = _project(p, x1)
+    xbc = jnp.concatenate([xs, bm, cm], axis=-1)           # (B,1,conv_dim)
+    hist = jnp.concatenate([cache["conv"], xbc], axis=1)   # (B,W,conv_dim)
+    conv_w = jnp.concatenate([p["conv_x_w"], p["conv_b_w"],
+                              p["conv_c_w"]], axis=1)
+    conv_b = jnp.concatenate([p["conv_x_b"], p["conv_b_b"],
+                              p["conv_c_b"]], axis=0)
+    conv_out = jnp.einsum("bwc,wc->bc", hist, conv_w) + conv_b
+    xbc1 = jax.nn.silu(conv_out)[:, None, :]
+    xs, bm, cm = jnp.split(xbc1, [d_in, d_in + gn], -1)
+    xh = xs.reshape(b, heads, cfg.ssm_headdim).astype(jnp.float32)
+    bmh = jnp.repeat(bm.reshape(b, groups, cfg.ssm_state),
+                     heads // groups, axis=1).astype(jnp.float32)
+    cmh = jnp.repeat(cm.reshape(b, groups, cfg.ssm_state),
+                     heads // groups, axis=1).astype(jnp.float32)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])[:, 0]
+    a_head = -jnp.exp(p["A_log"].astype(jnp.float32))
+    decay = jnp.exp(dtv * a_head)[..., None, None]
+    h = decay * cache["h"] + jnp.einsum("bhp,bhn->bhpn",
+                                        xh * dtv[..., None], bmh)
+    y = jnp.einsum("bhpn,bhn->bhp", h, cmh)
+    y = y + xh * p["D"][:, None]
+    y = y.reshape(b, 1, d_in).astype(x1.dtype)
+    y = rmsnorm({"scale": p["norm_scale"]}, y * jax.nn.silu(z), cfg.norm_eps)
+    out = jnp.einsum("bsk,kd->bsd", y, p["out_proj"])
+    return out, {"conv": hist[:, 1:], "h": h}

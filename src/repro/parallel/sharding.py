@@ -1,0 +1,97 @@
+"""Logical-axis -> mesh-axis sharding rules (DP / TP / FSDP / EP / SP).
+
+The production mesh is ``(data=16, model=16)`` per pod, with a leading
+``pod`` axis across pods.  Rules:
+
+  * batch           -> (pod, data)            [DP; hierarchical reduce]
+  * vocab/heads/mlp/ssm_inner/ssm_state -> model   [Megatron TP]
+  * kv_heads        -> model iff divisible, else replicate ("kv_heads_repl")
+  * experts         -> model when n_experts % tp == 0 (EP; phi3.5),
+                       else per-expert TP on mlp (mixtral)
+  * embed           -> data under FSDP (ZeRO-3-style weight sharding; the
+                       default — every large arch needs it for optimizer
+                       state), None otherwise
+  * layers (scan stacks) -> never sharded
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.models.param import pspec_tree
+
+
+def dp_axes(multi_pod: bool):
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+def logical_rules(cfg: ModelConfig, *, multi_pod: bool = False,
+                  fsdp: bool = True) -> dict:
+    rules = {
+        "batch": dp_axes(multi_pod),
+        "vocab": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        "kv_heads_repl": None,
+        "embed": "data" if fsdp else None,
+        "mlp": "model",
+        "experts": None,
+        "ssm_inner": "model",
+        "ssm_state": "model",
+        "layers": None,
+    }
+    if cfg.n_experts and cfg.n_experts % cfg.tp == 0:
+        rules["experts"] = "model"   # true EP (phi3.5: E == tp)
+        rules["mlp"] = None          # expert-internal ff replicated over model
+    return rules
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, defs_tree,
+                    *, fsdp: bool = True):
+    multi_pod = "pod" in mesh.axis_names
+    specs = pspec_tree(defs_tree, logical_rules(cfg, multi_pod=multi_pod,
+                                                fsdp=fsdp))
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs)
+
+
+def batch_pspec(mesh: Mesh, global_batch: int, ndim: int = 2) -> P:
+    """Shard dim0 (batch) over as many DP axes as divide it; rest replicated.
+
+    long_500k has global_batch=1 -> fully replicated (single-stream decode
+    does not data-parallelize; noted in EXPERIMENTS.md).
+    """
+    axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+    use = []
+    prod = 1
+    for a in axes:
+        n = mesh.shape[a]
+        if global_batch % (prod * n) == 0:
+            use.append(a)
+            prod *= n
+    spec = tuple(use) if use else None
+    return P(spec, *([None] * (ndim - 1)))
+
+
+def cache_shardings(cfg: ModelConfig, mesh: Mesh, cache_tree,
+                    global_batch: int):
+    """KV/SSM cache shardings: batch over DP axes; kv-head dim over model
+    when sharded; mamba2 ssm state dims replicate over model."""
+    bspec = batch_pspec(mesh, global_batch, ndim=1)
+    b_axes = bspec[0]
+
+    def spec_for(leaf):
+        dims = [None] * leaf.ndim
+        dims[1] = b_axes  # leading dim is the scanned layer stack
+        if (leaf.ndim == 5 and cfg.n_kv_heads and
+                leaf.shape[3] == cfg.n_kv_heads and cfg.kv_sharded):
+            dims[3] = "model"
+        return NamedSharding(mesh, P(*dims))
+
+    return jax.tree.map(spec_for, cache_tree)
+
+
+def count_collective_free(mesh: Mesh) -> int:
+    return int(np.prod(list(mesh.shape.values())))

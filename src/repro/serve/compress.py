@@ -1,0 +1,123 @@
+"""LM-driven lossless compression — the paper's full pipeline, end to end.
+
+Fig. 1/2 of the RAS paper: a learned probability generator feeds calibrated
+distributions through the SPC (BF16 -> mass-corrected fixed point) into the
+multi-lane rANS fabric.  Here the generator is any model-zoo LM and the text
+stream is the payload:
+
+  compress    — teacher-forced scan of the *decode* path produces one
+                distribution per (lane, position); the SPC quantizes them;
+                the multi-lane coder encodes in reverse (rANS is LIFO).
+  decompress  — the same scan, except each step's symbol comes out of the
+                rANS decoder (prediction-guided: the model's own top-k are
+                the trial symbols, verified with O(1) CDF probes and a safe
+                binary-search fallback) and is fed back into the model.
+
+Bit-exactness: both directions run the *identical* decode_step function on
+the identical cache evolution, so the distributions (and therefore tables
+and bitstream) match float-for-float on a given backend — the software
+analogue of the paper's determinism contract.  Each batch row is one rANS
+lane (the multi-lane fabric, T4).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import coder, constants as C, spc
+from repro.core.predictors import model_topk_candidates
+from repro.models.config import ModelConfig
+from repro.models.transformer import decode_step, init_cache
+
+BOS = 0
+
+
+class CompressStats(NamedTuple):
+    enc: coder.EncodedLanes
+    bits_per_symbol: jax.Array
+    model_xent_bits: jax.Array     # model cross entropy (bits/symbol) = bound
+    avg_probes: jax.Array | None = None
+
+
+def _step_tables(logits: jax.Array, vocab: int, prob_bits: int):
+    """Model logits (lanes, Vpad) -> TableSet (lanes, V) via the SPC."""
+    lg = logits[:, :vocab].astype(jnp.float32)
+    probs = jax.nn.softmax(lg, axis=-1)
+    return spc.tables_from_probs(spc.store_bf16(probs), prob_bits)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "prob_bits"))
+def collect_tables(params, cfg: ModelConfig, tokens: jax.Array,
+                   prob_bits: int = C.PROB_BITS):
+    """Teacher-forced pass: per-(position, lane) coding tables + xent."""
+    lanes, t_len = tokens.shape
+    cache = init_cache(cfg, lanes, t_len)
+    inputs = jnp.concatenate(
+        [jnp.full((lanes, 1), BOS, tokens.dtype), tokens[:, :-1]], axis=1)
+
+    def body(carry, t):
+        cache = carry
+        lg, cache = decode_step(params, cache, inputs[:, t][:, None], t, cfg)
+        tbl = _step_tables(lg, cfg.vocab_size, prob_bits)
+        lp = jax.nn.log_softmax(lg[:, :cfg.vocab_size].astype(jnp.float32))
+        gold = jnp.take_along_axis(lp, tokens[:, t][:, None], -1)[:, 0]
+        return cache, (tbl, -jnp.mean(gold))
+
+    _, (tables, nll) = jax.lax.scan(body, cache, jnp.arange(t_len))
+    xent_bits = jnp.mean(nll) / jnp.log(2.0)
+    return tables, xent_bits   # TableSet fields: (T, lanes, K)
+
+
+def lm_compress(params, cfg: ModelConfig, tokens: jax.Array,
+                prob_bits: int = C.PROB_BITS) -> CompressStats:
+    """tokens (lanes, T) -> multi-lane rANS bitstream + stats."""
+    lanes, t_len = tokens.shape
+    tables, xent_bits = collect_tables(params, cfg, tokens, prob_bits)
+    enc = coder.encode(tokens.astype(jnp.int32), tables)
+    bits = jnp.mean(enc.length.astype(jnp.float32)) * 8.0 / t_len
+    return CompressStats(enc=enc, bits_per_symbol=bits,
+                         model_xent_bits=xent_bits)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "n_symbols", "prob_bits", "topk"))
+def lm_decompress(params, cfg: ModelConfig, enc: coder.EncodedLanes,
+                  n_symbols: int, prob_bits: int = C.PROB_BITS,
+                  topk: int = 4):
+    """Bitstream -> tokens, decoding with model-top-k speculation (T3)."""
+    lanes = enc.buf.shape[0]
+    cache = init_cache(cfg, lanes, n_symbols)
+    dec0 = coder.decoder_init(enc)
+    tok0 = jnp.full((lanes, 1), BOS, jnp.int32)
+
+    def body(carry, t):
+        cache, dec, tok = carry
+        lg, cache = decode_step(params, cache, tok, t, cfg)
+        tbl = _step_tables(lg, cfg.vocab_size, prob_bits)
+        cands = model_topk_candidates(lg[:, :cfg.vocab_size], topk)
+        dec, sym, probes = coder.decode_get(dec, enc.buf, tbl, prob_bits,
+                                            candidates=cands)
+        return (cache, dec, sym[:, None].astype(jnp.int32)), (sym, probes)
+
+    (_, _, _), (symbols, probes) = jax.lax.scan(
+        body, (cache, dec0, tok0), jnp.arange(n_symbols))
+    return symbols.T, jnp.mean(probes.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# static-table path (classic rANS with an empirical histogram) — the
+# "software rANS" rung of Fig. 1's algorithmic ladder, used by benchmarks.
+# ---------------------------------------------------------------------------
+
+def histogram_compress(symbols: np.ndarray, k: int,
+                       prob_bits: int = C.PROB_BITS):
+    counts = np.bincount(symbols.ravel(), minlength=k)
+    tbl = jax.tree.map(jnp.asarray, spc.tables_from_counts_np(
+        counts, prob_bits))
+    enc = coder.encode(jnp.asarray(symbols, jnp.int32), tbl)
+    return enc, tbl

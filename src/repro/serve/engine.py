@@ -1,0 +1,74 @@
+"""Serving engine: prefill + autoregressive generation over the model zoo.
+
+``make_serve_step`` is the function the decode-shape dry-runs lower: one new
+token against a (possibly ring-buffered) cache of seq_len.  ``prefill`` and
+``generate`` drive the same step function for the runnable examples.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import decode_step, init_cache
+
+
+def make_serve_step(cfg: ModelConfig):
+    """Returns serve_step(params, cache, token, pos, memory=None)."""
+
+    def serve_step(params, cache, token, pos, memory=None):
+        return decode_step(params, cache, token, pos, cfg, memory=memory)
+
+    return serve_step
+
+
+def prefill(params, cfg: ModelConfig, tokens: jax.Array,
+            max_len: int, memory: jax.Array | None = None):
+    """Teacher-forced scan of decode_step over the prompt.
+
+    Returns (cache, last_logits).  Using the decode path for prefill keeps
+    serving numerics identical to stepwise decode — the property LM-driven
+    lossless compression depends on (serve/compress.py).
+    """
+    b, s = tokens.shape
+    cache = init_cache(cfg, b, max_len)
+
+    def body(carry, t):
+        cache = carry
+        lg, cache = decode_step(params, cache, tokens[:, t][:, None],
+                                t, cfg, memory=memory)
+        return cache, lg
+
+    cache, all_logits = jax.lax.scan(body, cache, jnp.arange(s))
+    return cache, all_logits[-1]
+
+
+def generate(params, cfg: ModelConfig, prompt: jax.Array, n_new: int,
+             max_len: int, memory: jax.Array | None = None,
+             temperature: float = 0.0, key: jax.Array | None = None):
+    """Greedy (or sampled) generation; returns (B, n_new) new tokens."""
+    b, s = prompt.shape
+    cache, last = prefill(params, cfg, prompt, max_len, memory)
+
+    def pick(lg, k):
+        lg = lg[:, :cfg.vocab_size]
+        if temperature <= 0.0:
+            return jnp.argmax(lg, -1).astype(jnp.int32)
+        return jax.random.categorical(k, lg / temperature).astype(jnp.int32)
+
+    def body(carry, i):
+        cache, tok, k = carry
+        k, sub = jax.random.split(k)
+        lg, cache = decode_step(params, cache, tok[:, None], s + i, cfg,
+                                memory=memory)
+        nxt = pick(lg, sub)
+        return (cache, nxt, k), nxt
+
+    k0 = key if key is not None else jax.random.PRNGKey(0)
+    first = pick(last, k0)
+    (_, _, _), rest = jax.lax.scan(
+        body, (cache, first, k0), jnp.arange(1, n_new))
+    return jnp.concatenate([first[:, None], rest.T], axis=1)

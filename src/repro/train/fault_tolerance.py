@@ -1,0 +1,94 @@
+"""Fault tolerance: restart manager, straggler monitor, elastic re-mesh.
+
+The contract at 1000+ nodes: any step may die (preemption, link flap,
+device loss).  The framework's answer:
+
+  * **checkpoint/restart** — ``RestartManager.run`` executes the step loop,
+    snapshots every ``save_every`` steps (atomic publish), and on any
+    exception reloads the newest complete checkpoint and resumes; bounded
+    retry budget so a deterministic crash cannot loop forever;
+  * **straggler mitigation** — per-step wall-time EMA; steps slower than
+    ``straggler_factor`` x EMA are logged and counted (on real fleets this
+    feeds the scheduler that drains the slow host; here the hook also lets
+    tests inject delays and assert detection);
+  * **elastic re-mesh** — ``remesh`` re-shards a full checkpoint onto a new
+    (smaller or larger) mesh via device_put; tested by moving a train state
+    between differently-shaped CPU meshes.
+"""
+
+from __future__ import annotations
+
+import logging
+import time
+from dataclasses import dataclass, field
+
+import jax
+
+from repro.train import checkpoint
+
+log = logging.getLogger("repro.ft")
+
+
+@dataclass
+class StragglerMonitor:
+    factor: float = 3.0
+    ema: float | None = None
+    alpha: float = 0.2
+    slow_steps: list = field(default_factory=list)
+
+    def observe(self, step: int, dt: float) -> bool:
+        slow = self.ema is not None and dt > self.factor * self.ema
+        if slow:
+            self.slow_steps.append((step, dt, self.ema))
+            log.warning("straggler: step %d took %.3fs (ema %.3fs)",
+                        step, dt, self.ema)
+        self.ema = dt if self.ema is None else \
+            (1 - self.alpha) * self.ema + self.alpha * dt
+        return slow
+
+
+@dataclass
+class RestartManager:
+    ckpt_dir: str
+    save_every: int = 50
+    max_failures: int = 3
+    monitor: StragglerMonitor = field(default_factory=StragglerMonitor)
+    failures: int = 0
+
+    def run(self, state, step_fn, batch_fn, n_steps: int,
+            fault_hook=None):
+        """Run ``n_steps`` of ``state = step_fn(state, batch_fn(i))`` with
+        checkpoint/restart.  ``fault_hook(i)`` may raise to simulate node
+        loss (tests use this)."""
+        start = int(state.step)
+        i = start
+        while i < n_steps:
+            try:
+                t0 = time.monotonic()
+                if fault_hook is not None:
+                    fault_hook(i)
+                state, metrics = step_fn(state, batch_fn(i))
+                jax.block_until_ready(metrics["loss"])
+                self.monitor.observe(i, time.monotonic() - t0)
+                i += 1
+                if i % self.save_every == 0 or i == n_steps:
+                    checkpoint.save(self.ckpt_dir, i, state)
+            except Exception as e:  # noqa: BLE001 — any fault is restartable
+                self.failures += 1
+                log.warning("step %d failed (%s); restart %d/%d",
+                            i, e, self.failures, self.max_failures)
+                if self.failures > self.max_failures:
+                    raise
+                last = checkpoint.latest_step(self.ckpt_dir)
+                if last is None:
+                    i = start   # nothing saved yet: replay from the top
+                    continue
+                state = checkpoint.restore(self.ckpt_dir, last, state)
+                i = last
+        return state
+
+
+def remesh(state, old_dir: str, step: int, new_shardings):
+    """Elastic scaling: restore checkpoint ``step`` re-sharded for a new
+    mesh (survivor set after failures, or a grown slice)."""
+    return checkpoint.restore(old_dir, step, state, shardings=new_shardings)

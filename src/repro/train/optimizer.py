@@ -1,0 +1,74 @@
+"""Pure-JAX optimizers: AdamW (+ bf16-moment variant) with global-norm clip.
+
+No optax in this container, so the optimizer substrate is built here.  The
+``moment_dtype`` knob is the llama3-405b memory lever: bf16 first/second
+moments halve optimizer HBM at negligible quality cost (stochastic-rounding
+notes in DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: dict
+    v: dict
+
+
+def adamw_init(params, moment_dtype=jnp.float32) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      m=jax.tree.map(zeros, params),
+                      v=jax.tree.map(zeros, params))
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32)
+                                   * scale).astype(g.dtype), tree), norm
+
+
+def adamw_update(grads, state: AdamWState, params,
+                 lr: jax.Array | float,
+                 b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1):
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+
+    def upd(g, m, v, p):
+        gf = g.astype(jnp.float32)
+        m32 = m.astype(jnp.float32) * b1 + gf * (1 - b1)
+        v32 = v.astype(jnp.float32) * b2 + gf * gf * (1 - b2)
+        upd = (m32 / bc1) / (jnp.sqrt(v32 / bc2) + eps)
+        upd = upd + weight_decay * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - lr * upd
+        return new_p.astype(p.dtype), m32.astype(m.dtype), v32.astype(v.dtype)
+
+    out = jax.tree.map(upd, grads, state.m, state.v, params)
+    new_p = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_p, AdamWState(step=step, m=new_m, v=new_v)
+
+
+def cosine_lr(step, *, base_lr: float = 3e-4, warmup: int = 100,
+              total: int = 10_000, min_ratio: float = 0.1):
+    t = step.astype(jnp.float32)
+    warm = t / max(warmup, 1)
+    frac = jnp.clip((t - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return base_lr * jnp.where(t < warmup, warm, cos)

@@ -1,0 +1,324 @@
+"""Bit-exactness + property tests for the core rANS pipeline (T1/T2/T3/T4)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (barrett_div, bitstream, coder, constants as C,
+                        decode_lut, golden, python_baseline, spc, umulhi32)
+from repro.core.predictors import (LastValue, NeighborAverage, ZeroPredictor,
+                                   model_topk_candidates)
+
+jax.config.update("jax_platforms", "cpu")
+
+
+# ---------------------------------------------------------------------------
+# arithmetic primitives
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=200, deadline=None)
+@given(st.integers(0, 2**32 - 1), st.integers(0, 2**32 - 1))
+def test_umulhi32_exact(a, b):
+    got = int(umulhi32(jnp.uint32(a), jnp.uint32(b)))
+    assert got == (a * b) >> 32
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.integers(2, (1 << C.PROB_BITS)), st.integers(0, 2**31 - 1))
+def test_barrett_division_exact(f, s):
+    tbl = spc.build_tables(jnp.asarray([f, (1 << C.PROB_BITS) - f],
+                                       jnp.uint32))
+    q = int(barrett_div(jnp.uint32(s), tbl.rcp[0], tbl.rshift[0]))
+    assert q == s // f
+
+
+def test_barrett_edge_states():
+    """Exhaustive boundary sweep: states near renorm thresholds, all shifts."""
+    total = 1 << C.PROB_BITS
+    freqs = [2, 3, 4, 5, 7, 8, 9, 255, 256, 257, 4095, 4096, 4097,
+             total // 2, total - 1]
+    for f in freqs:
+        tbl = spc.build_tables(jnp.asarray([f, total - f], jnp.uint32))
+        edge = [0, 1, f - 1, f, f + 1, 2**31 - 1, 2**31 - f,
+                C.RANS_L, C.STATE_UPPER - 1]
+        s = jnp.asarray(edge, jnp.uint32)
+        q = barrett_div(s, tbl.rcp[0], tbl.rshift[0])
+        np.testing.assert_array_equal(np.asarray(q), np.asarray(edge) // f)
+
+
+# ---------------------------------------------------------------------------
+# SPC: quantization + mass correction (paper Sec. IV-A)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(2, 300), st.floats(0.05, 5.0), st.integers(0, 2**31 - 1))
+def test_spc_mass_exact(k, conc, seed):
+    rng = np.random.default_rng(seed)
+    probs = rng.dirichlet(np.full(k, conc))
+    f = np.asarray(spc.quantize_probs(jnp.asarray(probs, jnp.float32)))
+    assert f.sum() == 1 << C.PROB_BITS
+    assert f.min() >= 1
+
+
+def test_spc_mass_pathological():
+    total = 1 << C.PROB_BITS
+    cases = [
+        np.full(total, 1.0 / total),           # uniform at capacity
+        np.r_[1.0, np.zeros(100)],             # single spike + zeros
+        np.r_[np.full(50, 1e-9), [1.0]],       # tiny probs force f=1 floor
+        np.full(3, 1 / 3),                     # rounding ties
+    ]
+    for p in cases:
+        f = np.asarray(spc.quantize_probs(jnp.asarray(p, jnp.float32)))
+        assert f.sum() == total, p[:4]
+        assert f.min() >= 1
+
+
+def test_spc_deterministic():
+    rng = np.random.default_rng(7)
+    p = jnp.asarray(rng.dirichlet(np.ones(64)), jnp.float32)
+    f1 = np.asarray(spc.quantize_probs(p))
+    f2 = np.asarray(jax.jit(spc.quantize_probs)(p))
+    np.testing.assert_array_equal(f1, f2)
+
+
+def test_spc_batched_matches_single():
+    rng = np.random.default_rng(3)
+    p = rng.dirichlet(np.ones(32), size=5).astype(np.float32)
+    fb = np.asarray(spc.quantize_probs(jnp.asarray(p)))
+    for i in range(5):
+        fi = np.asarray(spc.quantize_probs(jnp.asarray(p[i])))
+        np.testing.assert_array_equal(fb[i], fi)
+
+
+def test_decode_lut_matches_cdf():
+    rng = np.random.default_rng(11)
+    tbl = spc.tables_from_probs(jnp.asarray(rng.dirichlet(np.ones(40)),
+                                            jnp.float32))
+    lut = np.asarray(decode_lut(tbl))
+    cdf = np.asarray(tbl.cdf)
+    for slot in [0, 1, 5, 100, (1 << C.PROB_BITS) - 1]:
+        x = int(np.searchsorted(cdf, slot, side="right") - 1)
+        assert lut[slot] == x
+
+
+# ---------------------------------------------------------------------------
+# bit-exactness: golden == python baseline == JAX lanes
+# ---------------------------------------------------------------------------
+
+def _random_case(seed, k=96, lanes=3, t=257, conc=0.4):
+    rng = np.random.default_rng(seed)
+    tbl = spc.tables_from_probs(jnp.asarray(rng.dirichlet(np.full(k, conc)),
+                                            jnp.float32))
+    syms = rng.integers(0, k, (lanes, t))
+    return tbl, syms
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_jax_encode_bit_exact_vs_golden(seed):
+    tbl, syms = _random_case(seed)
+    f, cdf = np.asarray(tbl.freq), np.asarray(tbl.cdf)
+    enc = coder.encode(jnp.asarray(syms), tbl)
+    buf, start, length = map(np.asarray, enc)
+    for i in range(syms.shape[0]):
+        ref = golden.encode(syms[i], f, cdf)
+        got = buf[i, start[i]:start[i] + length[i]].tobytes()
+        assert got == ref, f"lane {i} bitstream mismatch"
+
+
+def test_python_baseline_bit_exact_vs_golden():
+    tbl, syms = _random_case(4, lanes=1)
+    f, cdf = np.asarray(tbl.freq), np.asarray(tbl.cdf)
+    ref = golden.encode(syms[0], f, cdf)
+    pr = python_baseline.PyRans(f, cdf)
+    assert pr.encode([int(x) for x in syms[0]]) == ref
+    assert pr.decode(ref, syms.shape[1]) == [int(x) for x in syms[0]]
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_roundtrip_property(seed):
+    tbl, syms = _random_case(seed, k=64, lanes=2, t=128)
+    enc = coder.encode(jnp.asarray(syms), tbl)
+    dec, _ = coder.decode(enc, syms.shape[1], tbl)
+    np.testing.assert_array_equal(np.asarray(dec), syms)
+
+
+def test_roundtrip_skewed_distributions():
+    """near-deterministic + heavy-tail distributions stress f=1 and f=max."""
+    k, lanes, t = 256, 4, 300
+    rng = np.random.default_rng(5)
+    p = np.full(k, 1e-9)
+    p[7] = 1.0
+    p /= p.sum()
+    tbl = spc.tables_from_probs(jnp.asarray(p, jnp.float32))
+    syms = np.where(rng.random((lanes, t)) < 0.98, 7,
+                    rng.integers(0, k, (lanes, t)))
+    enc = coder.encode(jnp.asarray(syms), tbl)
+    dec, _ = coder.decode(enc, t, tbl)
+    np.testing.assert_array_equal(np.asarray(dec), syms)
+    # skewed stream must compress far below 1 byte/symbol
+    assert float(np.asarray(enc.length).mean()) < 0.5 * t
+
+
+def test_roundtrip_tiny_and_binary_alphabets():
+    for k in (2, 3, 5):
+        rng = np.random.default_rng(k)
+        tbl = spc.tables_from_probs(
+            jnp.asarray(rng.dirichlet(np.ones(k)), jnp.float32))
+        syms = rng.integers(0, k, (2, 64))
+        enc = coder.encode(jnp.asarray(syms), tbl)
+        dec, _ = coder.decode(enc, 64, tbl)
+        np.testing.assert_array_equal(np.asarray(dec), syms)
+
+
+# ---------------------------------------------------------------------------
+# per-position (neural prior) tables
+# ---------------------------------------------------------------------------
+
+def test_per_position_roundtrip_and_golden():
+    rng = np.random.default_rng(9)
+    k, lanes, t = 48, 2, 100
+    probs = rng.dirichlet(np.ones(k) * 0.5, size=t).astype(np.float32)
+    tbl = spc.tables_from_probs(jnp.asarray(probs))  # (T, K) tables
+    syms = rng.integers(0, k, (lanes, t))
+    enc = coder.encode(jnp.asarray(syms), tbl)
+    buf, start, length = map(np.asarray, enc)
+    f, cdf = np.asarray(tbl.freq), np.asarray(tbl.cdf)
+    for i in range(lanes):
+        ref = golden.encode_per_position(syms[i], f, cdf)
+        got = buf[i, start[i]:start[i] + length[i]].tobytes()
+        assert got == ref
+        back = golden.decode_per_position(ref, f, cdf)
+        np.testing.assert_array_equal(back, syms[i])
+    dec, _ = coder.decode(enc, t, tbl)
+    np.testing.assert_array_equal(np.asarray(dec), syms)
+
+
+# ---------------------------------------------------------------------------
+# prediction-guided decoding (T3): exactness + probe accounting
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("predictor", [
+    NeighborAverage(window=4, delta=8),
+    NeighborAverage(window=2, delta=4),
+    LastValue(delta=8),
+    ZeroPredictor(delta=8),
+])
+def test_guided_decode_bit_exact(predictor):
+    tbl, syms = _random_case(12, k=256, lanes=3, t=200)
+    enc = coder.encode(jnp.asarray(syms), tbl)
+    base, base_probes = coder.decode(enc, syms.shape[1], tbl)
+    guided, probes = coder.decode(enc, syms.shape[1], tbl,
+                                  predictor=predictor)
+    np.testing.assert_array_equal(np.asarray(guided), np.asarray(base))
+    np.testing.assert_array_equal(np.asarray(guided), syms)
+    assert float(probes) > 0
+
+
+def test_guided_decode_reduces_probes_on_smooth_data():
+    """Fig. 4(b): neighbour-average speculation must cut probes on
+    spatially-correlated (image-like) symbols."""
+    rng = np.random.default_rng(21)
+    k, lanes, t = 256, 8, 512
+    # smooth random walk clipped to [0, 255] — image-row-like
+    steps = rng.integers(-3, 4, (lanes, t))
+    syms = np.clip(128 + np.cumsum(steps, axis=1), 0, k - 1)
+    counts = np.bincount(syms.ravel(), minlength=k)
+    tbl = spc.tables_from_counts_np(counts)
+    tbl = jax.tree.map(jnp.asarray, tbl)
+    enc = coder.encode(jnp.asarray(syms), tbl)
+    base, base_probes = coder.decode(enc, t, tbl)
+    guided, probes = coder.decode(enc, t, tbl,
+                                  predictor=NeighborAverage(4, 8))
+    np.testing.assert_array_equal(np.asarray(guided), syms)
+    assert float(probes) < 0.75 * float(base_probes), (
+        float(probes), float(base_probes))
+
+
+def test_candidate_speculation_single_probe_when_right():
+    """Model-top-k path: a correct first candidate costs exactly 1 probe."""
+    tbl, syms = _random_case(31, k=64, lanes=4, t=1)
+    enc = coder.encode(jnp.asarray(syms), tbl)
+    st = coder.decoder_init(coder.EncodedLanes(*enc))
+    cand = jnp.asarray(syms[:, 0], jnp.int32)[:, None]  # oracle candidate
+    _, x, probes = coder.decode_get(st, enc.buf, tbl, candidates=cand)
+    np.testing.assert_array_equal(np.asarray(x), syms[:, 0])
+    np.testing.assert_array_equal(np.asarray(probes), 1)
+
+
+def test_candidate_speculation_fallback_is_exact():
+    tbl, syms = _random_case(32, k=64, lanes=4, t=1)
+    enc = coder.encode(jnp.asarray(syms), tbl)
+    st = coder.decoder_init(coder.EncodedLanes(*enc))
+    wrong = jnp.asarray((syms[:, 0] + 7) % 64, jnp.int32)[:, None]
+    _, x, probes = coder.decode_get(st, enc.buf, tbl, candidates=wrong)
+    np.testing.assert_array_equal(np.asarray(x), syms[:, 0])
+    assert int(np.asarray(probes).min()) >= 2  # failed verify + search
+
+
+def test_model_topk_candidates_shape():
+    logits = jnp.asarray(np.random.default_rng(0).normal(size=(5, 100)),
+                         jnp.float32)
+    c = model_topk_candidates(logits, 4)
+    assert c.shape == (5, 4)
+    np.testing.assert_array_equal(np.asarray(c[:, 0]),
+                                  np.argmax(np.asarray(logits), -1))
+
+
+# ---------------------------------------------------------------------------
+# container
+# ---------------------------------------------------------------------------
+
+def test_container_roundtrip():
+    tbl, syms = _random_case(40, k=100, lanes=5, t=150)
+    enc = coder.encode(jnp.asarray(syms), tbl)
+    blob = bitstream.pack(*map(np.asarray, enc), n_symbols=syms.shape[1])
+    buf, start, meta = bitstream.unpack(blob)
+    assert meta.lanes == 5 and meta.n_symbols == 150
+    enc2 = coder.EncodedLanes(jnp.asarray(buf), jnp.asarray(start),
+                              jnp.asarray(buf.shape[1] - start))
+    dec, _ = coder.decode(enc2, 150, tbl)
+    np.testing.assert_array_equal(np.asarray(dec), syms)
+    assert bitstream.compressed_size(np.asarray(enc.length)) == len(blob)
+
+
+def test_container_rejects_garbage():
+    with pytest.raises(ValueError):
+        bitstream.unpack(b"NOPE" + b"\x00" * 32)
+
+
+# ---------------------------------------------------------------------------
+# §Perf paths: records-based encode (TPU layout) and O(1) LUT decode
+# ---------------------------------------------------------------------------
+
+def test_encode_records_bit_exact():
+    tbl, syms = _random_case(51, k=128, lanes=4, t=200)
+    a = coder.encode(jnp.asarray(syms), tbl)
+    b = coder.encode_records(jnp.asarray(syms), tbl)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_encode_records_per_position_bit_exact():
+    rng = np.random.default_rng(8)
+    k, lanes, t = 32, 3, 64
+    probs = rng.dirichlet(np.ones(k), size=t).astype(np.float32)
+    tbl = spc.tables_from_probs(jnp.asarray(probs))
+    syms = rng.integers(0, k, (lanes, t))
+    a = coder.encode(jnp.asarray(syms), tbl)
+    b = coder.encode_records(jnp.asarray(syms), tbl)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_decode_lut_matches_bsearch():
+    tbl, syms = _random_case(52, k=200, lanes=4, t=150)
+    enc = coder.encode(jnp.asarray(syms), tbl)
+    a, _ = coder.decode(enc, syms.shape[1], tbl)
+    b, probes = coder.decode(enc, syms.shape[1], tbl, use_lut=True)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(b), syms)
+    assert abs(float(probes) - 1.0) < 1e-6  # exactly one probe per symbol

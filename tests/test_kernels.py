@@ -1,0 +1,151 @@
+"""Per-kernel validation: Pallas (interpret=True) vs pure-jnp ref oracles.
+
+Sweeps shapes/dtypes per the kernel-testing contract and asserts exact
+integer equality (rANS is bit-exact — allclose degenerates to equality).
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import coder, constants as C, spc
+from repro.kernels import ops, ref
+
+jax.config.update("jax_platforms", "cpu")
+
+
+def _case(seed, k, lanes, t, conc=0.5, dtype=jnp.float32):
+    rng = np.random.default_rng(seed)
+    probs = rng.dirichlet(np.full(k, conc)).astype(np.float32)
+    tbl = spc.tables_from_probs(jnp.asarray(probs, dtype))
+    syms = jnp.asarray(rng.integers(0, k, (lanes, t)), jnp.int32)
+    return tbl, syms
+
+
+# ---------------------------------------------------------------------------
+# rans_encode kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k,lanes,t,lane_block", [
+    (256, 128, 64, 128),
+    (64, 256, 33, 128),     # multi-block grid, odd T
+    (17, 128, 128, 64),     # non-pow2 alphabet, smaller block
+    (2, 128, 16, 128),      # binary alphabet
+])
+def test_encode_kernel_bit_exact(k, lanes, t, lane_block):
+    tbl, syms = _case(k * 7 + t, k, lanes, t)
+    got = ops.rans_encode(syms, tbl, lane_block=lane_block)
+    want = ref.rans_encode_ref(syms, tbl)
+    np.testing.assert_array_equal(np.asarray(got.start),
+                                  np.asarray(want.start))
+    np.testing.assert_array_equal(np.asarray(got.buf), np.asarray(want.buf))
+    np.testing.assert_array_equal(np.asarray(got.length),
+                                  np.asarray(want.length))
+
+
+@pytest.mark.parametrize("in_dtype", [jnp.float32, jnp.bfloat16, jnp.float16])
+def test_encode_kernel_prob_dtypes(in_dtype):
+    tbl, syms = _case(5, 32, 128, 40, dtype=in_dtype)
+    got = ops.rans_encode(syms, tbl)
+    want = ref.rans_encode_ref(syms, tbl)
+    np.testing.assert_array_equal(np.asarray(got.buf), np.asarray(want.buf))
+
+
+def test_encode_kernel_skewed():
+    k, lanes, t = 256, 128, 100
+    rng = np.random.default_rng(2)
+    p = np.full(k, 1e-8)
+    p[3] = 1.0
+    tbl = spc.tables_from_probs(jnp.asarray(p / p.sum(), jnp.float32))
+    syms = jnp.asarray(
+        np.where(rng.random((lanes, t)) < 0.97, 3,
+                 rng.integers(0, k, (lanes, t))), jnp.int32)
+    got = ops.rans_encode(syms, tbl)
+    want = ref.rans_encode_ref(syms, tbl)
+    np.testing.assert_array_equal(np.asarray(got.buf), np.asarray(want.buf))
+
+
+# ---------------------------------------------------------------------------
+# rans_decode kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k,lanes,t,use_pred", [
+    (256, 128, 64, False),
+    (256, 128, 64, True),
+    (40, 256, 50, True),
+    (2, 128, 31, False),
+])
+def test_decode_kernel_roundtrip(k, lanes, t, use_pred):
+    tbl, syms = _case(k + lanes + t, k, lanes, t)
+    enc = coder.encode(syms, tbl)
+    got, _ = ops.rans_decode(enc, t, tbl, use_pred=use_pred)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(syms))
+
+
+def test_decode_kernel_probes_match_core():
+    """The kernel's probe accounting must equal the core decoder's (the
+    Fig. 4(b) metric is implementation-independent)."""
+    k, lanes, t = 256, 128, 128
+    rng = np.random.default_rng(9)
+    steps = rng.integers(-3, 4, (lanes, t))
+    syms = np.clip(128 + np.cumsum(steps, axis=1), 0, k - 1)
+    tbl = jax.tree.map(jnp.asarray, spc.tables_from_counts_np(
+        np.bincount(syms.ravel(), minlength=k)))
+    enc = coder.encode(jnp.asarray(syms), tbl)
+    for use_pred in (False, True):
+        got, g_avg = ops.rans_decode(enc, t, tbl, use_pred=use_pred)
+        want, w_avg = ref.rans_decode_ref(enc, t, tbl, use_pred=use_pred)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        assert abs(float(g_avg) - float(w_avg)) < 1e-5
+    # prediction must help on this correlated data
+    _, base = ops.rans_decode(enc, t, tbl, use_pred=False)
+    _, guided = ops.rans_decode(enc, t, tbl, use_pred=True)
+    assert float(guided) < 0.75 * float(base)
+
+
+# ---------------------------------------------------------------------------
+# spc_quantize kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,k,conc", [
+    (8, 256, 0.3),
+    (16, 64, 2.0),
+    (8, 300, 0.1),   # non-pow2 K
+])
+def test_spc_kernel_matches_ref(b, k, conc):
+    rng = np.random.default_rng(b * k)
+    probs = jnp.asarray(rng.dirichlet(np.full(k, conc), size=b), jnp.float32)
+    got = np.asarray(ops.spc_quantize_tables(probs).freq)
+    want = np.asarray(ref.spc_quantize_ref(probs))
+    np.testing.assert_array_equal(got, want)
+    assert (got.sum(-1) == 1 << C.PROB_BITS).all()
+
+
+def test_spc_kernel_pathological_rows():
+    total = 1 << C.PROB_BITS
+    k = 128
+    rows = np.stack([
+        np.full(k, 1.0 / k),
+        np.r_[1.0, np.zeros(k - 1)],
+        np.r_[np.full(k - 1, 1e-9), [1.0]],
+        np.full(k, 1 / 3),                # unnormalized on purpose
+    ] * 2)
+    got = np.asarray(ops.spc_quantize_tables(
+        jnp.asarray(rows, jnp.float32), batch_block=8).freq)
+    want = np.asarray(ref.spc_quantize_ref(jnp.asarray(rows, jnp.float32)))
+    np.testing.assert_array_equal(got, want)
+    assert (got.sum(-1) == total).all() and got.min() >= 1
+
+
+def test_spc_kernel_end_to_end_coding():
+    """Kernel-built tables must drive a bit-exact encode/decode roundtrip."""
+    rng = np.random.default_rng(77)
+    k, lanes, t = 64, 128, 64
+    probs = jnp.asarray(rng.dirichlet(np.ones(k), size=8), jnp.float32)
+    tbl_all = ops.spc_quantize_tables(probs)
+    tbl = jax.tree.map(lambda a: a[0], tbl_all)
+    syms = jnp.asarray(rng.integers(0, k, (lanes, t)), jnp.int32)
+    enc = ops.rans_encode(syms, tbl)
+    dec, _ = ops.rans_decode(enc, t, tbl)
+    np.testing.assert_array_equal(np.asarray(dec), np.asarray(syms))
