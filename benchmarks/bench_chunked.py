@@ -1,0 +1,89 @@
+"""Chunked streaming codec throughput vs. chunk size and lane count.
+
+    PYTHONPATH=src python -m benchmarks.bench_chunked [--out BENCH_chunked.json]
+
+Sweeps the chunk-size x lane-count grid through encode_chunked /
+decode_chunked (the shard_map placement when more than one device is
+visible, the vmap path otherwise) and reports Msym/s plus the per-chunk
+flush overhead in bits/symbol.  Standalone runs emit ``BENCH_chunked.json``
+(a list of point records); ``main(emit)`` plugs into benchmarks.run.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import coder, spc
+from repro.data.pipeline import image_rows
+from repro.parallel import chunked as pchunked
+
+
+def _time(fn, *args):
+    out = fn(*args)                      # compile + warm
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    out = fn(*args)
+    jax.block_until_ready(out)
+    return time.perf_counter() - t0
+
+
+def run(t: int = 2048, chunk_sizes=(128, 512, 2048), lane_counts=(8, 64, 256),
+        seed: int = 0) -> list[dict]:
+    counts = np.bincount(image_rows(8, 4096, seed=seed).ravel(),
+                         minlength=256)
+    tbl = jax.tree.map(jnp.asarray, spc.tables_from_counts_np(counts))
+    mesh = pchunked.chunk_mesh() if len(jax.devices()) > 1 else None
+    points = []
+    for lanes in lane_counts:
+        rows = jnp.asarray(image_rows(lanes, t, seed=seed), jnp.int32)
+        mono = coder.encode(rows, tbl)
+        mono_bits = float(np.asarray(mono.length).sum()) * 8 / (lanes * t)
+        for cs in chunk_sizes:
+            enc = pchunked.encode_chunked(rows, tbl, cs, mesh=mesh)
+            dt_enc = _time(
+                lambda r: pchunked.encode_chunked(r, tbl, cs, mesh=mesh),
+                rows)
+            dt_dec = _time(
+                lambda e: pchunked.decode_chunked(e, t, tbl, cs,
+                                                  mesh=mesh)[0], enc)
+            bits = float(np.asarray(enc.length).sum()) * 8 / (lanes * t)
+            points.append({
+                "name": f"chunked_l{lanes}_c{cs}",
+                "lanes": lanes,
+                "chunk_size": cs,
+                "n_symbols": t,
+                "n_chunks": coder.num_chunks(t, cs),
+                "encode_Msym_s": lanes * t / dt_enc / 1e6,
+                "decode_Msym_s": lanes * t / dt_dec / 1e6,
+                "bits_per_symbol": bits,
+                "flush_overhead_bits": bits - mono_bits,
+                "devices": len(jax.devices()),
+            })
+    return points
+
+
+def main(emit):
+    for p in run(t=1024, chunk_sizes=(128, 1024), lane_counts=(8, 64)):
+        emit(f"{p['name']}_enc_Msym_s", p["encode_Msym_s"],
+             f"decode {p['decode_Msym_s']:.1f} Msym/s, "
+             f"+{p['flush_overhead_bits']:.3f} bits flush overhead")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_chunked.json")
+    args = ap.parse_args()
+    pts = run()
+    with open(args.out, "w") as f:
+        json.dump(pts, f, indent=2)
+    for p in pts:
+        print(f"{p['name']}: enc {p['encode_Msym_s']:.1f} "
+              f"dec {p['decode_Msym_s']:.1f} Msym/s "
+              f"({p['bits_per_symbol']:.3f} bits/sym)")
+    print(f"wrote {len(pts)} points -> {args.out}")

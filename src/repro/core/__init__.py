@@ -13,19 +13,23 @@ from repro.core import constants
 from repro.core.spc import (TableSet, build_tables, quantize_probs,
                             tables_from_logits, tables_from_probs, decode_lut,
                             store_bf16)
-from repro.core.coder import (EncState, DecState, EncodedLanes, encode,
-                              decode, encode_put, decode_get, encoder_init,
+from repro.core.coder import (EncState, DecState, EncodedLanes, ChunkedLanes,
+                              encode, decode, encode_chunked, decode_chunked,
+                              encode_put, decode_get, encoder_init,
                               encoder_flush, decoder_init, find_symbol,
-                              umulhi32, barrett_div, default_cap)
+                              umulhi32, barrett_div, default_cap, num_chunks,
+                              chunk_lengths, chunk_encoded)
 from repro.core.predictors import (NeighborAverage, LastValue, ZeroPredictor,
                                    Prediction, model_topk_candidates)
 
 __all__ = [
     "constants", "TableSet", "build_tables", "quantize_probs",
     "tables_from_logits", "tables_from_probs", "decode_lut", "store_bf16",
-    "EncState", "DecState", "EncodedLanes", "encode", "decode", "encode_put",
-    "decode_get", "encoder_init", "encoder_flush", "decoder_init",
-    "find_symbol", "umulhi32", "barrett_div", "default_cap",
+    "EncState", "DecState", "EncodedLanes", "ChunkedLanes", "encode",
+    "decode", "encode_chunked", "decode_chunked", "encode_put", "decode_get",
+    "encoder_init", "encoder_flush", "decoder_init", "find_symbol",
+    "umulhi32", "barrett_div", "default_cap", "num_chunks", "chunk_lengths",
+    "chunk_encoded",
     "NeighborAverage", "LastValue", "ZeroPredictor", "Prediction",
     "model_topk_candidates",
 ]

@@ -1,15 +1,41 @@
-"""Multi-lane bitstream container (host-side pack/unpack).
+"""Multi-lane bitstream containers (host-side pack/unpack).
 
 The RAS bitstream is per-lane independent (the fabric's lanes never share
-coder state — Sec. III), so the container is simply:
+coder state — Sec. III).  Two wire formats exist:
 
-    magic(4) | version(1) | prob_bits(1) | reserved(2)
-    | lanes(u32) | n_symbols(u32)
+**Container v1** (``RAS1``) — one monolithic stream per lane::
+
+    magic "RAS1"(4) | version u8 = 1 | prob_bits u8 | reserved u16
+    | lanes u32 | n_symbols u32
     | per-lane length (u32 * lanes)
-    | concatenated lane payloads
+    | concatenated lane payloads (lane-major)
 
-Pack/unpack are numpy-only; the device-side representation is
-``coder.EncodedLanes`` (padded (lanes, cap) uint8 + start/length).
+**Container v2** (``RAS2``) — the chunked streaming format.  The payload is
+cut into fixed-size symbol chunks; every (chunk, lane) cell is a complete
+standalone rANS stream with its own flush, so chunks decode independently,
+in parallel, and in any order (the interleaved-ANS construction).  Layout::
+
+    header (24 bytes):
+        magic "RAS2"(4) | version u8 = 2 | prob_bits u8 | reserved u16
+        | lanes u32 | n_symbols u32 | chunk_size u32 | n_chunks u32
+    chunk index table (12 bytes per cell, chunk-major then lane):
+        offset u64   -- byte offset of this cell's stream from payload base
+        length u32   -- byte length of this cell's stream
+    payload:
+        concatenated (chunk, lane) streams, chunk-major then lane, each a
+        self-delimiting rANS stream (4-byte big-endian state header first)
+
+``n_chunks = ceil(n_symbols / chunk_size)``; the final chunk covers the
+ragged tail ``n_symbols - (n_chunks - 1) * chunk_size`` symbols.  Offsets
+are stored explicitly (though derivable from lengths) so a reader can seek
+to any (chunk, lane) cell in O(1) — random access into the compressed
+stream, chunk-granular.
+
+Pack/unpack are numpy-only; the device-side representations are
+``coder.EncodedLanes`` (padded (lanes, cap) uint8 + start/length) and
+``coder.ChunkedLanes`` ((n_chunks, lanes, cap) + per-cell start/length).
+``unpack`` keeps full back-compat for v1 blobs; ``unpack_chunked`` reads
+both versions (a v1 blob is presented as a single-chunk stream).
 """
 
 from __future__ import annotations
@@ -22,7 +48,12 @@ import numpy as np
 from repro.core import constants as C
 
 MAGIC = b"RAS1"
+MAGIC_V2 = b"RAS2"
 _HEADER = struct.Struct("<4sBBHII")
+_HEADER_V2 = struct.Struct("<4sBBHIIII")
+_INDEX_V2 = struct.Struct("<QI")
+# the same 12-byte index cell as a numpy record, for vectorized table I/O
+_INDEX_V2_DT = np.dtype([("offset", "<u8"), ("length", "<u4")])
 
 
 class Container(NamedTuple):
@@ -32,9 +63,17 @@ class Container(NamedTuple):
     n_symbols: int
 
 
+class ChunkedContainer(NamedTuple):
+    prob_bits: int
+    lanes: int
+    n_symbols: int
+    chunk_size: int
+    n_chunks: int
+
+
 def pack(enc_buf: np.ndarray, start: np.ndarray, length: np.ndarray,
          n_symbols: int, prob_bits: int = C.PROB_BITS) -> bytes:
-    """EncodedLanes arrays (host numpy) -> container bytes."""
+    """EncodedLanes arrays (host numpy) -> container v1 bytes."""
     enc_buf = np.asarray(enc_buf, np.uint8)
     start = np.asarray(start, np.int64)
     length = np.asarray(length, np.int64)
@@ -48,12 +87,15 @@ def pack(enc_buf: np.ndarray, start: np.ndarray, length: np.ndarray,
 
 
 def unpack(blob: bytes) -> tuple[np.ndarray, np.ndarray, Container]:
-    """Container bytes -> ((lanes, cap) uint8 padded buf, start, meta).
+    """Container v1 bytes -> ((lanes, cap) uint8 padded buf, start, meta).
 
     The returned buffer is forward-readable from ``start`` per lane, i.e.
-    directly consumable by ``coder.decoder_init``.
+    directly consumable by ``coder.decoder_init``.  v2 blobs are chunked —
+    read them with :func:`unpack_chunked`.
     """
     magic, version, prob_bits, _, lanes, n_symbols = _HEADER.unpack_from(blob)
+    if magic == MAGIC_V2:
+        raise ValueError("chunked container v2: use bitstream.unpack_chunked")
     if magic != MAGIC:
         raise ValueError("not a RAS container")
     if version != 1:
@@ -73,7 +115,104 @@ def unpack(blob: bytes) -> tuple[np.ndarray, np.ndarray, Container]:
     return buf, start, meta
 
 
+def _span_indices(start: np.ndarray, length: np.ndarray,
+                  row_stride: int) -> np.ndarray:
+    """Flat indices of every cell's ``[start, start+length)`` span in a
+    dense ``(cells, row_stride)`` buffer, cell-major.
+
+    O(total bytes) with no ``(cells, cap)`` intermediates.  With
+    ``row_stride=0`` the rows collapse and the result indexes a flat byte
+    region at per-cell ``start`` offsets (the payload-side gather).
+    """
+    start = np.asarray(start, np.int64)
+    length = np.asarray(length, np.int64)
+    total = int(length.sum())
+    excl = np.cumsum(length) - length          # exclusive prefix
+    within = np.arange(total, dtype=np.int64) - np.repeat(excl, length)
+    rows = np.repeat(np.arange(length.size, dtype=np.int64), length)
+    return rows * row_stride + np.repeat(start, length) + within
+
+
+def pack_chunked(buf: np.ndarray, start: np.ndarray, length: np.ndarray,
+                 chunk_size: int, n_symbols: int,
+                 prob_bits: int = C.PROB_BITS) -> bytes:
+    """ChunkedLanes arrays (host numpy) -> container v2 bytes.
+
+    ``buf`` is (n_chunks, lanes, cap); cell (c, l) holds its stream at
+    ``buf[c, l, start[c, l] : start[c, l] + length[c, l]]``.
+    """
+    buf = np.asarray(buf, np.uint8)
+    start = np.asarray(start, np.int64)
+    length = np.asarray(length, np.int64)
+    n_chunks, lanes = buf.shape[:2]
+    out = bytearray()
+    out += _HEADER_V2.pack(MAGIC_V2, 2, prob_bits, 0, lanes, n_symbols,
+                           chunk_size, n_chunks)
+    # explicit (offset, length) index for O(1) chunk/lane random access;
+    # one vectorized record write, not a per-cell struct.pack loop
+    flat_len = length.reshape(-1)
+    index = np.empty(flat_len.size, _INDEX_V2_DT)
+    index["offset"] = np.concatenate([[0], np.cumsum(flat_len)[:-1]])
+    index["length"] = flat_len
+    out += index.tobytes()
+    # payload: one O(total-bytes) gather of every cell's span
+    idx = _span_indices(start.reshape(-1), flat_len, buf.shape[2])
+    out += buf.reshape(-1)[idx].tobytes()
+    return bytes(out)
+
+
+def unpack_chunked(blob: bytes) -> tuple[np.ndarray, np.ndarray,
+                                         ChunkedContainer]:
+    """Container bytes (v2 or v1) -> ((n_chunks, lanes, cap) buf, start, meta).
+
+    Streams are right-aligned per cell (``start = cap - length``) so each
+    chunk slice is directly consumable by ``coder.decoder_init``.  v1 blobs
+    are presented as a single chunk of ``n_symbols`` symbols — the
+    back-compat path for pre-chunking archives.
+    """
+    magic = blob[:4]
+    if magic == MAGIC:
+        buf, start, meta = unpack(blob)
+        return (buf[None], start[None].astype(np.int32),
+                ChunkedContainer(prob_bits=meta.prob_bits, lanes=meta.lanes,
+                                 n_symbols=meta.n_symbols,
+                                 chunk_size=max(meta.n_symbols, 1),
+                                 n_chunks=1))
+    if magic != MAGIC_V2:
+        raise ValueError("not a RAS container")
+    (magic, version, prob_bits, _, lanes, n_symbols, chunk_size,
+     n_chunks) = _HEADER_V2.unpack_from(blob)
+    if version != 2:
+        raise ValueError(f"unsupported container version {version}")
+    off = _HEADER_V2.size
+    cells = n_chunks * lanes
+    index = np.frombuffer(blob, _INDEX_V2_DT, cells, off)
+    offsets = index["offset"].astype(np.int64)
+    length = index["length"].astype(np.int64)
+    base = off + cells * _INDEX_V2.size
+    cap = int(length.max()) if cells else 0
+    buf = np.zeros((n_chunks, lanes, cap), np.uint8)
+    start = (cap - length.reshape(n_chunks, lanes)).astype(np.int32)
+    # right-align every cell's span with one vectorized gather through the
+    # index's per-cell offsets (writers may order/pad payloads freely)
+    payload = np.frombuffer(blob, np.uint8, len(blob) - base, base)
+    dest = _span_indices(cap - length, length, cap)
+    src = _span_indices(offsets, length, 0)
+    buf.reshape(-1)[dest] = payload[src]
+    meta = ChunkedContainer(prob_bits=prob_bits, lanes=lanes,
+                            n_symbols=n_symbols, chunk_size=chunk_size,
+                            n_chunks=n_chunks)
+    return buf, start, meta
+
+
 def compressed_size(length: np.ndarray) -> int:
-    """Total container size in bytes for reporting compression ratios."""
+    """Total v1 container size in bytes for reporting compression ratios."""
     lanes = len(length)
     return _HEADER.size + 4 * lanes + int(np.sum(length))
+
+
+def compressed_size_chunked(length: np.ndarray) -> int:
+    """Total v2 container size: header + index table + payload bytes."""
+    length = np.asarray(length)
+    return (_HEADER_V2.size + _INDEX_V2.size * length.size
+            + int(np.sum(length)))

@@ -13,7 +13,8 @@ This is the paper's Fig. 2 middle block re-derived for a SIMD machine:
     one mulhi, one shift, one madd;
   * **unified div/mod datapath** (Sec. IV-A): division is Barrett
     multiply-high against the SPC-precomputed reciprocal — exact for every
-    state < 2**31 (hypothesis-verified), no integer divide on the hot path;
+    state < 2**31 (property-swept in tests), no integer divide on the hot
+    path;
   * **byte-level renormalization**: the data-dependent while-loop is a fixed
     ``MAX_RENORM_STEPS``(=2)-stage masked pipeline (provably sufficient,
     see core/constants.py) — the TPU analogue of the paper's staged renorm;
@@ -236,6 +237,151 @@ def encode(symbols: jax.Array, tbl: TableSet,
     st = encoder_flush(st)
     return EncodedLanes(buf=st.buf, start=st.ptr,
                         length=jnp.asarray(cap, _I32) - st.ptr)
+
+
+# ---------------------------------------------------------------------------
+# chunked streaming encode (independent per-chunk flush -> parallel decode)
+# ---------------------------------------------------------------------------
+
+class ChunkedLanes(NamedTuple):
+    """Chunked multi-lane streams (the streaming container's device form).
+
+    Chunk ``c`` of lane ``l`` occupies
+    ``buf[c, l, start[c, l] : start[c, l] + length[c, l]]`` and is a complete
+    standalone rANS stream (own 4-byte state header, own flush): byte-for-byte
+    identical to ``encode`` of that chunk's symbols alone.  Chunks therefore
+    decode independently and in any order — the handle the ``parallel``
+    package shards across devices.
+    """
+
+    buf: jax.Array      # (n_chunks, lanes, cap) uint8
+    start: jax.Array    # (n_chunks, lanes) int32
+    length: jax.Array   # (n_chunks, lanes) int32
+
+
+def num_chunks(n_symbols: int, chunk_size: int) -> int:
+    """Chunk count covering ``n_symbols`` (last chunk may be ragged)."""
+    if chunk_size <= 0:
+        raise ValueError(f"chunk_size must be positive, got {chunk_size}")
+    return -(-n_symbols // chunk_size)
+
+
+def chunk_lengths(n_symbols: int, chunk_size: int) -> list[int]:
+    """Per-chunk symbol counts; all ``chunk_size`` except a ragged tail."""
+    n = num_chunks(n_symbols, chunk_size)
+    return [min(chunk_size, n_symbols - c * chunk_size) for c in range(n)]
+
+
+def is_per_position(tbl: TableSet, t_len: int) -> bool:
+    """True when the TableSet carries a leading per-position T dim."""
+    return tbl.freq.ndim in (2, 3) and tbl.freq.shape[0] == t_len
+
+
+def slice_tables(tbl: TableSet, t0: int, t1: int) -> TableSet:
+    """Per-position table rows for the position range [t0, t1)."""
+    return jax.tree.map(lambda a: a[t0:t1], tbl)
+
+
+def chunk_tables(tbl: TableSet, n_full: int, chunk_size: int) -> TableSet:
+    """Per-position tables -> chunk-major ``(n_full, chunk_size, ...)`` form
+    (the layout both the vmap and shard_map chunk paths map over)."""
+    return jax.tree.map(
+        lambda a: a[:n_full * chunk_size].reshape(
+            (n_full, chunk_size) + a.shape[1:]), tbl)
+
+
+def chunk_encoded(enc: ChunkedLanes, c) -> EncodedLanes:
+    """View chunk ``c`` as a standalone :class:`EncodedLanes`."""
+    return EncodedLanes(buf=enc.buf[c], start=enc.start[c],
+                        length=enc.length[c])
+
+
+def encode_chunked(symbols: jax.Array, tbl: TableSet, chunk_size: int,
+                   cap: int | None = None) -> ChunkedLanes:
+    """Encode ``(lanes, T)`` as independent fixed-size chunks.
+
+    Every chunk gets its own flush (4-byte state header) so the produced
+    streams decode independently — the interleaved-ANS construction that
+    turns the LIFO coder into a parallel/streaming one.  Bit-exactness
+    contract: chunk ``c``'s bytes equal ``encode(symbols[:, c*S:(c+1)*S],
+    tbl_c)`` exactly, where ``tbl_c`` is the matching per-position table
+    slice (or the shared table).  The final chunk may be ragged
+    (``T % chunk_size`` symbols); all chunks share one ``cap`` so the result
+    is a single dense ``(n_chunks, lanes, cap)`` buffer.
+    """
+    lanes, t_len = symbols.shape
+    n_total = num_chunks(t_len, chunk_size)
+    n_full, tail_len = divmod(t_len, chunk_size)
+    cap = default_cap(min(chunk_size, t_len)) if cap is None else cap
+    per_position = is_per_position(tbl, t_len)
+
+    parts = []
+    if n_full:
+        full = symbols[:, :n_full * chunk_size]
+        full = full.reshape(lanes, n_full, chunk_size).swapaxes(0, 1)
+        if per_position:
+            enc = jax.vmap(lambda s, tb: encode(s, tb, cap=cap))(
+                full, chunk_tables(tbl, n_full, chunk_size))
+        else:
+            enc = jax.vmap(lambda s: encode(s, tbl, cap=cap))(full)
+        parts.append(enc)
+    if tail_len:
+        tbl_tail = (slice_tables(tbl, n_full * chunk_size, t_len)
+                    if per_position else tbl)
+        enc_tail = encode(symbols[:, n_full * chunk_size:], tbl_tail, cap=cap)
+        parts.append(jax.tree.map(lambda a: a[None], enc_tail))
+    out = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *parts)
+    assert out.buf.shape[0] == n_total
+    return ChunkedLanes(buf=out.buf, start=out.start, length=out.length)
+
+
+def decode_chunked(chunks: ChunkedLanes, n_symbols: int, tbl: TableSet,
+                   chunk_size: int, prob_bits: int = C.PROB_BITS,
+                   use_lut: bool = False):
+    """Decode a chunked stream; returns (symbols (lanes, T), avg_probes).
+
+    Full-size chunks decode in parallel (vmap over the chunk axis — see
+    ``repro.parallel.chunked`` for the multi-device shard_map version); the
+    ragged tail, if any, decodes standalone.  Bit-exact inverse of
+    :func:`encode_chunked`.
+    """
+    n_total = num_chunks(n_symbols, chunk_size)
+    if chunks.buf.shape[0] != n_total:
+        raise ValueError(
+            f"stream has {chunks.buf.shape[0]} chunks but n_symbols="
+            f"{n_symbols} at chunk_size={chunk_size} implies {n_total}; "
+            "decode with the chunk_size the stream was encoded with")
+    n_full, tail_len = divmod(n_symbols, chunk_size)
+    per_position = is_per_position(tbl, n_symbols)
+
+    syms, probe_sums = [], []
+    if n_full:
+        sub = jax.tree.map(lambda a: a[:n_full], chunks)
+        if per_position:
+            dec = jax.vmap(
+                lambda e, tb: decode(EncodedLanes(*e), chunk_size, tb,
+                                     prob_bits, use_lut=use_lut))(
+                sub, chunk_tables(tbl, n_full, chunk_size))
+        else:
+            dec = jax.vmap(
+                lambda e: decode(EncodedLanes(*e), chunk_size, tbl,
+                                 prob_bits, use_lut=use_lut))(sub)
+        sym_full, probes_full = dec     # (n_full, lanes, S), (n_full,)
+        lanes = sym_full.shape[1]
+        syms.append(sym_full.swapaxes(0, 1).reshape(
+            lanes, n_full * chunk_size))
+        probe_sums.append(jnp.sum(probes_full) * chunk_size)
+    if tail_len:
+        tbl_tail = (slice_tables(tbl, n_full * chunk_size, n_symbols)
+                    if per_position else tbl)
+        sym_tail, probes_tail = decode(
+            chunk_encoded(chunks, n_full), tail_len, tbl_tail, prob_bits,
+            use_lut=use_lut)
+        syms.append(sym_tail)
+        probe_sums.append(probes_tail * tail_len)
+    out = jnp.concatenate(syms, axis=1)
+    avg_probes = sum(probe_sums) / n_symbols
+    return out, avg_probes
 
 
 # ---------------------------------------------------------------------------

@@ -8,7 +8,7 @@ serves as the oracle for:
 
   * the vectorized JAX multi-lane coder (core/coder.py),
   * the Pallas kernels (kernels/ref.py validates against this),
-  * the hypothesis property tests.
+  * the seeded property sweeps in tests/ (tests/_prop.py).
 
 Encode follows Eq. (1):  s' = floor(s/f) * 2**n + (s mod f) + C(x),
 processing symbols in *reverse* (rANS is LIFO) and emitting renorm bytes

@@ -16,7 +16,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import constants as C
-from repro.core.coder import EncodedLanes, default_cap
+from repro.core.coder import (ChunkedLanes, EncodedLanes, chunk_lengths,
+                              default_cap)
 from repro.core.spc import TableSet, build_tables
 from repro.kernels.rans_decode import rans_decode_lanes
 from repro.kernels.rans_encode import rans_encode_records
@@ -70,6 +71,31 @@ def rans_encode(symbols: jax.Array, tbl: TableSet,
         tbl.cmpl, prob_bits=prob_bits, lane_block=lane_block,
         interpret=interpret)
     return compact_records(rec_b, rec_m, states[0], cap)
+
+
+def rans_encode_chunked(symbols: jax.Array, tbl: TableSet, chunk_size: int,
+                        cap: int | None = None,
+                        prob_bits: int = C.PROB_BITS,
+                        lane_block: int = 128,
+                        interpret: bool = True) -> ChunkedLanes:
+    """Kernel-backed chunked encode (bit-exact vs. coder.encode_chunked).
+
+    Runs the records kernel once per chunk and reuses :func:`compact_records`
+    with the chunk-aware cap (``default_cap(chunk_size)`` covers the worst
+    case of every chunk, ragged tail included, so all chunks land in one
+    dense ``(n_chunks, lanes, cap)`` buffer).  Shared (static) tables only —
+    the kernel holds one table set in VMEM.
+    """
+    lanes, t_len = symbols.shape
+    cap = default_cap(min(chunk_size, t_len)) if cap is None else cap
+    parts = []
+    for c, n in enumerate(chunk_lengths(t_len, chunk_size)):
+        chunk = symbols[:, c * chunk_size:c * chunk_size + n]
+        parts.append(rans_encode(chunk, tbl, cap=cap, prob_bits=prob_bits,
+                                 lane_block=lane_block, interpret=interpret))
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *parts)
+    return ChunkedLanes(buf=stacked.buf, start=stacked.start,
+                        length=stacked.length)
 
 
 def rans_decode(enc: EncodedLanes, n_symbols: int, tbl: TableSet,

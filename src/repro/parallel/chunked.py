@@ -1,0 +1,162 @@
+"""Chunk x lane placement of the chunked rANS codec on a device mesh.
+
+The chunked streams of ``core.coder.encode_chunked`` are independent by
+construction (every chunk has its own flush), so the chunk axis is an
+embarrassingly-parallel device axis: this module places the full-size
+chunks of a ``(n_chunks, lanes, cap)`` stream on a 1-D ``("chunks",)``
+mesh with ``shard_map`` — each device runs the vmap'd single-chunk
+coder over its local chunk slab, no collectives at all (the multi-device
+generalization of the paper's multi-lane fabric, Sec. III).
+
+Fallback contract: with one device, a ``None`` mesh, or a chunk count not
+divisible by the mesh size, both entry points degrade to the plain vmap
+path in ``core.coder`` — bit-exactly the same streams/symbols either way
+(the tier-1 differential test pins shard_map == vmap symbol-for-symbol).
+The ragged tail chunk, when present, is always coded on the default device.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.core import coder, constants as C
+from repro.core.coder import ChunkedLanes, EncodedLanes
+from repro.core.spc import TableSet
+
+
+def chunk_mesh(devices=None) -> Mesh:
+    """1-D ``("chunks",)`` mesh over ``devices`` (default: all devices)."""
+    devices = jax.devices() if devices is None else list(devices)
+    return Mesh(np.asarray(devices), ("chunks",))
+
+
+def _usable(mesh: Mesh | None, n_full: int) -> bool:
+    return (mesh is not None and "chunks" in mesh.axis_names
+            and n_full > 0 and n_full % mesh.shape["chunks"] == 0)
+
+
+def _chunked_table_specs(tbl: TableSet, sharded: bool):
+    spec = P("chunks") if sharded else P()
+    return jax.tree.map(lambda _: spec, tbl)
+
+
+def encode_chunked(symbols: jax.Array, tbl: TableSet, chunk_size: int,
+                   mesh: Mesh | None = None,
+                   cap: int | None = None) -> ChunkedLanes:
+    """Device-parallel :func:`core.coder.encode_chunked`.
+
+    Full chunks are sharded over the mesh's ``chunks`` axis; per-position
+    tables (leading T dim) are split chunk-major and ride on the same axis.
+    Falls back to the single-device vmap path whenever the mesh cannot
+    evenly take the chunk axis.
+    """
+    lanes, t_len = symbols.shape
+    coder.num_chunks(t_len, chunk_size)     # validates chunk_size > 0
+    n_full, tail_len = divmod(t_len, chunk_size)
+    cap = coder.default_cap(min(chunk_size, t_len)) if cap is None else cap
+    if not _usable(mesh, n_full):
+        return coder.encode_chunked(symbols, tbl, chunk_size, cap=cap)
+
+    per_position = coder.is_per_position(tbl, t_len)
+    full = symbols[:, :n_full * chunk_size]
+    full = full.reshape(lanes, n_full, chunk_size).swapaxes(0, 1)
+
+    out_specs = EncodedLanes(buf=P("chunks"), start=P("chunks"),
+                             length=P("chunks"))
+    if per_position:
+        tbl_full = coder.chunk_tables(tbl, n_full, chunk_size)
+
+        def body(sym_loc, tbl_loc):
+            return jax.vmap(lambda s, tb: coder.encode(s, tb, cap=cap))(
+                sym_loc, tbl_loc)
+
+        enc = shard_map(body, mesh=mesh,
+                        in_specs=(P("chunks"),
+                                  _chunked_table_specs(tbl, sharded=True)),
+                        out_specs=out_specs)(full, tbl_full)
+    else:
+        def body(sym_loc, tbl_rep):
+            return jax.vmap(lambda s: coder.encode(s, tbl_rep, cap=cap))(
+                sym_loc)
+
+        enc = shard_map(body, mesh=mesh,
+                        in_specs=(P("chunks"),
+                                  _chunked_table_specs(tbl, sharded=False)),
+                        out_specs=out_specs)(full, tbl)
+    enc = ChunkedLanes(buf=enc.buf, start=enc.start, length=enc.length)
+
+    if tail_len:
+        tbl_tail = (coder.slice_tables(tbl, n_full * chunk_size, t_len)
+                    if per_position else tbl)
+        tail = coder.encode(symbols[:, n_full * chunk_size:], tbl_tail,
+                            cap=cap)
+        enc = jax.tree.map(
+            lambda a, b: jnp.concatenate([a, b[None]], axis=0), enc,
+            ChunkedLanes(buf=tail.buf, start=tail.start, length=tail.length))
+    return enc
+
+
+def decode_chunked(chunks: ChunkedLanes, n_symbols: int, tbl: TableSet,
+                   chunk_size: int, mesh: Mesh | None = None,
+                   prob_bits: int = C.PROB_BITS, use_lut: bool = False):
+    """Device-parallel :func:`core.coder.decode_chunked`.
+
+    Returns (symbols (lanes, T), avg_probes) — bit-identical to the vmap
+    path regardless of mesh shape (chunks carry no cross-device state).
+    """
+    n_total = coder.num_chunks(n_symbols, chunk_size)
+    if chunks.buf.shape[0] != n_total:
+        raise ValueError(
+            f"stream has {chunks.buf.shape[0]} chunks but n_symbols="
+            f"{n_symbols} at chunk_size={chunk_size} implies {n_total}")
+    n_full, tail_len = divmod(n_symbols, chunk_size)
+    if not _usable(mesh, n_full):
+        return coder.decode_chunked(chunks, n_symbols, tbl, chunk_size,
+                                    prob_bits=prob_bits, use_lut=use_lut)
+
+    per_position = coder.is_per_position(tbl, n_symbols)
+    sub = jax.tree.map(lambda a: a[:n_full], chunks)
+    out_specs = (P("chunks"), P("chunks"))
+    if per_position:
+        tbl_full = coder.chunk_tables(tbl, n_full, chunk_size)
+
+        def body(enc_loc, tbl_loc):
+            return jax.vmap(
+                lambda e, tb: coder.decode(EncodedLanes(*e), chunk_size, tb,
+                                           prob_bits, use_lut=use_lut))(
+                enc_loc, tbl_loc)
+
+        sym_full, probes_full = shard_map(
+            body, mesh=mesh,
+            in_specs=(jax.tree.map(lambda _: P("chunks"), sub),
+                      _chunked_table_specs(tbl, sharded=True)),
+            out_specs=out_specs)(sub, tbl_full)
+    else:
+        def body(enc_loc, tbl_rep):
+            return jax.vmap(
+                lambda e: coder.decode(EncodedLanes(*e), chunk_size, tbl_rep,
+                                       prob_bits, use_lut=use_lut))(enc_loc)
+
+        sym_full, probes_full = shard_map(
+            body, mesh=mesh,
+            in_specs=(jax.tree.map(lambda _: P("chunks"), sub),
+                      _chunked_table_specs(tbl, sharded=False)),
+            out_specs=out_specs)(sub, tbl)
+
+    lanes = sym_full.shape[1]
+    syms = [sym_full.swapaxes(0, 1).reshape(lanes, n_full * chunk_size)]
+    probe_sums = [jnp.sum(probes_full) * chunk_size]
+    if tail_len:
+        tbl_tail = (coder.slice_tables(tbl, n_full * chunk_size, n_symbols)
+                    if per_position else tbl)
+        sym_tail, probes_tail = coder.decode(
+            coder.chunk_encoded(chunks, n_full), tail_len, tbl_tail,
+            prob_bits, use_lut=use_lut)
+        syms.append(sym_tail)
+        probe_sums.append(probes_tail * tail_len)
+    out = jnp.concatenate(syms, axis=1)
+    return out, sum(probe_sums) / n_symbols

@@ -110,6 +110,96 @@ def lm_decompress(params, cfg: ModelConfig, enc: coder.EncodedLanes,
 
 
 # ---------------------------------------------------------------------------
+# chunked streaming path: payloads longer than one coder buffer.  Encode
+# flushes every ``chunk_size`` symbols (chunks stay independently decodable
+# and shard across devices — repro.parallel.chunked); decompression walks the
+# chunks sequentially with the model cache carried across chunk boundaries,
+# so peak coder-buffer memory is O(chunk_size), not O(T).
+# ---------------------------------------------------------------------------
+
+class ChunkedCompressStats(NamedTuple):
+    chunks: coder.ChunkedLanes
+    chunk_size: int
+    n_symbols: int
+    bits_per_symbol: jax.Array
+    model_xent_bits: jax.Array
+
+
+def lm_compress_chunked(params, cfg: ModelConfig, tokens: jax.Array,
+                        chunk_size: int, prob_bits: int = C.PROB_BITS,
+                        mesh=None) -> ChunkedCompressStats:
+    """tokens (lanes, T) -> chunked multi-lane bitstream + stats.
+
+    Tables still come from one teacher-forced pass (the model cache spans
+    chunk boundaries — chunking changes the *coder* framing, never the
+    distributions), then the chunk x lane grid is encoded on ``mesh`` via
+    ``repro.parallel.chunked`` (vmap fallback on one device).
+    """
+    from repro.parallel.chunked import encode_chunked
+    lanes, t_len = tokens.shape
+    tables, xent_bits = collect_tables(params, cfg, tokens, prob_bits)
+    chunks = encode_chunked(tokens.astype(jnp.int32), tables, chunk_size,
+                            mesh=mesh)
+    bits = (jnp.sum(chunks.length.astype(jnp.float32)) * 8.0
+            / (lanes * t_len))
+    return ChunkedCompressStats(chunks=chunks, chunk_size=chunk_size,
+                                n_symbols=t_len, bits_per_symbol=bits,
+                                model_xent_bits=xent_bits)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "n", "prob_bits", "topk"))
+def _lm_decompress_chunk(params, cfg: ModelConfig, enc: coder.EncodedLanes,
+                         cache, tok, t0, n: int, prob_bits: int, topk: int):
+    """Decode one chunk (positions [t0, t0+n)) with carried model cache."""
+    dec0 = coder.decoder_init(enc)
+
+    def body(carry, t):
+        cache, dec, tok = carry
+        lg, cache = decode_step(params, cache, tok, t, cfg)
+        tbl = _step_tables(lg, cfg.vocab_size, prob_bits)
+        cands = model_topk_candidates(lg[:, :cfg.vocab_size], topk)
+        dec, sym, probes = coder.decode_get(dec, enc.buf, tbl, prob_bits,
+                                            candidates=cands)
+        return (cache, dec, sym[:, None].astype(jnp.int32)), (sym, probes)
+
+    (cache, _, tok), (symbols, probes) = jax.lax.scan(
+        body, (cache, dec0, tok), t0 + jnp.arange(n))
+    return cache, tok, symbols.T, jnp.sum(probes.astype(jnp.float32))
+
+
+def lm_decompress_chunked(params, cfg: ModelConfig,
+                          chunks: coder.ChunkedLanes, n_symbols: int,
+                          chunk_size: int, prob_bits: int = C.PROB_BITS,
+                          topk: int = 4):
+    """Chunked bitstream -> tokens (bit-exact inverse of lm_compress_chunked).
+
+    The rANS decoder re-initializes per chunk (each chunk is a standalone
+    stream); the model cache and fed-back token carry across chunks, so the
+    distribution sequence is float-identical to the monolithic path.  Only
+    one chunk's byte buffer is live at a time — the streaming-decode shape.
+    """
+    lanes = chunks.buf.shape[1]
+    n_total = coder.num_chunks(n_symbols, chunk_size)
+    if chunks.buf.shape[0] != n_total:
+        raise ValueError(
+            f"stream has {chunks.buf.shape[0]} chunks but n_symbols="
+            f"{n_symbols} at chunk_size={chunk_size} implies {n_total}")
+    cache = init_cache(cfg, lanes, n_symbols)
+    tok = jnp.full((lanes, 1), BOS, jnp.int32)
+    outs, probe_sum = [], jnp.float32(0)
+    for c, n in enumerate(coder.chunk_lengths(n_symbols, chunk_size)):
+        enc = coder.chunk_encoded(chunks, c)
+        cache, tok, sym, probes = _lm_decompress_chunk(
+            params, cfg, enc, cache, tok, jnp.int32(c * chunk_size), n=n,
+            prob_bits=prob_bits, topk=topk)
+        outs.append(sym)
+        probe_sum = probe_sum + probes
+    return (jnp.concatenate(outs, axis=1),
+            probe_sum / (lanes * n_symbols))
+
+
+# ---------------------------------------------------------------------------
 # static-table path (classic rANS with an empirical histogram) — the
 # "software rANS" rung of Fig. 1's algorithmic ladder, used by benchmarks.
 # ---------------------------------------------------------------------------

@@ -1,0 +1,42 @@
+"""Tiny vendored property-test substrate (replaces the hypothesis dep).
+
+The hermetic test environment has no ``hypothesis``; the four properties it
+used to drive are rewritten as deterministic seeded sweeps.  ``sweep``
+yields independently-seeded ``numpy.random.Generator`` draws derived from
+one root seed, so every run (and every CI machine) sees the identical case
+list — shrinking is traded for reproducibility, coverage counts stay the
+same as the old ``max_examples`` settings.
+"""
+
+from __future__ import annotations
+
+from typing import Iterator
+
+import numpy as np
+
+
+def sweep(seed: int, n: int) -> Iterator[np.random.Generator]:
+    """Yield ``n`` deterministic, independently-seeded Generators.
+
+    Each draw gets its own child Generator (spawned off the root seed) so
+    inserting or reordering draws inside one case never perturbs the
+    others — the property hypothesis's per-example RNG gave us.
+    """
+    root = np.random.SeedSequence(seed)
+    for child in root.spawn(n):
+        yield np.random.default_rng(child)
+
+
+def ints(rng: np.random.Generator, lo: int, hi: int, size=None):
+    """Inclusive-bounds integer draw (st.integers(lo, hi) semantics)."""
+    return rng.integers(lo, hi, size=size, endpoint=True)
+
+
+def floats(rng: np.random.Generator, lo: float, hi: float, size=None):
+    """Uniform float draw on [lo, hi] (st.floats(lo, hi) semantics)."""
+    return lo + (hi - lo) * rng.random(size)
+
+
+def seeds(seed: int, n: int) -> list[int]:
+    """n deterministic 31-bit seeds — for parametrizing whole test cases."""
+    return [int(ints(rng, 0, 2**31 - 1)) for rng in sweep(seed, n)]

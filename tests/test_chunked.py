@@ -1,0 +1,210 @@
+"""Chunked streaming codec: bit-exactness, containers, sharding, serving.
+
+Acceptance pins (ISSUE 1): every chunk's byte stream equals a standalone
+``coder.encode`` of that chunk; roundtrips hold for chunk sizes
+{1, 17, T, T+1} including ragged tails; v1 blobs still unpack; and the
+shard_map placement (single-device mesh) matches the vmap path
+symbol-for-symbol.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import bitstream, coder, spc
+from repro.parallel import chunked as pchunked
+
+T = 131           # prime-ish so every chunk size below exercises a ragged tail
+
+
+@pytest.fixture(scope="module")
+def case(rans_case):
+    tbl, syms = rans_case(60, k=64, lanes=3, t=T)
+    return tbl, jnp.asarray(syms, jnp.int32)
+
+
+@pytest.fixture(scope="module")
+def per_position_case():
+    rng = np.random.default_rng(61)
+    k, lanes = 32, 3
+    probs = rng.dirichlet(np.ones(k), size=T).astype(np.float32)
+    tbl = spc.tables_from_probs(jnp.asarray(probs))
+    syms = jnp.asarray(rng.integers(0, k, (lanes, T)), jnp.int32)
+    return tbl, syms
+
+
+# ---------------------------------------------------------------------------
+# bit-exactness: chunk == standalone encode; roundtrip across chunk sizes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("chunk_size", [1, 17, T, T + 1])
+def test_chunks_equal_standalone_encode(case, chunk_size):
+    tbl, syms = case
+    ch = coder.encode_chunked(syms, tbl, chunk_size)
+    cap = ch.buf.shape[-1]
+    assert ch.buf.shape[0] == coder.num_chunks(T, chunk_size)
+    for c, n in enumerate(coder.chunk_lengths(T, chunk_size)):
+        t0 = c * chunk_size
+        std = coder.encode(syms[:, t0:t0 + n], tbl, cap=cap)
+        got = coder.chunk_encoded(ch, c)
+        np.testing.assert_array_equal(np.asarray(got.buf),
+                                      np.asarray(std.buf))
+        np.testing.assert_array_equal(np.asarray(got.start),
+                                      np.asarray(std.start))
+        np.testing.assert_array_equal(np.asarray(got.length),
+                                      np.asarray(std.length))
+
+
+@pytest.mark.parametrize("chunk_size", [1, 17, T, T + 1])
+def test_chunked_roundtrip(case, chunk_size):
+    tbl, syms = case
+    ch = coder.encode_chunked(syms, tbl, chunk_size)
+    dec, probes = coder.decode_chunked(ch, T, tbl, chunk_size)
+    np.testing.assert_array_equal(np.asarray(dec), np.asarray(syms))
+    assert float(probes) > 0
+
+
+@pytest.mark.parametrize("chunk_size", [17, 64])
+def test_chunked_roundtrip_per_position(per_position_case, chunk_size):
+    """Neural-prior layout: per-position tables split chunk-major."""
+    tbl, syms = per_position_case
+    ch = coder.encode_chunked(syms, tbl, chunk_size)
+    dec, _ = coder.decode_chunked(ch, T, tbl, chunk_size)
+    np.testing.assert_array_equal(np.asarray(dec), np.asarray(syms))
+    # chunk bytes == standalone encode against the matching table slice
+    cap = ch.buf.shape[-1]
+    for c, n in enumerate(coder.chunk_lengths(T, chunk_size)):
+        t0 = c * chunk_size
+        tbl_c = jax.tree.map(lambda a: a[t0:t0 + n], tbl)
+        std = coder.encode(syms[:, t0:t0 + n], tbl_c, cap=cap)
+        got = coder.chunk_encoded(ch, c)
+        np.testing.assert_array_equal(np.asarray(got.buf),
+                                      np.asarray(std.buf))
+
+
+def test_chunked_lut_decode(case):
+    tbl, syms = case
+    ch = coder.encode_chunked(syms, tbl, 17)
+    dec, probes = coder.decode_chunked(ch, T, tbl, 17, use_lut=True)
+    np.testing.assert_array_equal(np.asarray(dec), np.asarray(syms))
+    assert abs(float(probes) - 1.0) < 1e-6
+
+
+# ---------------------------------------------------------------------------
+# containers: v2 roundtrip + v1 back-compat
+# ---------------------------------------------------------------------------
+
+def test_container_v2_roundtrip(case):
+    tbl, syms = case
+    ch = coder.encode_chunked(syms, tbl, 17)
+    blob = bitstream.pack_chunked(*map(np.asarray, ch), chunk_size=17,
+                                  n_symbols=T)
+    buf, start, meta = bitstream.unpack_chunked(blob)
+    assert (meta.lanes, meta.n_symbols, meta.chunk_size) == (3, T, 17)
+    assert meta.n_chunks == coder.num_chunks(T, 17)
+    ch2 = coder.ChunkedLanes(jnp.asarray(buf), jnp.asarray(start),
+                             jnp.asarray(buf.shape[-1] - start))
+    dec, _ = coder.decode_chunked(ch2, T, tbl, 17)
+    np.testing.assert_array_equal(np.asarray(dec), np.asarray(syms))
+    assert bitstream.compressed_size_chunked(
+        np.asarray(ch.length)) == len(blob)
+
+
+def test_container_v1_still_unpacks(case):
+    """Back-compat: pre-chunking archives read via both entry points."""
+    tbl, syms = case
+    enc = coder.encode(syms, tbl)
+    blob = bitstream.pack(*map(np.asarray, enc), n_symbols=T)
+    # the classic v1 reader
+    buf, start, meta = bitstream.unpack(blob)
+    enc2 = coder.EncodedLanes(jnp.asarray(buf), jnp.asarray(start),
+                              jnp.asarray(buf.shape[1] - start))
+    dec, _ = coder.decode(enc2, T, tbl)
+    np.testing.assert_array_equal(np.asarray(dec), np.asarray(syms))
+    # the chunked reader presents a v1 blob as one chunk
+    cbuf, cstart, cmeta = bitstream.unpack_chunked(blob)
+    assert cmeta.n_chunks == 1 and cmeta.n_symbols == T
+    ch = coder.ChunkedLanes(jnp.asarray(cbuf), jnp.asarray(cstart),
+                            jnp.asarray(cbuf.shape[-1] - cstart))
+    dec2, _ = coder.decode_chunked(ch, T, tbl, cmeta.chunk_size)
+    np.testing.assert_array_equal(np.asarray(dec2), np.asarray(syms))
+
+
+def test_unpack_rejects_v2_blob(case):
+    tbl, syms = case
+    ch = coder.encode_chunked(syms, tbl, 17)
+    blob = bitstream.pack_chunked(*map(np.asarray, ch), chunk_size=17,
+                                  n_symbols=T)
+    with pytest.raises(ValueError, match="unpack_chunked"):
+        bitstream.unpack(blob)
+    with pytest.raises(ValueError):
+        bitstream.unpack_chunked(b"NOPE" + b"\x00" * 32)
+
+
+# ---------------------------------------------------------------------------
+# shard_map placement: differential vs the vmap path
+# ---------------------------------------------------------------------------
+
+def test_shard_map_matches_vmap_single_device(case):
+    """Single-device ("chunks",) mesh: shard_map == vmap, symbol-for-symbol
+    and byte-for-byte."""
+    tbl, syms = case
+    mesh = pchunked.chunk_mesh()
+    # chunk count divisible by mesh size -> the shard_map path is taken
+    chunk_size = 17
+    assert pchunked._usable(mesh, T // chunk_size)
+    a = coder.encode_chunked(syms, tbl, chunk_size)
+    b = pchunked.encode_chunked(syms, tbl, chunk_size, mesh=mesh)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    da, pa = coder.decode_chunked(a, T, tbl, chunk_size)
+    db, pb = pchunked.decode_chunked(b, T, tbl, chunk_size, mesh=mesh)
+    np.testing.assert_array_equal(np.asarray(da), np.asarray(db))
+    np.testing.assert_array_equal(np.asarray(da), np.asarray(syms))
+    assert abs(float(pa) - float(pb)) < 1e-6
+
+
+def test_shard_map_per_position(per_position_case):
+    tbl, syms = per_position_case
+    mesh = pchunked.chunk_mesh()
+    ch = pchunked.encode_chunked(syms, tbl, 17, mesh=mesh)
+    ref = coder.encode_chunked(syms, tbl, 17)
+    for x, y in zip(ch, ref):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    dec, _ = pchunked.decode_chunked(ch, T, tbl, 17, mesh=mesh)
+    np.testing.assert_array_equal(np.asarray(dec), np.asarray(syms))
+
+
+def test_sharded_fallback_paths(case):
+    """None mesh and indivisible chunk counts silently take the vmap path."""
+    tbl, syms = case
+    a = pchunked.encode_chunked(syms, tbl, T + 1, mesh=None)
+    ref = coder.encode_chunked(syms, tbl, T + 1)
+    for x, y in zip(a, ref):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    dec, _ = pchunked.decode_chunked(a, T, tbl, T + 1, mesh=None)
+    np.testing.assert_array_equal(np.asarray(dec), np.asarray(syms))
+
+
+# ---------------------------------------------------------------------------
+# serve wiring: LM pipeline over chunked streams
+# ---------------------------------------------------------------------------
+
+def test_lm_chunked_roundtrip_bit_exact():
+    from repro.configs import get_smoke_config
+    from repro.data.pipeline import token_stream
+    from repro.models import init_model
+    from repro.serve.compress import (lm_compress_chunked,
+                                      lm_decompress_chunked)
+    cfg = get_smoke_config("ras-pimc")
+    params = init_model(cfg, jax.random.PRNGKey(1))
+    t, chunk = 40, 16                      # 2 full chunks + ragged tail of 8
+    toks = jnp.asarray(token_stream(cfg.vocab_size, (2, t), seed=3),
+                       jnp.int32)
+    stats = lm_compress_chunked(params, cfg, toks, chunk_size=chunk)
+    assert stats.chunks.buf.shape[0] == coder.num_chunks(t, chunk)
+    dec, probes = lm_decompress_chunked(params, cfg, stats.chunks, t, chunk)
+    np.testing.assert_array_equal(np.asarray(dec), np.asarray(toks))
+    assert float(probes) > 0
+    assert float(stats.bits_per_symbol) >= float(stats.model_xent_bits) - 0.05

@@ -105,6 +105,60 @@ def test_decode_kernel_probes_match_core():
 
 
 # ---------------------------------------------------------------------------
+# chunked payloads: kernel == coder per chunk (interpret mode)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("chunk_size", [32, 70, 71])   # ragged / exact / one
+def test_encode_kernel_chunked_bit_exact(chunk_size):
+    """ops.rans_encode_chunked (records kernel per chunk + shared
+    compact_records) must be byte-identical to coder.encode_chunked."""
+    k, lanes, t = 64, 128, 70
+    tbl, syms = _case(99, k, lanes, t)
+    got = ops.rans_encode_chunked(syms, tbl, chunk_size)
+    want = coder.encode_chunked(syms, tbl, chunk_size)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+def test_encode_kernel_on_chunk_payloads():
+    """Standalone kernel encode of each chunk slice == the chunk's cell
+    (the chunk-aware cap keeps compact_records' layout aligned)."""
+    k, lanes, t, chunk_size = 64, 128, 70, 32
+    tbl, syms = _case(98, k, lanes, t)
+    ch = coder.encode_chunked(syms, tbl, chunk_size)
+    cap = ch.buf.shape[-1]
+    for c, n in enumerate(coder.chunk_lengths(t, chunk_size)):
+        sl = syms[:, c * chunk_size:c * chunk_size + n]
+        std = ops.rans_encode(sl, tbl, cap=cap)
+        got = coder.chunk_encoded(ch, c)
+        np.testing.assert_array_equal(np.asarray(std.buf),
+                                      np.asarray(got.buf))
+        np.testing.assert_array_equal(np.asarray(std.start),
+                                      np.asarray(got.start))
+
+
+@pytest.mark.parametrize("use_pred", [False, True])
+def test_decode_kernel_on_chunk_payloads(use_pred):
+    """Kernel decode of every chunk matches the core decoder's symbols AND
+    probe accounting (the Fig. 4(b) metric survives chunking)."""
+    k, lanes, t, chunk_size = 256, 128, 96, 40
+    rng = np.random.default_rng(77)
+    steps = rng.integers(-3, 4, (lanes, t))
+    syms = np.clip(128 + np.cumsum(steps, axis=1), 0, k - 1)
+    tbl = jax.tree.map(jnp.asarray, spc.tables_from_counts_np(
+        np.bincount(syms.ravel(), minlength=k)))
+    ch = coder.encode_chunked(jnp.asarray(syms), tbl, chunk_size)
+    for c, n in enumerate(coder.chunk_lengths(t, chunk_size)):
+        enc_c = coder.chunk_encoded(ch, c)
+        got, g_avg = ops.rans_decode(enc_c, n, tbl, use_pred=use_pred)
+        want, w_avg = ref.rans_decode_ref(enc_c, n, tbl, use_pred=use_pred)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        np.testing.assert_array_equal(
+            np.asarray(got), syms[:, c * chunk_size:c * chunk_size + n])
+        assert abs(float(g_avg) - float(w_avg)) < 1e-5, f"chunk {c} probes"
+
+
+# ---------------------------------------------------------------------------
 # spc_quantize kernel
 # ---------------------------------------------------------------------------
 

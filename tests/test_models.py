@@ -18,6 +18,16 @@ jax.config.update("jax_platforms", "cpu")
 
 KEY = jax.random.PRNGKey(0)
 
+# frontier-scale archs: their smoke configs still dominate suite wall time,
+# so they run in the slow tier (pytest.ini deselects `slow` by default; CI's
+# slow-model-tier job and `-m slow` cover them).
+_SLOW_ARCHS = {"llama3-405b", "llama-3.2-vision-11b"}
+
+
+def _arch_params(archs):
+    return [pytest.param(a, marks=pytest.mark.slow) if a in _SLOW_ARCHS
+            else a for a in archs]
+
 
 def _batch(cfg, b=2, s=16, seed=0):
     rng = np.random.default_rng(seed)
@@ -38,7 +48,7 @@ def _batch(cfg, b=2, s=16, seed=0):
 # per-arch smoke: one forward/train step, output shapes, no NaNs
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("arch", _arch_params(ARCH_IDS))
 def test_smoke_forward_and_grad_step(arch):
     cfg = get_smoke_config(arch)
     params = init_model(cfg, KEY)
@@ -53,7 +63,7 @@ def test_smoke_forward_and_grad_step(arch):
     assert x.shape == (2, 16, cfg.d_model)
 
 
-@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("arch", _arch_params(ARCH_IDS))
 def test_smoke_decode_steps(arch):
     cfg = get_smoke_config(arch)
     params = init_model(cfg, KEY)
@@ -77,9 +87,9 @@ def test_smoke_decode_steps(arch):
 # forward logits (this is what makes LM-driven decompression bit-exact).
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("arch", [
+@pytest.mark.parametrize("arch", _arch_params([
     "qwen3-4b", "mixtral-8x22b", "mamba2-130m", "recurrentgemma-2b",
-    "seamless-m4t-large-v2", "llama-3.2-vision-11b"])
+    "seamless-m4t-large-v2", "llama-3.2-vision-11b"]))
 def test_prefill_decode_consistency(arch):
     cfg = get_smoke_config(arch)
     if cfg.n_experts:
