@@ -1,11 +1,23 @@
 """Fig. 4(b): decoder CDF-search cost — baseline binary search vs
 prediction-guided decoding (paper: 7.00 -> 3.15 avg steps, ~55% fewer).
 
+    PYTHONPATH=src python -m benchmarks.bench_search [--out BENCH_search.json]
+
 Workload: spatially-correlated image-like rows (the paper's image
 workloads); predictor: neighbour average with the paper's +-8 window.
+
+Unified probe telemetry: both decode backends — the pure-JAX lane coder and
+the Pallas decode kernel (interpret mode on CPU) — consume
+``repro.core.search``, so the Fig. 4(b) numbers reported here come from the
+*same canonical counters* regardless of which backend ran the decode.  The
+sweep decodes with both, asserts the per-lane counters are integer-identical,
+and reports once per point.
 """
 
 from __future__ import annotations
+
+import argparse
+import json
 
 import numpy as np
 import jax
@@ -14,34 +26,71 @@ import jax.numpy as jnp
 from repro.core import coder, spc
 from repro.core.predictors import NeighborAverage
 from repro.data.pipeline import image_rows
+from repro.kernels import ops
 
 
-def run(lanes: int = 64, t: int = 2048, seed: int = 0):
+POINTS = (
+    # paper's Fig. 3 window (+-8) and its dichotomous refinement (+-4);
+    # the refined window with a short (last-2) context is our best point.
+    ("baseline", None),
+    ("pm8", NeighborAverage(window=4, delta=8)),
+    ("pm4_refined", NeighborAverage(window=2, delta=4)),
+)
+
+
+def run(lanes: int = 64, t: int = 2048, seed: int = 0,
+        check_kernel: bool = True) -> list[dict]:
     rows = image_rows(lanes, t, seed=seed)
     counts = np.bincount(rows.ravel(), minlength=256)
     tbl = jax.tree.map(jnp.asarray, spc.tables_from_counts_np(counts))
     enc = coder.encode(jnp.asarray(rows, jnp.int32), tbl)
 
-    base_sym, base_probes = coder.decode(enc, t, tbl)
-    assert np.array_equal(np.asarray(base_sym), rows)
-    out = {"baseline_steps": float(base_probes)}
-    # paper's Fig. 3 window (+-8) and its dichotomous refinement (+-4);
-    # the refined window with a short (last-2) context is our best point.
-    for name, window, delta in (("pm8", 4, 8), ("pm4_refined", 2, 4)):
-        sym, probes = coder.decode(
-            enc, t, tbl, predictor=NeighborAverage(window=window,
-                                                   delta=delta))
+    points = []
+    for name, pred in POINTS:
+        sym, avg, per_lane = coder.decode(enc, t, tbl, predictor=pred,
+                                          lane_probes=True)
         assert np.array_equal(np.asarray(sym), rows)
-        out[name] = float(probes)
-    return out
+        point = {"name": name, "lanes": lanes, "n_symbols": t,
+                 "avg_steps": float(avg),
+                 "probe_total": int(np.asarray(per_lane).sum()),
+                 "backends_agree": None}
+        if check_kernel:
+            ksym, kavg, kper = ops.rans_decode(enc, t, tbl, predictor=pred,
+                                               lane_probes=True)
+            same = (np.array_equal(np.asarray(ksym), rows)
+                    and np.array_equal(np.asarray(kper),
+                                       np.asarray(per_lane)))
+            assert same, f"{name}: kernel/coder probe counters diverge"
+            point["backends_agree"] = True
+        points.append(point)
+    return points
 
 
 def main(emit):
-    r = run()
-    base = r["baseline_steps"]
+    pts = {p["name"]: p for p in run(t=1024)}
+    base = pts["baseline"]["avg_steps"]
     emit("fig4b_search_steps_baseline", base, "paper: 7.00")
-    emit("fig4b_search_steps_guided_pm8", r["pm8"],
-         f"paper window +-8; reduction={1 - r['pm8']/base:.1%}")
-    emit("fig4b_search_steps_guided_pm4", r["pm4_refined"],
-         f"paper: 3.15 (+-4 refined); reduction={1 - r['pm4_refined']/base:.1%}"
+    emit("fig4b_search_steps_guided_pm8", pts["pm8"]["avg_steps"],
+         f"paper window +-8; reduction={1 - pts['pm8']['avg_steps']/base:.1%}")
+    emit("fig4b_search_steps_guided_pm4", pts["pm4_refined"]["avg_steps"],
+         f"paper: 3.15 (+-4 refined); "
+         f"reduction={1 - pts['pm4_refined']['avg_steps']/base:.1%}"
          " (paper ~55%)")
+    emit("fig4b_backend_agreement",
+         float(all(p["backends_agree"] for p in pts.values())),
+         "1.0 = kernel and coder probe counters integer-identical")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_search.json")
+    args = ap.parse_args()
+    pts = run()
+    with open(args.out, "w") as f:
+        json.dump(pts, f, indent=2)
+    base = pts[0]["avg_steps"]
+    for p in pts:
+        print(f"{p['name']}: {p['avg_steps']:.3f} steps/symbol "
+              f"(reduction {1 - p['avg_steps']/base:.1%}, "
+              f"backends_agree={p['backends_agree']})")
+    print(f"wrote {len(pts)} points -> {args.out}")

@@ -3,13 +3,15 @@
 Public surface:
   spc        — mixed-precision probability module (BF16 -> fixed point, T1)
   coder      — multi-lane two-stage rANS encode/decode (T2, T4)
+  search     — shared prediction-guided CDF search core + canonical
+               Fig. 4(b) probe accounting (consumed by coder AND kernels)
   predictors — prediction-guided decoding anchors (T3)
   bitstream  — per-lane container format
   golden     — scalar numpy reference (the bit-exactness oracle)
   python_baseline — the paper's Fig-4(a) software comparison target
 """
 
-from repro.core import constants
+from repro.core import constants, search
 from repro.core.spc import (TableSet, build_tables, quantize_probs,
                             tables_from_logits, tables_from_probs, decode_lut,
                             store_bf16)
@@ -23,7 +25,7 @@ from repro.core.predictors import (NeighborAverage, LastValue, ZeroPredictor,
                                    Prediction, model_topk_candidates)
 
 __all__ = [
-    "constants", "TableSet", "build_tables", "quantize_probs",
+    "constants", "search", "TableSet", "build_tables", "quantize_probs",
     "tables_from_logits", "tables_from_probs", "decode_lut", "store_bf16",
     "EncState", "DecState", "EncodedLanes", "ChunkedLanes", "encode",
     "decode", "encode_chunked", "decode_chunked", "encode_put", "decode_get",

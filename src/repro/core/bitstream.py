@@ -16,14 +16,24 @@ standalone rANS stream with its own flush, so chunks decode independently,
 in parallel, and in any order (the interleaved-ANS construction).  Layout::
 
     header (24 bytes):
-        magic "RAS2"(4) | version u8 = 2 | prob_bits u8 | reserved u16
+        magic "RAS2"(4) | version u8 = 2 | prob_bits u8 | flags u16
         | lanes u32 | n_symbols u32 | chunk_size u32 | n_chunks u32
-    chunk index table (12 bytes per cell, chunk-major then lane):
+    chunk index table (12 bytes per cell, 16 with FLAG_CHUNK_CRC32,
+    chunk-major then lane):
         offset u64   -- byte offset of this cell's stream from payload base
         length u32   -- byte length of this cell's stream
+        crc32 u32    -- only when flags & FLAG_CHUNK_CRC32: zlib CRC32 of
+                        this cell's payload bytes
     payload:
         concatenated (chunk, lane) streams, chunk-major then lane, each a
         self-delimiting rANS stream (4-byte big-endian state header first)
+
+``flags`` was the always-zero reserved u16 of the original v2 layout, so
+checksum-less v2 blobs (flags == 0) and v1 blobs keep unpacking unchanged.
+Writers default to ``FLAG_CHUNK_CRC32``: per-(chunk, lane) integrity at
+chunk granularity, verified on unpack with an error naming the corrupt
+cell — a torn or bit-flipped chunk is caught before the decoder walks it,
+and intact chunks stay independently decodable.
 
 ``n_chunks = ceil(n_symbols / chunk_size)``; the final chunk covers the
 ragged tail ``n_symbols - (n_chunks - 1) * chunk_size`` symbols.  Offsets
@@ -41,6 +51,7 @@ both versions (a v1 blob is presented as a single-chunk stream).
 from __future__ import annotations
 
 import struct
+import zlib
 from typing import NamedTuple
 
 import numpy as np
@@ -49,11 +60,15 @@ from repro.core import constants as C
 
 MAGIC = b"RAS1"
 MAGIC_V2 = b"RAS2"
+FLAG_CHUNK_CRC32 = 1 << 0   # v2 flags bit: index cells carry payload CRC32s
 _HEADER = struct.Struct("<4sBBHII")
 _HEADER_V2 = struct.Struct("<4sBBHIIII")
 _INDEX_V2 = struct.Struct("<QI")
-# the same 12-byte index cell as a numpy record, for vectorized table I/O
+# the index cell as a numpy record, for vectorized table I/O (12 bytes
+# plain, 16 with the per-cell CRC32)
 _INDEX_V2_DT = np.dtype([("offset", "<u8"), ("length", "<u4")])
+_INDEX_V2C_DT = np.dtype([("offset", "<u8"), ("length", "<u4"),
+                          ("crc", "<u4")])
 
 
 class Container(NamedTuple):
@@ -135,29 +150,45 @@ def _span_indices(start: np.ndarray, length: np.ndarray,
 
 def pack_chunked(buf: np.ndarray, start: np.ndarray, length: np.ndarray,
                  chunk_size: int, n_symbols: int,
-                 prob_bits: int = C.PROB_BITS) -> bytes:
+                 prob_bits: int = C.PROB_BITS,
+                 checksums: bool = True) -> bytes:
     """ChunkedLanes arrays (host numpy) -> container v2 bytes.
 
     ``buf`` is (n_chunks, lanes, cap); cell (c, l) holds its stream at
     ``buf[c, l, start[c, l] : start[c, l] + length[c, l]]``.
+
+    ``checksums`` (default on) stores a CRC32 of every cell's payload in the
+    index (``FLAG_CHUNK_CRC32``); :func:`unpack_chunked` verifies them and
+    names the corrupt (chunk, lane) on mismatch.
     """
     buf = np.asarray(buf, np.uint8)
     start = np.asarray(start, np.int64)
     length = np.asarray(length, np.int64)
     n_chunks, lanes = buf.shape[:2]
+    flags = FLAG_CHUNK_CRC32 if checksums else 0
     out = bytearray()
-    out += _HEADER_V2.pack(MAGIC_V2, 2, prob_bits, 0, lanes, n_symbols,
+    out += _HEADER_V2.pack(MAGIC_V2, 2, prob_bits, flags, lanes, n_symbols,
                            chunk_size, n_chunks)
-    # explicit (offset, length) index for O(1) chunk/lane random access;
-    # one vectorized record write, not a per-cell struct.pack loop
+    # payload: one O(total-bytes) gather of every cell's span (built first
+    # so the index can checksum the exact bytes that ship)
     flat_len = length.reshape(-1)
-    index = np.empty(flat_len.size, _INDEX_V2_DT)
-    index["offset"] = np.concatenate([[0], np.cumsum(flat_len)[:-1]])
-    index["length"] = flat_len
-    out += index.tobytes()
-    # payload: one O(total-bytes) gather of every cell's span
     idx = _span_indices(start.reshape(-1), flat_len, buf.shape[2])
-    out += buf.reshape(-1)[idx].tobytes()
+    payload = buf.reshape(-1)[idx]
+    # explicit (offset, length[, crc]) index for O(1) chunk/lane random
+    # access; one vectorized record write, not a per-cell struct.pack loop
+    offsets = np.concatenate([[0], np.cumsum(flat_len)[:-1]]).astype(np.int64)
+    index = np.empty(flat_len.size, _INDEX_V2C_DT if checksums
+                     else _INDEX_V2_DT)
+    index["offset"] = offsets
+    index["length"] = flat_len
+    if checksums:
+        # zlib.crc32 takes buffer views directly — no per-cell copies
+        index["crc"] = np.fromiter(
+            (zlib.crc32(payload[o:o + n])
+             for o, n in zip(offsets, flat_len)),
+            dtype=np.uint32, count=flat_len.size)
+    out += index.tobytes()
+    out += payload.tobytes()
     return bytes(out)
 
 
@@ -180,22 +211,35 @@ def unpack_chunked(blob: bytes) -> tuple[np.ndarray, np.ndarray,
                                  n_chunks=1))
     if magic != MAGIC_V2:
         raise ValueError("not a RAS container")
-    (magic, version, prob_bits, _, lanes, n_symbols, chunk_size,
+    (magic, version, prob_bits, flags, lanes, n_symbols, chunk_size,
      n_chunks) = _HEADER_V2.unpack_from(blob)
     if version != 2:
         raise ValueError(f"unsupported container version {version}")
+    has_crc = bool(flags & FLAG_CHUNK_CRC32)
     off = _HEADER_V2.size
     cells = n_chunks * lanes
-    index = np.frombuffer(blob, _INDEX_V2_DT, cells, off)
+    index_dt = _INDEX_V2C_DT if has_crc else _INDEX_V2_DT
+    index = np.frombuffer(blob, index_dt, cells, off)
     offsets = index["offset"].astype(np.int64)
     length = index["length"].astype(np.int64)
-    base = off + cells * _INDEX_V2.size
+    base = off + cells * index_dt.itemsize
     cap = int(length.max()) if cells else 0
     buf = np.zeros((n_chunks, lanes, cap), np.uint8)
     start = (cap - length.reshape(n_chunks, lanes)).astype(np.int32)
     # right-align every cell's span with one vectorized gather through the
     # index's per-cell offsets (writers may order/pad payloads freely)
     payload = np.frombuffer(blob, np.uint8, len(blob) - base, base)
+    if has_crc:
+        for cell in range(cells):
+            o, n = int(offsets[cell]), int(length[cell])
+            got = zlib.crc32(payload[o:o + n])
+            want = int(index["crc"][cell])
+            if got != want:
+                c, lane = divmod(cell, lanes)
+                raise ValueError(
+                    f"container v2 checksum mismatch at chunk {c}, lane "
+                    f"{lane}: stored CRC32 0x{want:08x}, computed "
+                    f"0x{got:08x} — chunk payload corrupt")
     dest = _span_indices(cap - length, length, cap)
     src = _span_indices(offsets, length, 0)
     buf.reshape(-1)[dest] = payload[src]
@@ -211,8 +255,8 @@ def compressed_size(length: np.ndarray) -> int:
     return _HEADER.size + 4 * lanes + int(np.sum(length))
 
 
-def compressed_size_chunked(length: np.ndarray) -> int:
+def compressed_size_chunked(length: np.ndarray, checksums: bool = True) -> int:
     """Total v2 container size: header + index table + payload bytes."""
     length = np.asarray(length)
-    return (_HEADER_V2.size + _INDEX_V2.size * length.size
-            + int(np.sum(length)))
+    cell = _INDEX_V2C_DT.itemsize if checksums else _INDEX_V2.size
+    return _HEADER_V2.size + cell * length.size + int(np.sum(length))

@@ -37,6 +37,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import constants as C
+from repro.core import search
+from repro.core.search import take_gather as _gather
 from repro.core.spc import TableSet
 
 _U32 = jnp.uint32
@@ -85,13 +87,6 @@ class _SymEntry(NamedTuple):
     bias: jax.Array
     cmpl: jax.Array
     x_max: jax.Array
-
-
-def _gather(field: jax.Array, x: jax.Array) -> jax.Array:
-    if field.ndim == 1:
-        return field[x]
-    return jnp.take_along_axis(field, x[..., None].astype(_I32),
-                               axis=-1)[..., 0]
 
 
 def gather_symbol(tbl: TableSet, x: jax.Array) -> _SymEntry:
@@ -337,13 +332,17 @@ def encode_chunked(symbols: jax.Array, tbl: TableSet, chunk_size: int,
 
 def decode_chunked(chunks: ChunkedLanes, n_symbols: int, tbl: TableSet,
                    chunk_size: int, prob_bits: int = C.PROB_BITS,
-                   use_lut: bool = False):
+                   use_lut: bool = False, predictor=None,
+                   lane_probes: bool = False):
     """Decode a chunked stream; returns (symbols (lanes, T), avg_probes).
 
     Full-size chunks decode in parallel (vmap over the chunk axis — see
     ``repro.parallel.chunked`` for the multi-device shard_map version); the
     ragged tail, if any, decodes standalone.  Bit-exact inverse of
-    :func:`encode_chunked`.
+    :func:`encode_chunked`.  ``predictor`` drives prediction-guided search
+    inside every chunk (context resets at chunk boundaries — the chunks are
+    independent streams); ``lane_probes`` also returns the per-lane probe
+    totals summed across chunks.
     """
     n_total = num_chunks(n_symbols, chunk_size)
     if chunks.buf.shape[0] != n_total:
@@ -354,19 +353,27 @@ def decode_chunked(chunks: ChunkedLanes, n_symbols: int, tbl: TableSet,
     n_full, tail_len = divmod(n_symbols, chunk_size)
     per_position = is_per_position(tbl, n_symbols)
 
-    syms, probe_sums = [], []
+    syms, probe_sums, lane_sums = [], [], []
     if n_full:
         sub = jax.tree.map(lambda a: a[:n_full], chunks)
         if per_position:
             dec = jax.vmap(
                 lambda e, tb: decode(EncodedLanes(*e), chunk_size, tb,
-                                     prob_bits, use_lut=use_lut))(
+                                     prob_bits, predictor=predictor,
+                                     use_lut=use_lut,
+                                     lane_probes=lane_probes))(
                 sub, chunk_tables(tbl, n_full, chunk_size))
         else:
             dec = jax.vmap(
                 lambda e: decode(EncodedLanes(*e), chunk_size, tbl,
-                                 prob_bits, use_lut=use_lut))(sub)
-        sym_full, probes_full = dec     # (n_full, lanes, S), (n_full,)
+                                 prob_bits, predictor=predictor,
+                                 use_lut=use_lut,
+                                 lane_probes=lane_probes))(sub)
+        if lane_probes:
+            sym_full, probes_full, lp_full = dec
+            lane_sums.append(jnp.sum(lp_full, axis=0))
+        else:
+            sym_full, probes_full = dec  # (n_full, lanes, S), (n_full,)
         lanes = sym_full.shape[1]
         syms.append(sym_full.swapaxes(0, 1).reshape(
             lanes, n_full * chunk_size))
@@ -374,13 +381,20 @@ def decode_chunked(chunks: ChunkedLanes, n_symbols: int, tbl: TableSet,
     if tail_len:
         tbl_tail = (slice_tables(tbl, n_full * chunk_size, n_symbols)
                     if per_position else tbl)
-        sym_tail, probes_tail = decode(
+        dec_tail = decode(
             chunk_encoded(chunks, n_full), tail_len, tbl_tail, prob_bits,
-            use_lut=use_lut)
+            predictor=predictor, use_lut=use_lut, lane_probes=lane_probes)
+        if lane_probes:
+            sym_tail, probes_tail, lp_tail = dec_tail
+            lane_sums.append(lp_tail)
+        else:
+            sym_tail, probes_tail = dec_tail
         syms.append(sym_tail)
         probe_sums.append(probes_tail * tail_len)
     out = jnp.concatenate(syms, axis=1)
     avg_probes = sum(probe_sums) / n_symbols
+    if lane_probes:
+        return out, avg_probes, sum(lane_sums)
     return out, avg_probes
 
 
@@ -405,80 +419,18 @@ def decoder_init(enc: EncodedLanes) -> DecState:
     return DecState(s=s, ptr=ptr)
 
 
-def _bsearch(cdf: jax.Array, slot: jax.Array, lo: jax.Array, hi: jax.Array,
-             n_iter: int):
-    """Masked fixed-depth binary search: find x with cdf[x] <= slot < cdf[x+1].
-
-    Counts only the *active* iterations per lane — each one is a CDF probe,
-    the unit of Fig. 4(b).
-    """
-    steps = jnp.zeros_like(lo)
-    for _ in range(n_iter):
-        active = (hi - lo) > 1
-        mid = (lo + hi) >> 1
-        c_mid = _gather(cdf, mid)
-        # equality early-commit: cdf[mid] == slot proves symbol == mid
-        # (f >= 1 guarantees slot < cdf[mid+1]); the bracket collapses and
-        # later iterations stop counting — matches the paper's <log2|S|
-        # baseline averages.
-        eq = active & (c_mid == slot)
-        go_right = c_mid <= slot
-        lo = jnp.where(active & go_right, mid, lo)
-        hi = jnp.where(eq, mid + 1, jnp.where(active & ~go_right, mid, hi))
-        steps = steps + active.astype(_I32)
-    return lo, steps
-
-
-def _ceil_log2(k: int) -> int:
-    return max(1, (k - 1).bit_length())
-
-
 def find_symbol(tbl: TableSet, slot: jax.Array,
                 mu: jax.Array | None = None,
                 delta: int | jax.Array | None = None,
                 candidates: jax.Array | None = None):
-    """State-to-symbol inversion with optional speculation (Sec. IV-C).
+    """State-to-symbol inversion (Sec. IV-C) — delegates to ``core.search``.
 
-    Returns (symbol, probes) where ``probes`` counts CDF accesses per lane:
-    candidate verifies cost 1 each, window verify costs 1, every binary
-    step costs 1.  Fallback lanes pay the verify + the full search — the
-    paper's "bounded penalty" — so worst case equals the baseline.
+    The search itself (window gating, candidate speculation, fixed-depth
+    binary search) and the canonical Fig. 4(b) probe accounting live in
+    :mod:`repro.core.search`, shared verbatim with the Pallas decode kernel.
     """
-    cdf = tbl.cdf
-    k = tbl.alphabet_size
-    lanes = slot.shape[0]
-    lo0 = jnp.zeros((lanes,), _I32)
-    hi0 = jnp.full((lanes,), k, _I32)
-    probes = jnp.zeros((lanes,), _I32)
-    found = jnp.zeros((lanes,), bool)
-    x_spec = jnp.zeros((lanes,), _I32)
-
-    # --- candidate speculation (model-top-k trial symbols, O(1) verify each)
-    if candidates is not None:
-        for j in range(candidates.shape[-1]):
-            cand = jnp.clip(candidates[:, j].astype(_I32), 0, k - 1)
-            ok = ((_gather(cdf, cand) <= slot)
-                  & (slot < _gather(cdf, cand + 1)))
-            probes = probes + (~found).astype(_I32)
-            x_spec = jnp.where(~found & ok, cand, x_spec)
-            found = found | ok
-
-    # --- window-gated search (neighbour-average bracket [mu-d, mu+d])
-    if mu is not None:
-        d = jnp.asarray(delta, _I32)
-        lo_w = jnp.clip(mu.astype(_I32) - d, 0, k - 1)
-        hi_w = jnp.clip(mu.astype(_I32) + d + 1, 1, k)
-        hit = ((_gather(cdf, lo_w) <= slot) & (slot < _gather(cdf, hi_w))
-               & ~found)
-        probes = probes + (~found).astype(_I32)  # the window verify probe
-        lo0 = jnp.where(hit, lo_w, lo0)
-        hi0 = jnp.where(hit, hi_w, hi0)
-
-    # --- binary search over the (possibly narrowed) bracket
-    lo0 = jnp.where(found, x_spec, lo0)
-    hi0 = jnp.where(found, x_spec + 1, hi0)
-    x, steps = _bsearch(cdf, slot, lo0, hi0, _ceil_log2(k))
-    return x, probes + steps
+    return search.find_symbol(tbl.cdf, tbl.alphabet_size, slot,
+                              mu=mu, delta=delta, candidates=candidates)
 
 
 def decode_get(st: DecState, buf: jax.Array, tbl: TableSet,
@@ -518,16 +470,19 @@ def decode_get(st: DecState, buf: jax.Array, tbl: TableSet,
 
 
 @functools.partial(jax.jit, static_argnames=("n_symbols", "prob_bits",
-                                             "predictor", "use_lut"))
+                                             "predictor", "use_lut",
+                                             "lane_probes"))
 def decode(enc: EncodedLanes, n_symbols: int, tbl: TableSet,
            prob_bits: int = C.PROB_BITS, predictor=None,
-           use_lut: bool = False):
+           use_lut: bool = False, lane_probes: bool = False):
     """Decode ``n_symbols`` per lane.  Returns (symbols (lanes,T), avg_probes).
 
     ``predictor`` is one of core.predictors (hashable NamedTuple of static
     config) driving prediction-guided decoding; None = baseline full binary
     search.  Per-position tables: TableSet with leading T dim as in encode.
     ``use_lut``: static tables only — O(1) slot->symbol inversion.
+    ``lane_probes``: also return the per-lane probe totals ``(lanes,)`` int32
+    — the raw Fig. 4(b) counters the cross-backend differential tests pin.
     """
     lanes = enc.buf.shape[0]
     per_position = (tbl.freq.ndim in (2, 3)
@@ -556,4 +511,6 @@ def decode(enc: EncodedLanes, n_symbols: int, tbl: TableSet,
     (_, _), (sym_t, probes_t) = jax.lax.scan(
         step, (decoder_init(enc), ctx0), xs, length=n_symbols)
     avg_probes = jnp.mean(probes_t.astype(jnp.float32))
+    if lane_probes:
+        return sym_t.T, avg_probes, jnp.sum(probes_t, axis=0)
     return sym_t.T, avg_probes

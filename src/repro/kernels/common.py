@@ -55,6 +55,21 @@ def onehot_gather(table: jax.Array, idx: jax.Array) -> jax.Array:
     return jnp.sum(vals, axis=1, dtype=table.dtype)
 
 
+def onehot_gather_lanes(table: jax.Array, idx: jax.Array) -> jax.Array:
+    """``table[lane, idx[lane]]`` per-lane table gather via one-hot.
+
+    table: (lanes, K); idx: (lanes,) int32 -> (lanes,) table dtype.
+    The adaptive-table analogue of :func:`onehot_gather`: each lane owns its
+    own table row (the neural-prior layout), so the one-hot mask contracts
+    the row dimension lane-locally.
+    """
+    lanes, k = table.shape
+    iota = jax.lax.broadcasted_iota(jnp.int32, (lanes, k), 1)
+    hot = iota == idx[:, None].astype(jnp.int32)
+    vals = jnp.where(hot, table, jnp.zeros_like(table))
+    return jnp.sum(vals, axis=1, dtype=table.dtype)
+
+
 def onehot_gather_rows(buf: jax.Array, row_idx: jax.Array) -> jax.Array:
     """``buf[row_idx[lane], lane]`` per-lane row gather via one-hot.
 

@@ -2,10 +2,13 @@
 
 ``rans_encode`` = kernel (fixed-shape renorm records) + vectorized XLA
 stream compaction; the result is byte-identical to ``repro.core.coder.encode``
-and therefore to the scalar golden reference.  ``rans_decode`` wraps the
-prediction-guided decode kernel.  ``spc_quantize`` wraps the mass-correction
-kernel.  All default to ``interpret=True`` (this container is CPU-only; on a
-real TPU pass interpret=False).
+and therefore to the scalar golden reference.  ``rans_decode`` /
+``rans_decode_chunked`` wrap the prediction-guided decode kernel (static and
+adaptive per-position TableSets; symbols AND per-lane probe counters are
+bit-identical to the pure-JAX coder — both consume ``core.search``).
+``spc_quantize`` wraps the mass-correction kernel.  All default to
+``interpret=True`` (this container is CPU-only; on a real TPU pass
+interpret=False).
 """
 
 from __future__ import annotations
@@ -16,8 +19,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import constants as C
-from repro.core.coder import (ChunkedLanes, EncodedLanes, chunk_lengths,
-                              default_cap)
+from repro.core.coder import (ChunkedLanes, EncodedLanes, chunk_encoded,
+                              chunk_lengths, default_cap, is_per_position,
+                              num_chunks, slice_tables)
+from repro.core.predictors import NeighborAverage
 from repro.core.spc import TableSet, build_tables
 from repro.kernels.rans_decode import rans_decode_lanes
 from repro.kernels.rans_encode import rans_encode_records
@@ -101,15 +106,78 @@ def rans_encode_chunked(symbols: jax.Array, tbl: TableSet, chunk_size: int,
 def rans_decode(enc: EncodedLanes, n_symbols: int, tbl: TableSet,
                 prob_bits: int = C.PROB_BITS,
                 use_pred: bool = False, window: int = 4, delta: int = 8,
+                predictor=None,
                 lane_block: int = 128,
-                interpret: bool = True):
-    """Kernel-backed decode; returns (symbols (lanes,T), avg probes/symbol)."""
+                t_block: int | None = None,
+                interpret: bool = True,
+                lane_probes: bool = False):
+    """Kernel-backed decode; returns (symbols (lanes,T), avg probes/symbol).
+
+    Static ``(K,)`` and adaptive ``(T, K)`` / ``(T, lanes, K)`` TableSets
+    are all decoded in-kernel (the adaptive layouts block the T axis through
+    VMEM — ``t_block``).  ``predictor`` is any ``core.predictors`` config;
+    ``use_pred``/``window``/``delta`` remain as sugar for the paper's
+    neighbour-average predictor.  When the lane count does not tile the
+    ``lane_block`` grid the block collapses to one lane group (correctness
+    over occupancy — the serve/parallel paths run narrow lane counts).
+    ``lane_probes``: also return the per-lane probe counters ``(lanes,)``.
+    """
+    if predictor is None and use_pred:
+        predictor = NeighborAverage(window=window, delta=delta)
+    lanes = enc.buf.shape[0]
+    if lanes % lane_block:
+        lane_block = lanes
     sym, probes = rans_decode_lanes(
         enc.buf, enc.start, tbl.freq, tbl.cdf, t_len=n_symbols,
-        prob_bits=prob_bits, use_pred=use_pred, window=window, delta=delta,
-        lane_block=lane_block, interpret=interpret)
+        prob_bits=prob_bits, predictor=predictor, lane_block=lane_block,
+        t_block=t_block, interpret=interpret)
     avg = jnp.mean(probes.astype(jnp.float32)) / n_symbols
+    if lane_probes:
+        return sym, avg, probes
     return sym, avg
+
+
+def rans_decode_chunked(chunks: ChunkedLanes, n_symbols: int, tbl: TableSet,
+                        chunk_size: int,
+                        prob_bits: int = C.PROB_BITS,
+                        predictor=None,
+                        lane_block: int = 128,
+                        t_block: int | None = None,
+                        interpret: bool = True,
+                        lane_probes: bool = False):
+    """Kernel-backed chunked decode (mirrors :func:`rans_encode_chunked`).
+
+    Runs the decode kernel once per chunk — each (chunk, lane) cell is a
+    standalone stream, so the kernel re-reads the 4-byte state header per
+    chunk exactly like ``coder.decode_chunked``'s per-chunk ``decoder_init``.
+    Per-position TableSets (leading T dim of ``n_symbols``) are sliced
+    chunk-major, static tables are reused.  Probe accounting matches the
+    pure-JAX path per lane and per chunk (both consume ``core.search``).
+    Returns ``(symbols (lanes, T), avg_probes[, per-lane probes])``.
+    """
+    n_total = num_chunks(n_symbols, chunk_size)
+    if chunks.buf.shape[0] != n_total:
+        raise ValueError(
+            f"stream has {chunks.buf.shape[0]} chunks but n_symbols="
+            f"{n_symbols} at chunk_size={chunk_size} implies {n_total}; "
+            "decode with the chunk_size the stream was encoded with")
+    per_position = is_per_position(tbl, n_symbols)
+    syms, probe_sums, lane_sums = [], [], []
+    for c, n in enumerate(chunk_lengths(n_symbols, chunk_size)):
+        t0 = c * chunk_size
+        tbl_c = slice_tables(tbl, t0, t0 + n) if per_position else tbl
+        sym, avg, lanes_c = rans_decode(
+            chunk_encoded(chunks, c), n, tbl_c, prob_bits=prob_bits,
+            predictor=predictor, lane_block=lane_block, t_block=t_block,
+            interpret=interpret, lane_probes=True)
+        syms.append(sym)
+        probe_sums.append(avg * n)
+        lane_sums.append(lanes_c)
+    out = jnp.concatenate(syms, axis=1)
+    avg_probes = sum(probe_sums) / n_symbols
+    if lane_probes:
+        return out, avg_probes, sum(lane_sums)
+    return out, avg_probes
 
 
 def spc_quantize_tables(probs: jax.Array,

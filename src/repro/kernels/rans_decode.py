@@ -3,21 +3,42 @@
 The decoder inner loop is the paper's focus: its latency is dominated by CDF
 probes (state-to-symbol search) and stream reads.  Kernel design:
 
-  * lane-blocked grid as in rans_encode; per-lane state/pointer vectors live
-    in the ``fori_loop`` carry (VREGs);
-  * every CDF probe and every stream-byte read is a **one-hot contraction**
-    (VPU/MXU dense math — the TPU replacement for the RTL's table SRAM
-    port);  probes are therefore *the* unit of cost, and the kernel counts
-    them per lane exactly like Fig. 4(b);
-  * the neighbour-average predictor (paper Fig. 3) runs inside the kernel:
-    anchor mu = mean of the last ``window`` decoded symbols, bracket
-    [mu-delta, mu+delta], verified against the CDF with a masked fallback to
-    the full binary search — bit-exactness is structural (the bracket only
-    narrows the search start, the search itself is unchanged);
+  * lane-blocked grid as in rans_encode; per-lane state/pointer vectors are
+    carried across a ``fori_loop`` (VREGs) and — when the symbol axis is
+    blocked — across grid steps in VMEM scratch;
+  * the CDF search is **not** reimplemented here: the kernel imports the
+    shared search core (:mod:`repro.core.search`) and substitutes its gather
+    primitive with a one-hot contraction (VPU/MXU dense math — the TPU
+    replacement for the RTL's table SRAM port).  Symbols *and* the canonical
+    Fig. 4(b) probe counters are therefore structurally identical to
+    ``core.coder.decode``;
+  * prediction-guided decoding uses the ``core.predictors`` protocol
+    directly (``predictor.init/predict/update`` run inside the kernel), so
+    ``NeighborAverage``/``LastValue``/``ZeroPredictor`` behave identically
+    in kernel and reference paths — bit-exactness is structural (the
+    bracket only narrows the search start, the search itself is unchanged);
+  * **adaptive tables**: besides a static ``(K,)`` TableSet the kernel
+    accepts per-position ``(T, K)`` and per-position-per-lane
+    ``(T, lanes, K)`` tables — the neural-prior layouts of
+    ``serve.compress``.  The T axis is blocked through VMEM
+    (``t_block`` rows of freq/cdf per grid step); decoder state persists in
+    scratch between T blocks, so arbitrarily long adaptive streams decode
+    without holding all T tables on chip;
   * fixed 2-step masked byte refill mirrors the encoder's renorm bound.
 
-VMEM per grid step: stream (cap x Lb) + CDF (K+1) + symbols out (T x Lb);
-for T=4096, Lb=128, K=256: ~3.7 MB.
+Grid: ``(lanes // lane_block, ceil(T / t_block))`` — the T axis iterates
+fastest, so each lane block streams its table blocks sequentially while the
+byte stream (cap x Lb) stays resident.
+
+VMEM per grid step: stream (cap x Lb) + tables (t_block x [Lb x] (2K+1)
+u32) + symbols out (t_block x Lb).  For T=4096, Lb=128, K=256 static:
+~3.7 MB; for the (T, lanes, K) adaptive layout, t_block=8 keeps the table
+slab at ~2.1 MB.
+
+Context layout note: the predictor protocol's ``(lanes, window)`` context is
+kept as-is inside the kernel (sublane-major for the tiny ``window`` axis);
+on a real TPU a lane-minor layout would map better onto VREGs, but the
+shared-protocol contract wins here and ``window`` is small.
 """
 
 from __future__ import annotations
@@ -27,126 +48,187 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import constants as C
-from repro.kernels.common import onehot_gather, onehot_gather_rows
+from repro.core import search
+from repro.kernels.common import (onehot_gather, onehot_gather_lanes,
+                                  onehot_gather_rows)
 
 _U32 = jnp.uint32
 _I32 = jnp.int32
 
 
-def _ceil_log2(k: int) -> int:
-    return max(1, (k - 1).bit_length())
-
-
 def _decode_kernel(buf_ref, start_ref, freq_ref, cdf_ref,
                    sym_ref, probes_ref,
-                   *, t_len: int, prob_bits: int, k: int,
-                   use_pred: bool, window: int, delta: int):
+                   s_scr, ptr_scr, ctx_scr,
+                   *, t_len: int, t_block: int, prob_bits: int, k: int,
+                   layout: str, predictor, ctx_w: int):
     lanes = buf_ref.shape[1]
     mask = _U32((1 << prob_bits) - 1)
-    freq = freq_ref[0]
-    cdf = cdf_ref[0]          # (K+1,)
     buf = buf_ref[...]        # (cap, lanes) resident in VMEM
+    j = pl.program_id(1)      # T-block index (innermost grid axis)
 
-    # --- read the 4-byte big-endian state header
-    ptr = start_ref[0].astype(_I32)
-    s = jnp.zeros((lanes,), _U32)
-    for _ in range(4):
-        byte = onehot_gather_rows(buf, ptr).astype(_U32)
-        s = (s << 8) | byte
-        ptr = ptr + 1
+    @pl.when(j == 0)
+    def _init():
+        # read the 4-byte big-endian state header once per lane block
+        ptr = start_ref[0].astype(_I32)
+        s = jnp.zeros((lanes,), _U32)
+        for _ in range(4):
+            byte = onehot_gather_rows(buf, ptr).astype(_U32)
+            s = (s << 8) | byte
+            ptr = ptr + 1
+        s_scr[0, :] = s
+        ptr_scr[0, :] = ptr
+        probes_ref[0, :] = jnp.zeros((lanes,), _I32)
+        if predictor is not None and ctx_w:
+            ctx_scr[...] = predictor.init(lanes)
 
-    ctx0 = jnp.full((window, lanes), -1, _I32)
-    probes0 = jnp.zeros((lanes,), _I32)
+    if layout == "static":
+        freq_all = freq_ref[0]        # (K,)
+        cdf_all = cdf_ref[0]          # (K+1,)
+
+    if predictor is not None:
+        ctx0 = (ctx_scr[...] if ctx_w
+                else jnp.zeros((lanes, 0), _I32))
+    else:
+        ctx0 = jnp.zeros((lanes, 0), _I32)
+
+    # number of valid positions in this T block (last block may be ragged)
+    n_t = jnp.minimum(t_block, t_len - j * t_block)
 
     def body(t, carry):
         s, ptr, probes, ctx = carry
         slot = s & mask
-        lo = jnp.zeros((lanes,), _I32)
-        hi = jnp.full((lanes,), k, _I32)
-        if use_pred:
-            valid = ctx >= 0
-            n_valid = jnp.sum(valid.astype(_I32), axis=0)
-            ssum = jnp.sum(jnp.where(valid, ctx, 0), axis=0)
-            mu = jnp.where(n_valid > 0, ssum // jnp.maximum(n_valid, 1), 0)
-            lo_w = jnp.clip(mu - delta, 0, k - 1)
-            hi_w = jnp.clip(mu + delta + 1, 1, k)
-            hit = ((onehot_gather(cdf, lo_w) <= slot)
-                   & (slot < onehot_gather(cdf, hi_w)))
-            probes = probes + 1  # the window verify probe
-            lo = jnp.where(hit, lo_w, lo)
-            hi = jnp.where(hit, hi_w, hi)
-        # masked fixed-depth binary search with equality early-commit
-        for _ in range(_ceil_log2(k)):
-            active = (hi - lo) > 1
-            mid = (lo + hi) >> 1
-            c_mid = onehot_gather(cdf, mid)
-            eq = active & (c_mid == slot)
-            go_right = c_mid <= slot
-            lo = jnp.where(active & go_right, mid, lo)
-            hi = jnp.where(eq, mid + 1,
-                           jnp.where(active & ~go_right, mid, hi))
-            probes = probes + active.astype(_I32)
-        x = lo
+        if layout == "static":
+            freq_t, cdf_t, g = freq_all, cdf_all, onehot_gather
+        elif layout == "perpos":
+            freq_t = freq_ref[pl.dslice(t, 1), :][0]       # (K,)
+            cdf_t = cdf_ref[pl.dslice(t, 1), :][0]         # (K+1,)
+            g = onehot_gather
+        else:  # "lane": per-position per-lane rows
+            freq_t = freq_ref[pl.dslice(t, 1), :, :][0]    # (lanes, K)
+            cdf_t = cdf_ref[pl.dslice(t, 1), :, :][0]      # (lanes, K+1)
+            g = onehot_gather_lanes
+        if predictor is not None:
+            pred = predictor.predict(ctx)
+            x, p = search.find_symbol(cdf_t, k, slot, mu=pred.mu,
+                                      delta=pred.delta,
+                                      candidates=pred.candidates, gather=g)
+            ctx = predictor.update(ctx, x)
+        else:
+            x, p = search.find_symbol(cdf_t, k, slot, gather=g)
         sym_ref[pl.dslice(t, 1), :] = x.reshape(1, lanes)
-        f = onehot_gather(freq, x)
-        start = onehot_gather(cdf[:k], x)
+        f = g(freq_t, x)
+        start = g(cdf_t[..., :k], x)
         s = f * (s >> prob_bits) + slot - start
         for _ in range(C.MAX_RENORM_STEPS):
             cond = s < _U32(C.RANS_L)
             byte = onehot_gather_rows(buf, ptr).astype(_U32)
             s = jnp.where(cond, (s << C.RENORM_SHIFT) | byte, s)
             ptr = ptr + cond.astype(_I32)
-        if use_pred:
-            ctx = jnp.concatenate([ctx[1:], x.reshape(1, lanes)], axis=0)
-        return s, ptr, probes, ctx
+        return s, ptr, probes + p, ctx
 
-    _, _, probes, _ = jax.lax.fori_loop(
-        0, t_len, body, (s, ptr, probes0, ctx0))
+    s, ptr, probes, ctx = jax.lax.fori_loop(
+        0, n_t, body, (s_scr[0, :], ptr_scr[0, :], probes_ref[0, :], ctx0))
+    s_scr[0, :] = s
+    ptr_scr[0, :] = ptr
     probes_ref[0, :] = probes
+    if predictor is not None and ctx_w:
+        ctx_scr[...] = ctx
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("t_len", "prob_bits", "use_pred",
-                                    "window", "delta", "lane_block",
-                                    "interpret"))
+                   static_argnames=("t_len", "prob_bits", "predictor",
+                                    "lane_block", "t_block", "interpret"))
 def rans_decode_lanes(buf: jax.Array,      # (lanes, cap) uint8 forward stream
                       start: jax.Array,    # (lanes,) int32
                       freq: jax.Array, cdf: jax.Array,
                       t_len: int,
                       prob_bits: int = C.PROB_BITS,
-                      use_pred: bool = False,
-                      window: int = 4,
-                      delta: int = 8,
+                      predictor=None,
                       lane_block: int = 128,
+                      t_block: int | None = None,
                       interpret: bool = True):
-    """Decode t_len symbols/lane.  Returns (symbols (lanes,T), probes (lanes,))."""
+    """Decode t_len symbols/lane.  Returns (symbols (lanes,T), probes (lanes,)).
+
+    Table layouts (detected from ``freq.ndim``):
+      * ``(K,)``            — static shared table (classic rANS);
+      * ``(T, K)``          — per-position shared rows (neural prior, all
+                              lanes share each step's distribution);
+      * ``(T, lanes, K)``   — per-position per-lane rows (the
+                              ``serve.compress`` TableSet layout).
+    ``cdf`` must carry the matching shape with a trailing ``K+1``.
+
+    ``predictor`` is a ``core.predictors`` config (hashable NamedTuple) or
+    None; ``t_block`` blocks the T axis through VMEM (None = whole stream in
+    one block).  ``probes`` are the canonical per-lane Fig. 4(b) counters of
+    ``core.search`` — bit-identical to ``core.coder.decode``'s.
+    """
     lanes, cap = buf.shape
     if lanes % lane_block:
         raise ValueError(f"lanes={lanes} not a multiple of {lane_block}")
     k = freq.shape[-1]
-    grid = (lanes // lane_block,)
+    t_block = t_len if t_block is None else min(t_block, t_len)
+    t_block = max(t_block, 1)
+    n_tb = -(-t_len // t_block)
+
+    if freq.ndim == 1:
+        layout = "static"
+        freq_in, cdf_in = freq.reshape(1, k), cdf.reshape(1, k + 1)
+        freq_spec = pl.BlockSpec((1, k), lambda i, j: (0, 0))
+        cdf_spec = pl.BlockSpec((1, k + 1), lambda i, j: (0, 0))
+    elif freq.ndim == 2:
+        if freq.shape[0] != t_len:
+            raise ValueError(
+                f"per-position tables carry T={freq.shape[0]} rows but "
+                f"t_len={t_len}")
+        layout = "perpos"
+        freq_in, cdf_in = freq, cdf
+        freq_spec = pl.BlockSpec((t_block, k), lambda i, j: (j, 0))
+        cdf_spec = pl.BlockSpec((t_block, k + 1), lambda i, j: (j, 0))
+    elif freq.ndim == 3:
+        if freq.shape[0] != t_len or freq.shape[1] != lanes:
+            raise ValueError(
+                f"per-lane tables must be (T, lanes, K)=({t_len}, {lanes}, "
+                f"{k}); got {freq.shape}")
+        layout = "lane"
+        freq_in, cdf_in = freq, cdf
+        freq_spec = pl.BlockSpec((t_block, lane_block, k),
+                                 lambda i, j: (j, i, 0))
+        cdf_spec = pl.BlockSpec((t_block, lane_block, k + 1),
+                                lambda i, j: (j, i, 0))
+    else:
+        raise ValueError(f"unsupported table rank {freq.ndim}")
+
+    ctx_w = (int(predictor.init(lane_block).shape[-1])
+             if predictor is not None else 0)
+    grid = (lanes // lane_block, n_tb)
 
     sym, probes = pl.pallas_call(
-        functools.partial(_decode_kernel, t_len=t_len, prob_bits=prob_bits,
-                          k=k, use_pred=use_pred, window=window, delta=delta),
+        functools.partial(_decode_kernel, t_len=t_len, t_block=t_block,
+                          prob_bits=prob_bits, k=k, layout=layout,
+                          predictor=predictor, ctx_w=ctx_w),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((cap, lane_block), lambda i: (0, i)),
-            pl.BlockSpec((1, lane_block), lambda i: (0, i)),
-            pl.BlockSpec((1, k), lambda i: (0, 0)),
-            pl.BlockSpec((1, k + 1), lambda i: (0, 0)),
+            pl.BlockSpec((cap, lane_block), lambda i, j: (0, i)),
+            pl.BlockSpec((1, lane_block), lambda i, j: (0, i)),
+            freq_spec,
+            cdf_spec,
         ],
         out_specs=[
-            pl.BlockSpec((t_len, lane_block), lambda i: (0, i)),
-            pl.BlockSpec((1, lane_block), lambda i: (0, i)),
+            pl.BlockSpec((t_block, lane_block), lambda i, j: (j, i)),
+            pl.BlockSpec((1, lane_block), lambda i, j: (0, i)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((t_len, lanes), _I32),
             jax.ShapeDtypeStruct((1, lanes), _I32),
         ],
+        scratch_shapes=[
+            pltpu.VMEM((1, lane_block), _U32),              # rANS states
+            pltpu.VMEM((1, lane_block), _I32),              # read cursors
+            pltpu.VMEM((lane_block, max(1, ctx_w)), _I32),  # predictor ctx
+        ],
         interpret=interpret,
-    )(buf.T, start.reshape(1, lanes).astype(_I32),
-      freq.reshape(1, k), cdf.reshape(1, k + 1))
+    )(buf.T, start.reshape(1, lanes).astype(_I32), freq_in, cdf_in)
     return sym.T, probes[0]

@@ -25,10 +25,23 @@ def rans_encode_ref(symbols: jax.Array, tbl: spc.TableSet,
 
 def rans_decode_ref(enc: coder.EncodedLanes, n_symbols: int,
                     tbl: spc.TableSet, use_pred: bool = False,
-                    window: int = 4, delta: int = 8):
-    pred = NeighborAverage(window=window, delta=delta) if use_pred else None
-    sym, avg = coder.decode(enc, n_symbols, tbl, predictor=pred)
-    return sym, avg
+                    window: int = 4, delta: int = 8, predictor=None,
+                    lane_probes: bool = False):
+    """Oracle = ``coder.decode`` (which consumes the same ``core.search``
+    core as the kernel, so symbols AND per-lane probe counters match
+    structurally).  ``use_pred`` is sugar for the paper's neighbour-average
+    predictor; any ``core.predictors`` config can be passed directly."""
+    if predictor is None and use_pred:
+        predictor = NeighborAverage(window=window, delta=delta)
+    return coder.decode(enc, n_symbols, tbl, predictor=predictor,
+                        lane_probes=lane_probes)
+
+
+def rans_decode_chunked_ref(chunks: coder.ChunkedLanes, n_symbols: int,
+                            tbl: spc.TableSet, chunk_size: int,
+                            predictor=None, lane_probes: bool = False):
+    return coder.decode_chunked(chunks, n_symbols, tbl, chunk_size,
+                                predictor=predictor, lane_probes=lane_probes)
 
 
 def spc_quantize_ref(probs: jax.Array,

@@ -102,12 +102,22 @@ def encode_chunked(symbols: jax.Array, tbl: TableSet, chunk_size: int,
 
 def decode_chunked(chunks: ChunkedLanes, n_symbols: int, tbl: TableSet,
                    chunk_size: int, mesh: Mesh | None = None,
-                   prob_bits: int = C.PROB_BITS, use_lut: bool = False):
-    """Device-parallel :func:`core.coder.decode_chunked`.
+                   prob_bits: int = C.PROB_BITS, use_lut: bool = False,
+                   predictor=None, backend: str = "coder",
+                   interpret: bool = True):
+    """Device-parallel chunked decode over either decode backend.
 
-    Returns (symbols (lanes, T), avg_probes) — bit-identical to the vmap
-    path regardless of mesh shape (chunks carry no cross-device state).
+    ``backend="coder"`` runs the pure-JAX lane decoder (vmap per local
+    chunk slab); ``backend="kernel"`` runs the Pallas decode kernel per
+    chunk (interpret mode on CPU).  Both consume ``core.search``, so the
+    returned (symbols (lanes, T), avg_probes) are bit-identical across
+    backends and mesh shapes (chunks carry no cross-device state).
+    ``predictor`` drives prediction-guided search inside every chunk.
     """
+    if backend == "kernel":
+        from repro.kernels import ops as kops
+    elif backend != "coder":
+        raise ValueError(f"unknown decode backend {backend!r}")
     n_total = coder.num_chunks(n_symbols, chunk_size)
     if chunks.buf.shape[0] != n_total:
         raise ValueError(
@@ -115,37 +125,64 @@ def decode_chunked(chunks: ChunkedLanes, n_symbols: int, tbl: TableSet,
             f"{n_symbols} at chunk_size={chunk_size} implies {n_total}")
     n_full, tail_len = divmod(n_symbols, chunk_size)
     if not _usable(mesh, n_full):
+        if backend == "kernel":
+            return kops.rans_decode_chunked(
+                chunks, n_symbols, tbl, chunk_size, prob_bits=prob_bits,
+                predictor=predictor, interpret=interpret)
         return coder.decode_chunked(chunks, n_symbols, tbl, chunk_size,
-                                    prob_bits=prob_bits, use_lut=use_lut)
+                                    prob_bits=prob_bits, use_lut=use_lut,
+                                    predictor=predictor)
 
     per_position = coder.is_per_position(tbl, n_symbols)
     sub = jax.tree.map(lambda a: a[:n_full], chunks)
+    n_loc = n_full // mesh.shape["chunks"]
     out_specs = (P("chunks"), P("chunks"))
+
+    def _decode_one(enc, tb, n=chunk_size):
+        if backend == "kernel":
+            return kops.rans_decode(enc, n, tb, prob_bits=prob_bits,
+                                    predictor=predictor, interpret=interpret)
+        return coder.decode(enc, n, tb, prob_bits,
+                            predictor=predictor, use_lut=use_lut)
+
+    def _slab_decode(enc_loc, tbl_of_chunk):
+        if backend == "kernel":
+            # one pallas_call per local chunk (static count): the kernel
+            # owns its own lane-block grid, so the chunk axis stays a loop
+            outs = [_decode_one(
+                EncodedLanes(enc_loc.buf[c], enc_loc.start[c],
+                             enc_loc.length[c]), tbl_of_chunk(c))
+                for c in range(n_loc)]
+            return (jnp.stack([o[0] for o in outs], 0),
+                    jnp.stack([o[1] for o in outs], 0))
+        # coder path: batch the local chunk slab through one vmapped scan
+        return jax.vmap(
+            lambda e, c: _decode_one(EncodedLanes(*e), tbl_of_chunk(c)))(
+            enc_loc, jnp.arange(n_loc))
+
     if per_position:
         tbl_full = coder.chunk_tables(tbl, n_full, chunk_size)
 
         def body(enc_loc, tbl_loc):
-            return jax.vmap(
-                lambda e, tb: coder.decode(EncodedLanes(*e), chunk_size, tb,
-                                           prob_bits, use_lut=use_lut))(
-                enc_loc, tbl_loc)
+            return _slab_decode(ChunkedLanes(*enc_loc),
+                                lambda c: jax.tree.map(lambda a: a[c],
+                                                       TableSet(*tbl_loc)))
 
         sym_full, probes_full = shard_map(
             body, mesh=mesh,
             in_specs=(jax.tree.map(lambda _: P("chunks"), sub),
                       _chunked_table_specs(tbl, sharded=True)),
-            out_specs=out_specs)(sub, tbl_full)
+            out_specs=out_specs, check_rep=False)(sub, tbl_full)
     else:
         def body(enc_loc, tbl_rep):
-            return jax.vmap(
-                lambda e: coder.decode(EncodedLanes(*e), chunk_size, tbl_rep,
-                                       prob_bits, use_lut=use_lut))(enc_loc)
+            return _slab_decode(ChunkedLanes(*enc_loc),
+                                lambda c: TableSet(*tbl_rep))
 
         sym_full, probes_full = shard_map(
             body, mesh=mesh,
             in_specs=(jax.tree.map(lambda _: P("chunks"), sub),
                       _chunked_table_specs(tbl, sharded=False)),
-            out_specs=out_specs)(sub, tbl)
+            out_specs=out_specs, check_rep=False)(sub, tbl)
 
     lanes = sym_full.shape[1]
     syms = [sym_full.swapaxes(0, 1).reshape(lanes, n_full * chunk_size)]
@@ -153,9 +190,8 @@ def decode_chunked(chunks: ChunkedLanes, n_symbols: int, tbl: TableSet,
     if tail_len:
         tbl_tail = (coder.slice_tables(tbl, n_full * chunk_size, n_symbols)
                     if per_position else tbl)
-        sym_tail, probes_tail = coder.decode(
-            coder.chunk_encoded(chunks, n_full), tail_len, tbl_tail,
-            prob_bits, use_lut=use_lut)
+        sym_tail, probes_tail = _decode_one(
+            coder.chunk_encoded(chunks, n_full), tbl_tail, n=tail_len)
         syms.append(sym_tail)
         probe_sums.append(probes_tail * tail_len)
     out = jnp.concatenate(syms, axis=1)

@@ -211,3 +211,25 @@ def histogram_compress(symbols: np.ndarray, k: int,
         counts, prob_bits))
     enc = coder.encode(jnp.asarray(symbols, jnp.int32), tbl)
     return enc, tbl
+
+
+def histogram_decompress(enc: coder.EncodedLanes, n_symbols: int, tbl,
+                         prob_bits: int = C.PROB_BITS, predictor=None,
+                         backend: str = "kernel", interpret: bool = True):
+    """Static-table decode — through the Pallas kernel by default.
+
+    The serving counterpart of :func:`histogram_compress`: both backends
+    consume ``core.search``, so symbols and probe telemetry are identical
+    whether the decode ran in-kernel (``backend="kernel"``, interpret mode
+    on CPU) or in the pure-JAX lane coder (``backend="coder"``).
+    ``predictor`` enables prediction-guided search (e.g. the paper's
+    ``NeighborAverage`` for image rows).  Returns (symbols, avg_probes).
+    """
+    if backend == "kernel":
+        from repro.kernels.ops import rans_decode
+        return rans_decode(enc, n_symbols, tbl, prob_bits=prob_bits,
+                           predictor=predictor, interpret=interpret)
+    if backend == "coder":
+        return coder.decode(enc, n_symbols, tbl, prob_bits,
+                            predictor=predictor)
+    raise ValueError(f"unknown decode backend {backend!r}")

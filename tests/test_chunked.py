@@ -131,6 +131,62 @@ def test_container_v1_still_unpacks(case):
     np.testing.assert_array_equal(np.asarray(dec2), np.asarray(syms))
 
 
+def test_container_v2_checksum_detects_corruption(case):
+    """Default v2 blobs carry per-(chunk, lane) CRC32s; a flipped payload
+    byte fails unpack with an error naming the corrupt cell."""
+    tbl, syms = case
+    ch = coder.encode_chunked(syms, tbl, 17)
+    blob = bitstream.pack_chunked(*map(np.asarray, ch), chunk_size=17,
+                                  n_symbols=T)
+    # locate the payload start and cell (chunk 1, lane 1)'s first byte
+    lanes, cells = 3, coder.num_chunks(T, 17) * 3
+    base = bitstream._HEADER_V2.size + cells * bitstream._INDEX_V2C_DT.itemsize
+    lengths = np.asarray(ch.length).reshape(-1)
+    cell = 1 * lanes + 1
+    off = base + int(lengths[:cell].sum())
+    corrupt = bytearray(blob)
+    corrupt[off] ^= 0xFF
+    with pytest.raises(ValueError, match="chunk 1, lane 1"):
+        bitstream.unpack_chunked(bytes(corrupt))
+    # the pristine blob still unpacks and roundtrips
+    buf, start, meta = bitstream.unpack_chunked(blob)
+    ch2 = coder.ChunkedLanes(jnp.asarray(buf), jnp.asarray(start),
+                             jnp.asarray(buf.shape[-1] - start))
+    dec, _ = coder.decode_chunked(ch2, T, tbl, 17)
+    np.testing.assert_array_equal(np.asarray(dec), np.asarray(syms))
+
+
+def test_container_v2_checksumless_still_unpacks(case):
+    """flags == 0 blobs (the pre-checksum v2 layout) remain readable, and
+    corruption passes silently there — the integrity bit is opt-out."""
+    tbl, syms = case
+    ch = coder.encode_chunked(syms, tbl, 17)
+    blob = bitstream.pack_chunked(*map(np.asarray, ch), chunk_size=17,
+                                  n_symbols=T, checksums=False)
+    assert len(blob) == bitstream.compressed_size_chunked(
+        np.asarray(ch.length), checksums=False)
+    assert len(blob) < bitstream.compressed_size_chunked(
+        np.asarray(ch.length))
+    buf, start, meta = bitstream.unpack_chunked(blob)
+    ch2 = coder.ChunkedLanes(jnp.asarray(buf), jnp.asarray(start),
+                             jnp.asarray(buf.shape[-1] - start))
+    dec, _ = coder.decode_chunked(ch2, T, tbl, 17)
+    np.testing.assert_array_equal(np.asarray(dec), np.asarray(syms))
+
+
+@pytest.mark.parametrize("predictor", [None, "navg"])
+def test_chunked_decode_predictor_matches_monolithic_symbols(case, predictor):
+    """decode_chunked with a predictor: bit-exact symbols; probe totals
+    match the kernel path (tested cross-backend in test_search_unified)."""
+    from repro.core.predictors import NeighborAverage
+    pred = NeighborAverage(4, 8) if predictor else None
+    tbl, syms = case
+    ch = coder.encode_chunked(syms, tbl, 17)
+    dec, probes = coder.decode_chunked(ch, T, tbl, 17, predictor=pred)
+    np.testing.assert_array_equal(np.asarray(dec), np.asarray(syms))
+    assert float(probes) > 0
+
+
 def test_unpack_rejects_v2_blob(case):
     tbl, syms = case
     ch = coder.encode_chunked(syms, tbl, 17)
@@ -174,6 +230,30 @@ def test_shard_map_per_position(per_position_case):
         np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
     dec, _ = pchunked.decode_chunked(ch, T, tbl, 17, mesh=mesh)
     np.testing.assert_array_equal(np.asarray(dec), np.asarray(syms))
+
+
+def test_shard_map_kernel_backend_matches_coder(case):
+    """backend="kernel" routes every chunk through the Pallas decode kernel
+    (interpret mode) under the same shard_map placement — byte- and
+    probe-identical to the coder backend, ragged tail included."""
+    from repro.core.predictors import NeighborAverage
+    tbl, syms = case
+    mesh = pchunked.chunk_mesh()
+    ch = coder.encode_chunked(syms, tbl, 17)
+    for pred in (None, NeighborAverage(4, 8)):
+        a, pa = pchunked.decode_chunked(ch, T, tbl, 17, mesh=mesh,
+                                        backend="kernel", predictor=pred)
+        b, pb = pchunked.decode_chunked(ch, T, tbl, 17, mesh=mesh,
+                                        backend="coder", predictor=pred)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(syms))
+        assert abs(float(pa) - float(pb)) < 1e-5
+    # the no-mesh kernel fallback (ops.rans_decode_chunked) agrees too
+    c, pc = pchunked.decode_chunked(ch, T, tbl, 17, mesh=None,
+                                    backend="kernel")
+    np.testing.assert_array_equal(np.asarray(c), np.asarray(syms))
+    with pytest.raises(ValueError, match="backend"):
+        pchunked.decode_chunked(ch, T, tbl, 17, backend="nope")
 
 
 def test_sharded_fallback_paths(case):

@@ -10,6 +10,7 @@ import jax.numpy as jnp
 import pytest
 
 from repro.core import coder, constants as C, spc
+from repro.core.predictors import NeighborAverage
 from repro.kernels import ops, ref
 
 jax.config.update("jax_platforms", "cpu")
@@ -94,9 +95,15 @@ def test_decode_kernel_probes_match_core():
         np.bincount(syms.ravel(), minlength=k)))
     enc = coder.encode(jnp.asarray(syms), tbl)
     for use_pred in (False, True):
-        got, g_avg = ops.rans_decode(enc, t, tbl, use_pred=use_pred)
-        want, w_avg = ref.rans_decode_ref(enc, t, tbl, use_pred=use_pred)
+        got, g_avg, g_lanes = ops.rans_decode(enc, t, tbl, use_pred=use_pred,
+                                              lane_probes=True)
+        want, w_avg, w_lanes = ref.rans_decode_ref(enc, t, tbl,
+                                                   use_pred=use_pred,
+                                                   lane_probes=True)
         np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        # canonical accounting (core/search.py): integer-identical per lane
+        np.testing.assert_array_equal(np.asarray(g_lanes),
+                                      np.asarray(w_lanes))
         assert abs(float(g_avg) - float(w_avg)) < 1e-5
     # prediction must help on this correlated data
     _, base = ops.rans_decode(enc, t, tbl, use_pred=False)
@@ -150,12 +157,23 @@ def test_decode_kernel_on_chunk_payloads(use_pred):
     ch = coder.encode_chunked(jnp.asarray(syms), tbl, chunk_size)
     for c, n in enumerate(coder.chunk_lengths(t, chunk_size)):
         enc_c = coder.chunk_encoded(ch, c)
-        got, g_avg = ops.rans_decode(enc_c, n, tbl, use_pred=use_pred)
-        want, w_avg = ref.rans_decode_ref(enc_c, n, tbl, use_pred=use_pred)
+        got, g_avg, g_lanes = ops.rans_decode(enc_c, n, tbl,
+                                              use_pred=use_pred,
+                                              lane_probes=True)
+        want, w_avg, w_lanes = ref.rans_decode_ref(enc_c, n, tbl,
+                                                   use_pred=use_pred,
+                                                   lane_probes=True)
         np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
         np.testing.assert_array_equal(
             np.asarray(got), syms[:, c * chunk_size:c * chunk_size + n])
+        np.testing.assert_array_equal(np.asarray(g_lanes),
+                                      np.asarray(w_lanes), f"chunk {c}")
         assert abs(float(g_avg) - float(w_avg)) < 1e-5, f"chunk {c} probes"
+    # the one-shot chunked wrapper mirrors rans_encode_chunked
+    pred = NeighborAverage(window=4, delta=8) if use_pred else None
+    got_all, _ = ops.rans_decode_chunked(ch, t, tbl, chunk_size,
+                                         predictor=pred)
+    np.testing.assert_array_equal(np.asarray(got_all), syms)
 
 
 # ---------------------------------------------------------------------------

@@ -9,8 +9,8 @@ from repro.configs import get_smoke_config
 from repro.core import bitstream
 from repro.data.pipeline import image_rows, synthetic_image, token_stream
 from repro.models import init_model
-from repro.serve.compress import (histogram_compress, lm_compress,
-                                  lm_decompress)
+from repro.serve.compress import (histogram_compress, histogram_decompress,
+                                  lm_compress, lm_decompress)
 from repro.serve.engine import generate, prefill
 
 jax.config.update("jax_platforms", "cpu")
@@ -69,6 +69,29 @@ def test_histogram_compress_images():
     # smooth images compress well below 8 bits/px even with a static table
     bits = float(np.asarray(enc.length).sum()) * 8 / rows.size
     assert bits < 6.0, bits
+
+
+def test_histogram_decompress_backends_agree():
+    """The serve static path decodes through the Pallas kernel by default;
+    both backends share core/search.py so symbols and probe telemetry are
+    identical."""
+    from repro.core import coder
+    from repro.core.predictors import NeighborAverage
+    img = synthetic_image(32, 64, seed=7)
+    rows = img.reshape(8, -1).astype(np.int64)
+    enc, tbl = histogram_compress(rows, 256)
+    t = rows.shape[1]
+    for pred in (None, NeighborAverage(window=4, delta=8)):
+        ks, kp = histogram_decompress(coder.EncodedLanes(*enc), t, tbl,
+                                      predictor=pred, backend="kernel")
+        cs, cp = histogram_decompress(coder.EncodedLanes(*enc), t, tbl,
+                                      predictor=pred, backend="coder")
+        np.testing.assert_array_equal(np.asarray(ks), rows)
+        np.testing.assert_array_equal(np.asarray(ks), np.asarray(cs))
+        assert abs(float(kp) - float(cp)) < 1e-6
+    with pytest.raises(ValueError, match="backend"):
+        histogram_decompress(coder.EncodedLanes(*enc), t, tbl,
+                             backend="nope")
 
 
 def test_container_integration(params):
