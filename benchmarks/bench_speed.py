@@ -4,10 +4,23 @@ Protocol mirrors the paper: same symbolization, same CDFs (so bitstreams are
 identical), coder kernels only (no probability generation, no host I/O),
 cycle-normalized with a nominal clock (the paper used 2.9 GHz for its M4
 baseline; we time both sides on *this* host so the ratio is self-normalizing).
+
+Encode-backend sweep (``--out BENCH_encode.json``): coder vs Pallas kernel
+x static / per-position / per-lane / chunked table layouts.  Every point
+asserts the two backends' streams are byte-identical before timing, so the
+JSON doubles as a cross-backend differential record.  NOTE: the kernel runs
+in interpret mode on CPU — its wall-clock here measures the *interpreter*,
+not TPU hardware; the point of the sweep is the bit-exactness seal plus a
+tracked shape/latency baseline to diff against real-TPU runs
+(``tests/test_tpu_hw.py``).
+
+    PYTHONPATH=src python -m benchmarks.bench_speed [--out BENCH_encode.json]
 """
 
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import numpy as np
@@ -77,6 +90,74 @@ def run(lanes: int = 128, t: int = 2048, py_symbols: int = 40_000,
     }
 
 
+def _timed_encode(fn, syms):
+    out = fn(syms)
+    jax.block_until_ready(out.buf)
+    t0 = time.perf_counter()
+    out = fn(syms)
+    jax.block_until_ready(out.buf)
+    return (time.perf_counter() - t0) / syms.size, out
+
+
+def run_encode_backends(seed: int = 0) -> list[dict]:
+    """coder vs kernel x static/per-position/per-lane/chunked encode.
+
+    Shapes are deliberately modest: the kernel side runs the Pallas
+    *interpreter* on CPU (see module docstring).  Each point asserts
+    byte-identity between backends before reporting wall-clock.
+    """
+    from repro.kernels import ops
+    rng = np.random.default_rng(seed)
+
+    def static_case(k, lanes, t):
+        tbl = spc.tables_from_probs(
+            jnp.asarray(rng.dirichlet(np.ones(k) * 0.5), jnp.float32))
+        return tbl, jnp.asarray(rng.integers(0, k, (lanes, t)), jnp.int32)
+
+    def perpos_case(k, lanes, t):
+        probs = rng.dirichlet(np.ones(k) * 0.5, size=t).astype(np.float32)
+        tbl = spc.tables_from_probs(jnp.asarray(probs))
+        return tbl, jnp.asarray(rng.integers(0, k, (lanes, t)), jnp.int32)
+
+    def perlane_case(k, lanes, t):
+        probs = rng.dirichlet(np.ones(k) * 0.5,
+                              size=(t, lanes)).astype(np.float32)
+        tbl = spc.tables_from_probs(jnp.asarray(probs))
+        return tbl, jnp.asarray(rng.integers(0, k, (lanes, t)), jnp.int32)
+
+    cases = [
+        ("static", static_case(256, 128, 512), None),
+        ("perpos_TK", perpos_case(64, 16, 256), None),
+        ("perlane_TLK", perlane_case(32, 8, 128), None),
+        ("chunked_static", static_case(256, 128, 512), 128),
+        ("chunked_perpos", perpos_case(64, 16, 256), 64),
+    ]
+    points = []
+    for name, (tbl, syms), chunk in cases:
+        if chunk is None:
+            coder_fn = jax.jit(lambda s, tb=tbl: coder.encode(s, tb))
+            kern_fn = lambda s, tb=tbl: ops.rans_encode(s, tb)  # noqa: E731
+        else:
+            coder_fn = (lambda s, tb=tbl, c=chunk:
+                        coder.encode_chunked(s, tb, c))
+            kern_fn = (lambda s, tb=tbl, c=chunk:
+                       ops.rans_encode_chunked(s, tb, c))
+        c_us, c_out = _timed_encode(coder_fn, syms)
+        k_us, k_out = _timed_encode(kern_fn, syms)
+        for a, b in zip(c_out, k_out):
+            assert np.array_equal(np.asarray(a), np.asarray(b)), (
+                f"{name}: backend streams diverge")
+        points.append({
+            "name": name, "lanes": int(syms.shape[0]),
+            "n_symbols": int(syms.shape[1]),
+            "chunk_size": chunk,
+            "coder_us_per_symbol": c_us * 1e6,
+            "kernel_interpret_us_per_symbol": k_us * 1e6,
+            "backends_byte_identical": True,
+        })
+    return points
+
+
 def main(emit):
     r = run()
     emit("fig4a_encode_python_baseline", r["py_enc_us"],
@@ -88,3 +169,25 @@ def main(emit):
          f"speedup={r['speedup_dec']:.1f}x (paper: 70.9x)")
     emit("fig4a_decode_ras_lut_beyond_paper", r["jax_lut_us"],
          f"speedup={r['speedup_dec_lut']:.1f}x (static-table O(1) LUT)")
+    for p in run_encode_backends():
+        emit(f"encode_backend_{p['name']}_coder",
+             p["coder_us_per_symbol"],
+             "us/symbol, pure-JAX lane coder")
+        emit(f"encode_backend_{p['name']}_kernel",
+             p["kernel_interpret_us_per_symbol"],
+             "us/symbol, Pallas kernel (INTERPRET mode; byte-identical)")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_encode.json")
+    args = ap.parse_args()
+    pts = run_encode_backends()
+    with open(args.out, "w") as f:
+        json.dump(pts, f, indent=2)
+    for p in pts:
+        print(f"{p['name']}: coder {p['coder_us_per_symbol']:.3f} us/sym, "
+              f"kernel(interpret) "
+              f"{p['kernel_interpret_us_per_symbol']:.3f} us/sym, "
+              f"byte-identical={p['backends_byte_identical']}")
+    print(f"wrote {len(pts)} points -> {args.out}")

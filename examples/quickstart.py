@@ -26,8 +26,7 @@ print(f"SPC: {tbl.freq.shape[-1]} symbols, mass = {int(tbl.freq.sum())} "
 
 # 2. multi-lane encode (each lane is an independent rANS stream)
 enc = coder.encode(jnp.asarray(rows, jnp.int32), tbl)
-blob = bitstream.pack(np.asarray(enc.buf), np.asarray(enc.start),
-                      np.asarray(enc.length), t)
+blob = bitstream.pack(*map(np.asarray, enc), n_symbols=t)
 print(f"encoded {lanes * t} symbols -> {len(blob)} bytes "
       f"({len(blob) * 8 / (lanes * t):.2f} bits/symbol)")
 
@@ -41,7 +40,7 @@ print(f"decode OK; CDF probes/symbol: {float(probes_base):.2f} -> "
       f"({1 - float(probes)/float(probes_base):.0%} fewer)")
 
 # 4. bit-exactness vs the scalar golden reference
-buf, start, length = map(np.asarray, enc)
+buf, start, length, _ = map(np.asarray, enc)
 ref = golden.encode(rows[0], np.asarray(tbl.freq), np.asarray(tbl.cdf))
 assert buf[0, start[0]:start[0] + length[0]].tobytes() == ref
 print("lane 0 bitstream is byte-identical to the golden reference")

@@ -5,13 +5,16 @@ Public surface:
   coder      — multi-lane two-stage rANS encode/decode (T2, T4)
   search     — shared prediction-guided CDF search core + canonical
                Fig. 4(b) probe accounting (consumed by coder AND kernels)
+  update     — shared two-stage encode-update core + fixed-depth renorm
+               record emission (consumed by coder AND kernels; DESIGN.md §6)
   predictors — prediction-guided decoding anchors (T3)
-  bitstream  — per-lane container format
+  bitstream  — per-lane container format + device stream types +
+               record-stream compaction
   golden     — scalar numpy reference (the bit-exactness oracle)
   python_baseline — the paper's Fig-4(a) software comparison target
 """
 
-from repro.core import constants, search
+from repro.core import constants, search, update
 from repro.core.spc import (TableSet, build_tables, quantize_probs,
                             tables_from_logits, tables_from_probs, decode_lut,
                             store_bf16)
@@ -25,7 +28,8 @@ from repro.core.predictors import (NeighborAverage, LastValue, ZeroPredictor,
                                    Prediction, model_topk_candidates)
 
 __all__ = [
-    "constants", "search", "TableSet", "build_tables", "quantize_probs",
+    "constants", "search", "update", "TableSet", "build_tables",
+    "quantize_probs",
     "tables_from_logits", "tables_from_probs", "decode_lut", "store_bf16",
     "EncState", "DecState", "EncodedLanes", "ChunkedLanes", "encode",
     "decode", "encode_chunked", "decode_chunked", "encode_put", "decode_get",

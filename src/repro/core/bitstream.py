@@ -41,22 +41,116 @@ are stored explicitly (though derivable from lengths) so a reader can seek
 to any (chunk, lane) cell in O(1) — random access into the compressed
 stream, chunk-granular.
 
-Pack/unpack are numpy-only; the device-side representations are
-``coder.EncodedLanes`` (padded (lanes, cap) uint8 + start/length) and
-``coder.ChunkedLanes`` ((n_chunks, lanes, cap) + per-cell start/length).
+This module also owns the **device-side stream representations** —
+:class:`EncodedLanes` (padded (lanes, cap) uint8 + start/length) and
+:class:`ChunkedLanes` ((n_chunks, lanes, cap) + per-cell start/length) —
+and the shared stream compaction :func:`compact_records` that turns the
+fixed-shape renorm records of :mod:`repro.core.update` into right-aligned
+per-lane streams.  Compaction lives here (not in ``kernels``) because it is
+part of the *wire format*, consumed by ``core.coder.encode_records`` and by
+every kernel-backed encode path; ``repro.kernels.ops`` re-exports it for
+back-compat.  Pack/unpack remain numpy-only host-side.
 ``unpack`` keeps full back-compat for v1 blobs; ``unpack_chunked`` reads
 both versions (a v1 blob is presented as a single-chunk stream).
 """
 
 from __future__ import annotations
 
+import functools
 import struct
 import zlib
 from typing import NamedTuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import constants as C
+
+_U32J = jnp.uint32
+_U8J = jnp.uint8
+_I32J = jnp.int32
+
+
+class EncodedLanes(NamedTuple):
+    """Device-side multi-lane streams: ``buf[lane, start[lane]:start[lane] +
+    length[lane]]`` is lane ``lane``'s forward-readable byte stream.
+
+    ``overflow`` (when present) flags lanes whose stream did not fit the
+    ``cap`` the encoder was given: their buffer holds a *truncated* stream
+    (writes past the buffer head are dropped, never wrapped — see
+    :func:`compact_records`), ``length`` reports the bytes that were
+    *needed*, and the lane must be re-encoded with a larger cap before the
+    stream is decodable or packable.  ``None`` means the producer predates
+    the flag (e.g. a container unpack) — overflow cannot occur there.
+    """
+
+    buf: jax.Array      # (lanes, cap) uint8
+    start: jax.Array    # (lanes,) int32: stream begins at buf[lane, start:]
+    length: jax.Array   # (lanes,) int32 bytes per lane
+    overflow: jax.Array | None = None   # (lanes,) bool: cap exceeded
+
+
+class ChunkedLanes(NamedTuple):
+    """Chunked multi-lane streams (the streaming container's device form).
+
+    Chunk ``c`` of lane ``l`` occupies
+    ``buf[c, l, start[c, l] : start[c, l] + length[c, l]]`` and is a complete
+    standalone rANS stream (own 4-byte state header, own flush): byte-for-byte
+    identical to ``coder.encode`` of that chunk's symbols alone.  Chunks
+    therefore decode independently and in any order — the handle the
+    ``parallel`` package shards across devices.  ``overflow`` is the
+    per-(chunk, lane) analogue of :attr:`EncodedLanes.overflow`.
+    """
+
+    buf: jax.Array      # (n_chunks, lanes, cap) uint8
+    start: jax.Array    # (n_chunks, lanes) int32
+    length: jax.Array   # (n_chunks, lanes) int32
+    overflow: jax.Array | None = None   # (n_chunks, lanes) bool
+
+
+@functools.partial(jax.jit, static_argnames=("cap",))
+def compact_records(bytes_rec: jax.Array,   # (T, 2, lanes) uint8
+                    mask_rec: jax.Array,    # (T, 2, lanes) uint8 0/1
+                    states: jax.Array,      # (lanes,) uint32 final states
+                    cap: int) -> EncodedLanes:
+    """Fixed-shape renorm records -> right-aligned per-lane streams.
+
+    Emission order is t descending then renorm step ascending (exactly the
+    order :func:`repro.core.update.encode_step` produces); the stream
+    stores emissions reversed, preceded by the 4-byte big-endian state
+    header.  Rows with mask 0 (non-emitting steps, or padding rows from a
+    blocked kernel) contribute nothing.
+
+    Overflow guard: when a lane's stream (4 + emitted bytes) exceeds
+    ``cap``, its would-be indices go negative; they are clamped to the
+    out-of-bounds drop sentinel instead of being scattered (negative
+    indices wrap under numpy semantics and would silently corrupt the
+    buffer head).  The lane's ``overflow`` flag is set and ``length``
+    reports the bytes that were needed.
+    """
+    t_len, r, lanes = bytes_rec.shape
+    seq_b = bytes_rec[::-1].reshape(t_len * r, lanes)
+    seq_m = mask_rec[::-1].reshape(t_len * r, lanes).astype(_I32J)
+    n_emit = jnp.sum(seq_m, axis=0)                   # (lanes,)
+    pos = jnp.cumsum(seq_m, axis=0) - seq_m           # exclusive prefix
+    length = 4 + n_emit
+    start = cap - length                              # may go negative
+    overflow = length > cap
+    idx = start[None, :] + 4 + (n_emit[None, :] - 1 - pos)
+    # dropped when not emitted OR past the buffer head (overflow clamp)
+    idx = jnp.where((seq_m > 0) & (idx >= 0), idx, cap)
+    lane_ix = jnp.broadcast_to(jnp.arange(lanes)[None, :], idx.shape)
+    buf = jnp.zeros((lanes, cap), _U8J)
+    buf = buf.at[lane_ix.reshape(-1), idx.reshape(-1)].set(
+        seq_b.reshape(-1), mode="drop")
+    lane = jnp.arange(lanes)
+    for i, shift in enumerate((24, 16, 8, 0)):
+        hidx = jnp.where(start + i >= 0, start + i, cap)
+        buf = buf.at[lane, hidx].set(
+            ((states >> shift) & _U32J(0xFF)).astype(_U8J), mode="drop")
+    return EncodedLanes(buf=buf, start=jnp.maximum(start, 0),
+                        length=length, overflow=overflow)
 
 MAGIC = b"RAS1"
 MAGIC_V2 = b"RAS2"
@@ -86,9 +180,26 @@ class ChunkedContainer(NamedTuple):
     n_chunks: int
 
 
+def _check_no_overflow(overflow) -> None:
+    if overflow is not None and np.asarray(overflow).any():
+        bad = np.argwhere(np.asarray(overflow)).tolist()
+        raise ValueError(
+            f"cannot pack overflowed streams (cells {bad}): the encoder ran "
+            "out of buffer capacity and the payload is truncated — "
+            "re-encode with a larger cap")
+
+
 def pack(enc_buf: np.ndarray, start: np.ndarray, length: np.ndarray,
+         overflow: np.ndarray | None = None, *,
          n_symbols: int, prob_bits: int = C.PROB_BITS) -> bytes:
-    """EncodedLanes arrays (host numpy) -> container v1 bytes."""
+    """EncodedLanes arrays (host numpy) -> container v1 bytes.
+
+    ``overflow`` (the optional 4th EncodedLanes field, so
+    ``pack(*map(np.asarray, enc), n_symbols=...)`` forwards it) is
+    validated: packing a truncated stream raises instead of shipping a
+    blob that cannot decode.
+    """
+    _check_no_overflow(overflow)
     enc_buf = np.asarray(enc_buf, np.uint8)
     start = np.asarray(start, np.int64)
     length = np.asarray(length, np.int64)
@@ -149,18 +260,22 @@ def _span_indices(start: np.ndarray, length: np.ndarray,
 
 
 def pack_chunked(buf: np.ndarray, start: np.ndarray, length: np.ndarray,
+                 overflow: np.ndarray | None = None, *,
                  chunk_size: int, n_symbols: int,
                  prob_bits: int = C.PROB_BITS,
                  checksums: bool = True) -> bytes:
     """ChunkedLanes arrays (host numpy) -> container v2 bytes.
 
     ``buf`` is (n_chunks, lanes, cap); cell (c, l) holds its stream at
-    ``buf[c, l, start[c, l] : start[c, l] + length[c, l]]``.
+    ``buf[c, l, start[c, l] : start[c, l] + length[c, l]]``.  ``overflow``
+    (the optional 4th ChunkedLanes field) is validated — truncated cells
+    refuse to pack (see :func:`pack`).
 
     ``checksums`` (default on) stores a CRC32 of every cell's payload in the
     index (``FLAG_CHUNK_CRC32``); :func:`unpack_chunked` verifies them and
     names the corrupt (chunk, lane) on mismatch.
     """
+    _check_no_overflow(overflow)
     buf = np.asarray(buf, np.uint8)
     start = np.asarray(start, np.int64)
     length = np.asarray(length, np.int64)

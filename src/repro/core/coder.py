@@ -37,70 +37,22 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import constants as C
-from repro.core import search
+from repro.core import search, update
+from repro.core.bitstream import (ChunkedLanes, EncodedLanes,  # noqa: F401
+                                  compact_records)
 from repro.core.search import take_gather as _gather
 from repro.core.spc import TableSet
+from repro.core.update import barrett_div, umulhi32  # noqa: F401  (re-export)
 
 _U32 = jnp.uint32
 _U8 = jnp.uint8
 _I32 = jnp.int32
-_M16 = _U32(0xFFFF)
 
 
 # ---------------------------------------------------------------------------
-# exact 32x32 -> high-32 multiply from 16-bit limbs (no 64-bit types needed)
-# ---------------------------------------------------------------------------
-
-def umulhi32(a: jax.Array, b: jax.Array) -> jax.Array:
-    """Exact high 32 bits of a 32x32 unsigned product, in pure uint32 ops.
-
-    TPU VPUs have no 64-bit integer path; the RTL has a real divider.  This
-    limb decomposition is the TPU-native replacement: all partial products
-    fit uint32 and every carry is accounted (proof in DESIGN.md §4).
-    """
-    a = a.astype(_U32)
-    b = b.astype(_U32)
-    al, ah = a & _M16, a >> 16
-    bl, bh = b & _M16, b >> 16
-    ll = al * bl
-    lh = al * bh
-    hl = ah * bl
-    hh = ah * bh
-    mid = (ll >> 16) + (lh & _M16) + (hl & _M16)
-    return hh + (lh >> 16) + (hl >> 16) + (mid >> 16)
-
-
-def barrett_div(s: jax.Array, rcp: jax.Array, rshift: jax.Array) -> jax.Array:
-    """floor(s / f) via the SPC reciprocal; exact for s < 2**31, f >= 2."""
-    return umulhi32(s, rcp) >> rshift
-
-
-# ---------------------------------------------------------------------------
-# per-lane table gathers (tables may be shared (K,) or per-lane (lanes, K))
-# ---------------------------------------------------------------------------
-
-class _SymEntry(NamedTuple):
-    freq: jax.Array
-    start: jax.Array   # C(x)
-    rcp: jax.Array
-    rshift: jax.Array
-    bias: jax.Array
-    cmpl: jax.Array
-    x_max: jax.Array
-
-
-def gather_symbol(tbl: TableSet, x: jax.Array) -> _SymEntry:
-    return _SymEntry(freq=_gather(tbl.freq, x),
-                     start=_gather(tbl.cdf[..., :-1], x),
-                     rcp=_gather(tbl.rcp, x),
-                     rshift=_gather(tbl.rshift, x),
-                     bias=_gather(tbl.bias, x),
-                     cmpl=_gather(tbl.cmpl, x),
-                     x_max=_gather(tbl.x_max, x))
-
-
-# ---------------------------------------------------------------------------
-# encoder
+# encoder — the two-stage update itself lives in core/update.py (single
+# source, shared verbatim with the Pallas encode kernel); this layer owns
+# the per-lane backward byte buffers the records land in.
 # ---------------------------------------------------------------------------
 
 class EncState(NamedTuple):
@@ -120,27 +72,31 @@ def encoder_init(lanes: int, cap: int) -> EncState:
 
 def _emit_backward(buf, ptr, byte, cond):
     """Masked one-byte backward emit; non-emitting lanes scatter out of
-    bounds and are dropped (the RTL's lane clock gating)."""
+    bounds and are dropped (the RTL's lane clock gating).  Lanes whose
+    cursor ran past the buffer head (cap overflow) also hit the drop
+    sentinel — a negative scatter index would *wrap* under numpy semantics
+    and silently corrupt the stream tail.  The cursor keeps decrementing so
+    the caller can report the true byte need and flag the overflow."""
     lanes, cap = buf.shape
     lane_idx = jnp.arange(lanes)
-    widx = jnp.where(cond, ptr - 1, cap)
+    widx = jnp.where(cond & (ptr > 0), ptr - 1, cap)
     buf = buf.at[lane_idx, widx].set(byte, mode="drop")
     return buf, ptr - cond.astype(_I32)
 
 
 def encode_put(st: EncState, x: jax.Array, tbl: TableSet) -> EncState:
-    """Push one symbol per lane (Eq. 1 + two-stage renorm)."""
-    e = gather_symbol(tbl, x)
-    s, buf, ptr = st.s, st.buf, st.ptr
-    # stage A: byte renorm (fixed 2-step masked pipeline)
-    for _ in range(C.MAX_RENORM_STEPS):
-        cond = s >= e.x_max
-        buf, ptr = _emit_backward(buf, ptr, (s & _U32(0xFF)).astype(_U8), cond)
-        s = jnp.where(cond, s >> C.RENORM_SHIFT, s)
-    # stage B: two-path update. a1 = q<<n and a2 = (s - q f) + C are fused
-    # into s + bias + q*cmpl (identical integer result, incl. f==1 corner).
-    q = barrett_div(s, e.rcp, e.rshift)
-    s = s + e.bias + q * e.cmpl
+    """Push one symbol per lane (Eq. 1 + two-stage renorm).
+
+    Delegates the staged renorm + two-path update to
+    :func:`repro.core.update.encode_step` (the single-source core shared
+    with the Pallas kernel) and lands the emitted records backward in the
+    per-lane buffers.
+    """
+    e = update.gather_encode_entry(tbl, x)
+    s, recs = update.encode_step(st.s, e)
+    buf, ptr = st.buf, st.ptr
+    for byte, cond in recs:
+        buf, ptr = _emit_backward(buf, ptr, byte, cond)
     return EncState(s, buf, ptr)
 
 
@@ -152,12 +108,6 @@ def encoder_flush(st: EncState) -> EncState:
         buf, ptr = _emit_backward(
             buf, ptr, ((s >> shift) & _U32(0xFF)).astype(_U8), true)
     return EncState(s, buf, ptr)
-
-
-class EncodedLanes(NamedTuple):
-    buf: jax.Array      # (lanes, cap) uint8
-    start: jax.Array    # (lanes,) int32: stream begins at buf[lane, start:]
-    length: jax.Array   # (lanes,) int32 bytes per lane
 
 
 def default_cap(n_symbols: int) -> int:
@@ -185,14 +135,8 @@ def encode_records(symbols: jax.Array, tbl: TableSet,
             x_t, tbl_t = xs
         else:
             x_t, tbl_t = xs, tbl
-        e = gather_symbol(tbl_t, x_t)
-        recs = []
-        for _ in range(C.MAX_RENORM_STEPS):
-            cond = s >= e.x_max
-            recs.append(((s & _U32(0xFF)).astype(_U8), cond))
-            s = jnp.where(cond, s >> C.RENORM_SHIFT, s)
-        q = barrett_div(s, e.rcp, e.rshift)
-        s = s + e.bias + q * e.cmpl
+        e = update.gather_encode_entry(tbl_t, x_t)
+        s, recs = update.encode_step(s, e)
         (b0, c0), (b1, c1) = recs
         return s, (b0, c0, b1, c1)
 
@@ -202,7 +146,6 @@ def encode_records(symbols: jax.Array, tbl: TableSet,
     # stack into kernel-compatible (T, 2, lanes) records and compact
     bytes_rec = jnp.stack([b0, b1], axis=1)
     mask_rec = jnp.stack([c0, c1], axis=1).astype(_U8)
-    from repro.kernels.ops import compact_records
     return compact_records(bytes_rec, mask_rec, s, cap)
 
 
@@ -230,29 +173,16 @@ def encode(symbols: jax.Array, tbl: TableSet,
     xs = (symbols.T, tbl) if per_position else symbols.T  # scan over T
     st, _ = jax.lax.scan(step, encoder_init(lanes, cap), xs, reverse=True)
     st = encoder_flush(st)
-    return EncodedLanes(buf=st.buf, start=st.ptr,
-                        length=jnp.asarray(cap, _I32) - st.ptr)
+    # a cursor past the buffer head means the stream did not fit `cap`:
+    # the writes were dropped (never wrapped), length reports the need.
+    return EncodedLanes(buf=st.buf, start=jnp.maximum(st.ptr, 0),
+                        length=jnp.asarray(cap, _I32) - st.ptr,
+                        overflow=st.ptr < 0)
 
 
 # ---------------------------------------------------------------------------
 # chunked streaming encode (independent per-chunk flush -> parallel decode)
 # ---------------------------------------------------------------------------
-
-class ChunkedLanes(NamedTuple):
-    """Chunked multi-lane streams (the streaming container's device form).
-
-    Chunk ``c`` of lane ``l`` occupies
-    ``buf[c, l, start[c, l] : start[c, l] + length[c, l]]`` and is a complete
-    standalone rANS stream (own 4-byte state header, own flush): byte-for-byte
-    identical to ``encode`` of that chunk's symbols alone.  Chunks therefore
-    decode independently and in any order — the handle the ``parallel``
-    package shards across devices.
-    """
-
-    buf: jax.Array      # (n_chunks, lanes, cap) uint8
-    start: jax.Array    # (n_chunks, lanes) int32
-    length: jax.Array   # (n_chunks, lanes) int32
-
 
 def num_chunks(n_symbols: int, chunk_size: int) -> int:
     """Chunk count covering ``n_symbols`` (last chunk may be ragged)."""
@@ -288,7 +218,9 @@ def chunk_tables(tbl: TableSet, n_full: int, chunk_size: int) -> TableSet:
 def chunk_encoded(enc: ChunkedLanes, c) -> EncodedLanes:
     """View chunk ``c`` as a standalone :class:`EncodedLanes`."""
     return EncodedLanes(buf=enc.buf[c], start=enc.start[c],
-                        length=enc.length[c])
+                        length=enc.length[c],
+                        overflow=None if enc.overflow is None
+                        else enc.overflow[c])
 
 
 def encode_chunked(symbols: jax.Array, tbl: TableSet, chunk_size: int,
@@ -327,7 +259,8 @@ def encode_chunked(symbols: jax.Array, tbl: TableSet, chunk_size: int,
         parts.append(jax.tree.map(lambda a: a[None], enc_tail))
     out = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *parts)
     assert out.buf.shape[0] == n_total
-    return ChunkedLanes(buf=out.buf, start=out.start, length=out.length)
+    return ChunkedLanes(buf=out.buf, start=out.start, length=out.length,
+                        overflow=out.overflow)
 
 
 def decode_chunked(chunks: ChunkedLanes, n_symbols: int, tbl: TableSet,

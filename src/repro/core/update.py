@@ -1,0 +1,155 @@
+"""Shared two-stage rANS encode-update core (paper Sec. IV-A/B).
+
+Single source of truth for the encoder's hot loop.  Every encode backend in
+the repo — ``core.coder.encode_put`` (pure-JAX lanes, scatter emission),
+``core.coder.encode_records`` (scan-stacked renorm records), and
+``kernels.rans_encode`` (Pallas TPU kernel) — imports *this* module, so the
+produced byte streams are structurally identical across backends rather than
+merely tested equal.  This is the encoder mirror of :mod:`repro.core.search`
+(the decode-side single source).  See DESIGN.md §6.
+
+Paper map:
+
+  * **Sec. IV-B two-stage update** — :func:`encode_step` stage B: the
+    quotient path ``a1 = (s // f) << n`` and the remainder path
+    ``a2 = (s mod f) + C(x)`` are independent vector ops.  We use the
+    algebraically identical ryg form ``s + bias + q * cmpl`` (``bias`` folds
+    ``C(x)`` and the f==1 corner, ``cmpl = 2**n - f``) so the hot loop is
+    one mulhi, one shift, one madd — proof sketch in DESIGN.md §2.
+  * **Sec. IV-A unified div/mod datapath** — :func:`barrett_div`: division
+    is a Barrett multiply-high against the SPC-precomputed reciprocal,
+    exact for every state < 2**31 (DESIGN.md §2), no integer divide on the
+    hot path.  :func:`umulhi32` is the TPU-native 32x32 -> high-32 multiply
+    from 16-bit limbs (carry proof in DESIGN.md §4).
+  * **byte-level renormalization** — :func:`encode_step` stage A: the
+    data-dependent while-loop is a fixed ``MAX_RENORM_STEPS``(=2)-step
+    masked pipeline (bound proved in DESIGN.md §4).  Instead of writing
+    bytes itself, the core *emits fixed-shape renorm records* — a
+    ``(byte, emitted?)`` pair per step — and the caller decides how to land
+    them: the lane coder scatters them backward into its per-lane buffers,
+    ``encode_records`` stacks them as scan outputs, and the Pallas kernel
+    writes them to VMEM record planes.  One emission rule, three sinks;
+    compaction (records -> right-aligned streams) is
+    :func:`repro.core.bitstream.compact_records` and is shared too.
+
+Like the search core, the update core is parameterized over the gather
+primitive because the backends address tables differently: the XLA path
+uses :func:`repro.core.search.take_gather` (``take_along_axis``,
+batch-aware) while the Pallas kernel substitutes one-hot contractions
+(``kernels.common.onehot_gather`` / ``onehot_gather_lanes``).  The update
+*logic* is identical either way.
+
+All masks are numpy scalars (not jnp arrays) so Pallas kernels see integer
+literals rather than captured device constants.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import constants as C
+from repro.core.search import take_gather
+
+_U32 = jnp.uint32
+_U8 = jnp.uint8
+_M16 = np.uint32(0xFFFF)
+_M8 = np.uint32(0xFF)
+
+
+def umulhi32(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Exact high 32 bits of a 32x32 unsigned product, in pure uint32 ops.
+
+    TPU VPUs have no 64-bit integer path; the RTL has a real divider.  This
+    limb decomposition is the TPU-native replacement: all partial products
+    fit uint32 and every carry is accounted (proof in DESIGN.md §4).
+    """
+    a = a.astype(_U32)
+    b = b.astype(_U32)
+    al, ah = a & _M16, a >> 16
+    bl, bh = b & _M16, b >> 16
+    ll = al * bl
+    lh = al * bh
+    hl = ah * bl
+    hh = ah * bh
+    mid = (ll >> 16) + (lh & _M16) + (hl & _M16)
+    return hh + (lh >> 16) + (hl >> 16) + (mid >> 16)
+
+
+def barrett_div(s: jax.Array, rcp: jax.Array, rshift: jax.Array) -> jax.Array:
+    """floor(s / f) via the SPC reciprocal; exact for s < 2**31, f >= 2
+    (DESIGN.md §2)."""
+    return umulhi32(s, rcp) >> rshift
+
+
+class EncTables(NamedTuple):
+    """The five encoder-side table planes of a TableSet (``C(x)`` is folded
+    into ``bias``, so the encoder never touches freq/cdf directly).  Any
+    object exposing these attributes works — a full
+    :class:`repro.core.spc.TableSet` on the XLA path, or the VMEM-resident
+    block rows inside the Pallas kernel."""
+
+    rcp: jax.Array      # (..., K) Barrett reciprocal
+    rshift: jax.Array   # (..., K) post-mulhi shift
+    bias: jax.Array     # (..., K) additive bias (folds C(x) + f==1 case)
+    cmpl: jax.Array     # (..., K) 2**n - f
+    x_max: jax.Array    # (..., K) renorm threshold = x_max_scale * f
+
+
+def encode_planes(tbl) -> EncTables:
+    """Project a TableSet(-like) down to the encoder's five planes."""
+    return EncTables(rcp=tbl.rcp, rshift=tbl.rshift, bias=tbl.bias,
+                     cmpl=tbl.cmpl, x_max=tbl.x_max)
+
+
+class EncEntry(NamedTuple):
+    """Per-lane gathered table entries for one symbol vector."""
+
+    rcp: jax.Array
+    rshift: jax.Array
+    bias: jax.Array
+    cmpl: jax.Array
+    x_max: jax.Array
+
+
+def gather_encode_entry(tbl, x: jax.Array, gather=take_gather) -> EncEntry:
+    """Gather the encode-side entries for symbols ``x`` (one per lane).
+
+    ``tbl`` is anything exposing the :class:`EncTables` planes; ``gather``
+    is the backend's table-addressing primitive (``take_gather`` on XLA,
+    one-hot contraction in-kernel), exactly as in ``core.search``.
+    """
+    return EncEntry(rcp=gather(tbl.rcp, x),
+                    rshift=gather(tbl.rshift, x),
+                    bias=gather(tbl.bias, x),
+                    cmpl=gather(tbl.cmpl, x),
+                    x_max=gather(tbl.x_max, x))
+
+
+def encode_step(s: jax.Array, e: EncEntry):
+    """Push one symbol per lane: staged renorm + two-path update (Eq. 1).
+
+    Returns ``(s', records)`` where ``records`` is a length-
+    ``MAX_RENORM_STEPS`` tuple of ``(byte uint8, emitted bool)`` pairs in
+    emission order.  The caller owns landing the records (backward scatter,
+    scan stacking, or VMEM record planes) — see the module docstring.
+
+    Stage A (byte renorm): the data-dependent ``while s >= x_max`` loop is
+    a fixed 2-step masked pipeline — sufficient for every
+    ``PROB_BITS in [8, 16]`` (DESIGN.md §4).  Stage B (two-path update):
+    ``a1 = (s // f) << n`` (Barrett quotient path) and
+    ``a2 = (s mod f) + C(x)`` (remainder + CDF path), fused into
+    ``s + bias + q * cmpl`` — identical integer result, f==1 corner
+    included (DESIGN.md §2).
+    """
+    records = []
+    for _ in range(C.MAX_RENORM_STEPS):
+        cond = s >= e.x_max
+        records.append(((s & _M8).astype(_U8), cond))
+        s = jnp.where(cond, s >> C.RENORM_SHIFT, s)
+    q = barrett_div(s, e.rcp, e.rshift)
+    s = s + e.bias + q * e.cmpl
+    return s, tuple(records)

@@ -19,26 +19,11 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-_U32 = jnp.uint32
-# numpy scalar (not a jnp array) so Pallas kernels see a literal, not a
-# captured device constant.
-_M16 = np.uint32(0xFFFF)
-
-
-def umulhi32(a: jax.Array, b: jax.Array) -> jax.Array:
-    """Exact 32x32 -> high 32 bits via 16-bit limbs (kernel-local copy)."""
-    a = a.astype(_U32)
-    b = b.astype(_U32)
-    al, ah = a & _M16, a >> 16
-    bl, bh = b & _M16, b >> 16
-    ll = al * bl
-    lh = al * bh
-    hl = ah * bl
-    hh = ah * bh
-    mid = (ll >> 16) + (lh & _M16) + (hl & _M16)
-    return hh + (lh >> 16) + (hl >> 16) + (mid >> 16)
+# single-source integer primitives (core/update.py uses numpy-scalar masks,
+# so Pallas kernels see literals, not captured device constants); kept as a
+# re-export for the kernels' historical import path.
+from repro.core.update import umulhi32  # noqa: F401
 
 
 def onehot_gather(table: jax.Array, idx: jax.Array) -> jax.Array:

@@ -1,24 +1,29 @@
 """jit'd public wrappers around the RAS Pallas kernels.
 
-``rans_encode`` = kernel (fixed-shape renorm records) + vectorized XLA
-stream compaction; the result is byte-identical to ``repro.core.coder.encode``
-and therefore to the scalar golden reference.  ``rans_decode`` /
-``rans_decode_chunked`` wrap the prediction-guided decode kernel (static and
-adaptive per-position TableSets; symbols AND per-lane probe counters are
-bit-identical to the pure-JAX coder — both consume ``core.search``).
-``spc_quantize`` wraps the mass-correction kernel.  All default to
-``interpret=True`` (this container is CPU-only; on a real TPU pass
-interpret=False).
+``rans_encode`` / ``rans_encode_chunked`` = kernel (fixed-shape renorm
+records from the shared ``core.update`` core) + the shared
+``core.bitstream.compact_records`` compaction; results are byte-identical
+to ``repro.core.coder.encode`` / ``encode_chunked`` and therefore to the
+scalar golden reference, for static ``(K,)``, per-position ``(T, K)`` and
+per-lane ``(T, lanes, K)`` TableSets.  The chunked encode is a single
+``pallas_call`` (chunk grid axis with in-kernel state reset).
+``rans_decode`` / ``rans_decode_chunked`` wrap the prediction-guided decode
+kernel (static and adaptive per-position TableSets; symbols AND per-lane
+probe counters are bit-identical to the pure-JAX coder — both consume
+``core.search``).  ``spc_quantize`` wraps the mass-correction kernel.  All
+default to ``interpret=True`` (this container is CPU-only; on a real TPU
+pass interpret=False).
 """
 
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import constants as C
+# stream compaction lives in core (wire format); re-exported here for
+# back-compat with the historical kernels-side import path
+from repro.core.bitstream import compact_records  # noqa: F401
 from repro.core.coder import (ChunkedLanes, EncodedLanes, chunk_encoded,
                               chunk_lengths, default_cap, is_per_position,
                               num_chunks, slice_tables)
@@ -27,80 +32,56 @@ from repro.core.spc import TableSet, build_tables
 from repro.kernels.rans_decode import rans_decode_lanes
 from repro.kernels.rans_encode import rans_encode_records
 
-_U32 = jnp.uint32
-_U8 = jnp.uint8
-_I32 = jnp.int32
-
-
-@functools.partial(jax.jit, static_argnames=("cap",))
-def compact_records(bytes_rec: jax.Array,   # (T, 2, lanes) uint8
-                    mask_rec: jax.Array,    # (T, 2, lanes) uint8 0/1
-                    states: jax.Array,      # (lanes,) uint32 final states
-                    cap: int) -> EncodedLanes:
-    """Fixed-shape renorm records -> right-aligned per-lane streams.
-
-    Emission order is t descending then renorm step ascending (exactly the
-    encoder's emit order); the stream stores emissions reversed, preceded by
-    the 4-byte big-endian state header.
-    """
-    t_len, r, lanes = bytes_rec.shape
-    seq_b = bytes_rec[::-1].reshape(t_len * r, lanes)
-    seq_m = mask_rec[::-1].reshape(t_len * r, lanes).astype(_I32)
-    n_emit = jnp.sum(seq_m, axis=0)                   # (lanes,)
-    pos = jnp.cumsum(seq_m, axis=0) - seq_m           # exclusive prefix
-    length = 4 + n_emit
-    start = cap - length
-    idx = start[None, :] + 4 + (n_emit[None, :] - 1 - pos)
-    idx = jnp.where(seq_m > 0, idx, cap)              # dropped when not emitted
-    lane_ix = jnp.broadcast_to(jnp.arange(lanes)[None, :], idx.shape)
-    buf = jnp.zeros((lanes, cap), _U8)
-    buf = buf.at[lane_ix.reshape(-1), idx.reshape(-1)].set(
-        seq_b.reshape(-1), mode="drop")
-    lane = jnp.arange(lanes)
-    for i, shift in enumerate((24, 16, 8, 0)):
-        buf = buf.at[lane, start + i].set(
-            ((states >> shift) & _U32(0xFF)).astype(_U8))
-    return EncodedLanes(buf=buf, start=start, length=length)
-
 
 def rans_encode(symbols: jax.Array, tbl: TableSet,
                 cap: int | None = None,
                 prob_bits: int = C.PROB_BITS,
                 lane_block: int = 128,
+                t_block: int | None = None,
                 interpret: bool = True) -> EncodedLanes:
-    """Kernel-backed multi-lane encode (bit-exact vs. core/golden)."""
+    """Kernel-backed multi-lane encode (bit-exact vs. core/golden).
+
+    Static ``(K,)`` and adaptive ``(T, K)`` / ``(T, lanes, K)`` TableSets
+    are all encoded in-kernel (adaptive layouts block the T axis through
+    VMEM — ``t_block``).  When the lane count does not tile the
+    ``lane_block`` grid the block collapses to one lane group (correctness
+    over occupancy — the serve/parallel paths run narrow lane counts).
+    """
     lanes, t_len = symbols.shape
     cap = default_cap(t_len) if cap is None else cap
     rec_b, rec_m, states = rans_encode_records(
-        symbols, tbl.freq, tbl.x_max, tbl.rcp, tbl.rshift, tbl.bias,
-        tbl.cmpl, prob_bits=prob_bits, lane_block=lane_block,
-        interpret=interpret)
-    return compact_records(rec_b, rec_m, states[0], cap)
+        symbols, tbl, prob_bits=prob_bits, lane_block=lane_block,
+        t_block=t_block, interpret=interpret)
+    return compact_records(rec_b[0], rec_m[0], states[0], cap)
 
 
 def rans_encode_chunked(symbols: jax.Array, tbl: TableSet, chunk_size: int,
                         cap: int | None = None,
                         prob_bits: int = C.PROB_BITS,
                         lane_block: int = 128,
+                        t_block: int | None = None,
                         interpret: bool = True) -> ChunkedLanes:
     """Kernel-backed chunked encode (bit-exact vs. coder.encode_chunked).
 
-    Runs the records kernel once per chunk and reuses :func:`compact_records`
-    with the chunk-aware cap (``default_cap(chunk_size)`` covers the worst
-    case of every chunk, ragged tail included, so all chunks land in one
-    dense ``(n_chunks, lanes, cap)`` buffer).  Shared (static) tables only —
-    the kernel holds one table set in VMEM.
+    ONE ``pallas_call`` for the whole stream: the chunk axis is a grid
+    dimension of the records kernel (in-kernel per-chunk state reset — no
+    host-side loop of kernel launches), then the shared
+    :func:`repro.core.bitstream.compact_records` compacts every chunk with
+    the chunk-aware cap (``default_cap(chunk_size)`` covers the worst case
+    of every chunk, ragged tail included, so all chunks land in one dense
+    ``(n_chunks, lanes, cap)`` buffer).  Static and per-position TableSets
+    both encode in-kernel (per-position rows ride the chunk grid axis).
     """
     lanes, t_len = symbols.shape
+    num_chunks(t_len, chunk_size)           # validates chunk_size > 0
     cap = default_cap(min(chunk_size, t_len)) if cap is None else cap
-    parts = []
-    for c, n in enumerate(chunk_lengths(t_len, chunk_size)):
-        chunk = symbols[:, c * chunk_size:c * chunk_size + n]
-        parts.append(rans_encode(chunk, tbl, cap=cap, prob_bits=prob_bits,
-                                 lane_block=lane_block, interpret=interpret))
-    stacked = jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *parts)
-    return ChunkedLanes(buf=stacked.buf, start=stacked.start,
-                        length=stacked.length)
+    rec_b, rec_m, states = rans_encode_records(
+        symbols, tbl, chunk_size=chunk_size, prob_bits=prob_bits,
+        lane_block=lane_block, t_block=t_block, interpret=interpret)
+    enc = jax.vmap(lambda b, m, s: compact_records(b, m, s, cap))(
+        rec_b, rec_m, states)
+    return ChunkedLanes(buf=enc.buf, start=enc.start, length=enc.length,
+                        overflow=enc.overflow)
 
 
 def rans_decode(enc: EncodedLanes, n_symbols: int, tbl: TableSet,

@@ -2,26 +2,51 @@
 
 Kernel shape (hardware adaptation — see DESIGN.md §2):
 
-  * grid over **lane blocks** (lane dim last, multiples of 128 = VREG width);
-    each grid step owns ``lane_block`` independent rANS states held in
-    registers across a ``fori_loop`` over symbols (the RTL's "stationary
-    dataflow: state and symbols stay resident, probabilities stream");
+  * grid ``(lane blocks, chunks, T blocks)`` — the lane dim is last in the
+    data layout and sized in multiples of 128 (= VREG width); each grid
+    step owns ``lane_block`` independent rANS states held in registers
+    across a ``fori_loop`` over symbols (the RTL's "stationary dataflow:
+    state and symbols stay resident, probabilities stream");
+  * the encode update itself is **not** implemented here: the kernel
+    imports the shared update core (:mod:`repro.core.update`) and
+    substitutes its gather primitive with a one-hot contraction (VPU/MXU
+    dense math — the TPU replacement for the RTL's table SRAM port).
+    Byte streams are therefore structurally identical to
+    ``core.coder.encode``;
   * the data-dependent byte FIFO of the RTL is split out of the kernel: the
-    kernel emits **fixed-shape renorm records** ``bytes (T, 2, lanes)`` +
-    ``mask (T, 2, lanes)`` (at most MAX_RENORM_STEPS=2 bytes per symbol,
-    provable), and a vectorized XLA scatter in ops.py compacts them into
-    per-lane streams.  This keeps the kernel free of dynamic addressing —
-    pure VPU math at one symbol per "cycle" (loop step), exactly the
-    paper's two-stage pipeline;
-  * table lookups (freq/rcp/bias/cmpl/x_max by symbol) are one-hot
-    contractions against VMEM-resident SPC tables (shared by all lanes —
-    the paper's shared CDF/frequency tables behind the SPC).
+    kernel emits the core's **fixed-shape renorm records**
+    (``bytes (T, 2, lanes)`` + ``mask (T, 2, lanes)``, at most
+    MAX_RENORM_STEPS=2 bytes per symbol — DESIGN.md §4), and the shared
+    vectorized compaction (:func:`repro.core.bitstream.compact_records`)
+    builds the per-lane streams.  This keeps the kernel free of dynamic
+    addressing — pure VPU math at one symbol per "cycle" (loop step),
+    exactly the paper's two-stage pipeline;
+  * **adaptive tables**: besides a static ``(K,)`` TableSet the kernel
+    accepts per-position ``(T, K)`` and per-position-per-lane
+    ``(T, lanes, K)`` tables — the neural-prior layouts of
+    ``serve.compress``.  The T axis is blocked through VMEM (``t_block``
+    rows of the five encode planes per grid step); encoder state persists
+    in scratch between T blocks, so arbitrarily long adaptive streams
+    encode without holding all T tables on chip.  rANS is LIFO, so the
+    T-block grid axis walks **backward** (the index maps reverse the block
+    order) and each block's inner loop walks its rows in reverse;
+  * **chunk grid axis**: chunked streams (independent per-chunk flush — the
+    interleaved-ANS construction) are ONE ``pallas_call``: the chunk axis
+    is a grid dimension, encoder state resets to ``RANS_L`` at each chunk's
+    first grid step and the per-chunk final state is written at its last.
+    Each chunk's rows are padded to a whole number of T blocks; padding
+    rows emit mask-0 records which the shared compaction drops.
 
-VMEM budget per grid step (BlockSpec):
-    symbols  T x Lb x 4   B
-    records  T x 2 x Lb x 2 B   (bytes + mask, uint8)
-    tables   6 x K x 4    B
-  For T=4096, Lb=128, K=256: ~4.2 MB — fits a single VMEM partition.
+Grid: ``(lanes // lane_block, n_chunks, ceil(chunk_size / t_block))`` — the
+T axis iterates fastest (innermost), then chunks, so each (lane block,
+chunk) streams its table blocks sequentially while state lives in VMEM
+scratch.
+
+VMEM per grid step: symbols (t_block x Lb x 4 B) + records
+(t_block x 2 x Lb x 2 B) + five table planes (t_block x [Lb x] K x 4 B
+adaptive, K x 4 B static).  For T=4096, Lb=128, K=256 static: ~4.2 MB; for
+the (T, lanes, K) adaptive layout, t_block=8 keeps the table slab at
+~1.3 MB.
 """
 
 from __future__ import annotations
@@ -31,84 +56,203 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import constants as C
-from repro.kernels.common import onehot_gather, umulhi32
+from repro.core import update
+from repro.core.spc import TableSet
+from repro.kernels.common import onehot_gather, onehot_gather_lanes
 
 _U32 = jnp.uint32
 _U8 = jnp.uint8
 
+_PLANES = ("rcp", "rshift", "bias", "cmpl", "x_max")
 
-def _encode_kernel(sym_ref, freq_ref, xmax_ref, rcp_ref, rshift_ref,
-                   bias_ref, cmpl_ref,
-                   bytes_ref, mask_ref, state_ref,
-                   *, t_len: int, prob_bits: int):
+
+def _encode_kernel(sym_ref, rcp_ref, rshift_ref, bias_ref, cmpl_ref,
+                   xmax_ref, bytes_ref, mask_ref, state_ref, s_scr,
+                   *, t_len: int, chunk_size: int, t_block: int, n_tb: int,
+                   layout: str):
     lanes = sym_ref.shape[1]
-    freq = freq_ref[0]
-    xmax = xmax_ref[0]
-    rcp = rcp_ref[0]
-    rshift = rshift_ref[0]
-    bias = bias_ref[0]
-    cmpl = cmpl_ref[0]
+    c = pl.program_id(1)      # chunk index
+    j = pl.program_id(2)      # T-block step (innermost; blocks walk backward)
+
+    @pl.when(j == 0)
+    def _reset():
+        # per-chunk state reset: every chunk is a standalone stream
+        s_scr[0, :] = jnp.full((lanes,), C.RANS_L, _U32)
+
+    b = n_tb - 1 - j          # T-block index within the chunk (LIFO order)
+    # valid rows in this block: the final chunk may be ragged, and padding
+    # rows (up to a whole T block) must emit nothing
+    chunk_len = jnp.minimum(chunk_size, t_len - c * chunk_size)
+    n_t = jnp.clip(chunk_len - b * t_block, 0, t_block)
+
+    # zero the record block first: rows >= n_t are padding (mask 0), and
+    # valid rows overwrite below
+    bytes_ref[...] = jnp.zeros(bytes_ref.shape, _U8)
+    mask_ref[...] = jnp.zeros(mask_ref.shape, _U8)
+
+    if layout == "static":
+        planes_static = update.EncTables(
+            rcp_ref[0], rshift_ref[0], bias_ref[0], cmpl_ref[0], xmax_ref[0])
 
     def body(i, s):
-        t = t_len - 1 - i  # rANS is LIFO: walk symbols in reverse
+        t = n_t - 1 - i       # rANS is LIFO: walk rows in reverse
         x = sym_ref[pl.dslice(t, 1), :][0]
-        e_xmax = onehot_gather(xmax, x)
-        # stage A: fixed 2-step byte renorm -> fixed-shape records
-        for j in range(C.MAX_RENORM_STEPS):
-            cond = s >= e_xmax
-            byte = (s & _U32(0xFF)).astype(_U8)
-            bytes_ref[pl.dslice(t, 1), pl.dslice(j, 1), :] = (
+        if layout == "static":
+            planes, g = planes_static, onehot_gather
+        elif layout == "perpos":
+            planes = update.EncTables(
+                rcp_ref[pl.dslice(t, 1), :][0],
+                rshift_ref[pl.dslice(t, 1), :][0],
+                bias_ref[pl.dslice(t, 1), :][0],
+                cmpl_ref[pl.dslice(t, 1), :][0],
+                xmax_ref[pl.dslice(t, 1), :][0])
+            g = onehot_gather
+        else:  # "lane": per-position per-lane rows (lanes, K)
+            planes = update.EncTables(
+                rcp_ref[pl.dslice(t, 1), :, :][0],
+                rshift_ref[pl.dslice(t, 1), :, :][0],
+                bias_ref[pl.dslice(t, 1), :, :][0],
+                cmpl_ref[pl.dslice(t, 1), :, :][0],
+                xmax_ref[pl.dslice(t, 1), :, :][0])
+            g = onehot_gather_lanes
+        e = update.gather_encode_entry(planes, x, gather=g)
+        s, recs = update.encode_step(s, e)
+        for r, (byte, cond) in enumerate(recs):
+            bytes_ref[pl.dslice(t, 1), pl.dslice(r, 1), :] = (
                 byte.reshape(1, 1, lanes))
-            mask_ref[pl.dslice(t, 1), pl.dslice(j, 1), :] = (
+            mask_ref[pl.dslice(t, 1), pl.dslice(r, 1), :] = (
                 cond.astype(_U8).reshape(1, 1, lanes))
-            s = jnp.where(cond, s >> C.RENORM_SHIFT, s)
-        # stage B: two-path update (Barrett quotient || remainder+CDF)
-        q = umulhi32(s, onehot_gather(rcp, x)) >> onehot_gather(rshift, x)
-        s = s + onehot_gather(bias, x) + q * onehot_gather(cmpl, x)
         return s
 
-    s0 = jnp.full((lanes,), C.RANS_L, _U32)
-    s = jax.lax.fori_loop(0, t_len, body, s0)
-    state_ref[0, :] = s
+    s = jax.lax.fori_loop(0, n_t, body, s_scr[0, :])
+    s_scr[0, :] = s
+
+    @pl.when(j == n_tb - 1)
+    def _final():
+        # the last (backward) block ends at t=0: the chunk's final state
+        state_ref[0, :] = s_scr[0, :]
+
+
+def _pad_chunk_rows(a: jax.Array, t_len: int, chunk_size: int,
+                    n_chunks: int, padded_chunk: int) -> jax.Array:
+    """Re-lay rows [0, t_len) chunk-major with each chunk padded to
+    ``padded_chunk`` rows (zeros; padding rows are never read/emitting)."""
+    if padded_chunk == chunk_size and n_chunks * chunk_size == t_len:
+        return a    # aligned layout: the re-lay would be an identity copy
+    parts = []
+    for ci in range(n_chunks):
+        sl = a[ci * chunk_size:min((ci + 1) * chunk_size, t_len)]
+        pad = padded_chunk - sl.shape[0]
+        parts.append(jnp.pad(sl, ((0, pad),) + ((0, 0),) * (a.ndim - 1)))
+    return jnp.concatenate(parts, axis=0)
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("prob_bits", "lane_block", "interpret"))
+                   static_argnames=("chunk_size", "prob_bits", "lane_block",
+                                    "t_block", "interpret"))
 def rans_encode_records(symbols: jax.Array,   # (lanes, T) int32
-                        freq: jax.Array, x_max: jax.Array, rcp: jax.Array,
-                        rshift: jax.Array, bias: jax.Array, cmpl: jax.Array,
-                        prob_bits: int = C.PROB_BITS,
-                        lane_block: int = 128,
-                        interpret: bool = True):
-    """Run the encode kernel; returns (bytes (T,2,lanes), mask, states)."""
+                       tbl: TableSet,
+                       chunk_size: int | None = None,
+                       prob_bits: int = C.PROB_BITS,
+                       lane_block: int = 128,
+                       t_block: int | None = None,
+                       interpret: bool = True):
+    """Run the encode kernel — ONE ``pallas_call`` for the whole stream.
+
+    Table layouts (detected from ``tbl.freq.ndim``):
+      * ``(K,)``            — static shared table (classic rANS);
+      * ``(T, K)``          — per-position shared rows (neural prior, all
+                              lanes share each step's distribution);
+      * ``(T, lanes, K)``   — per-position per-lane rows (the
+                              ``serve.compress`` TableSet layout).
+
+    ``chunk_size`` (None = monolithic): cut the stream into independent
+    chunks, each flushed separately — the chunk axis is a *grid* dimension
+    with in-kernel state reset, not a host-side loop of kernel launches.
+    ``t_block`` blocks the T axis through VMEM (None = whole chunk in one
+    block).
+
+    Returns ``(bytes, mask, states)`` with shapes
+    ``(n_chunks, padded_chunk, 2, lanes)`` / same / ``(n_chunks, lanes)``
+    where ``padded_chunk = ceil(chunk_size / t_block) * t_block``; padding
+    rows carry mask 0 and are dropped by ``compact_records``.
+    """
     lanes, t_len = symbols.shape
     if lanes % lane_block:
-        raise ValueError(f"lanes={lanes} not a multiple of {lane_block}")
-    k = freq.shape[-1]
-    grid = (lanes // lane_block,)
+        lane_block = lanes
+    chunk = t_len if chunk_size is None else chunk_size
+    if chunk <= 0:
+        raise ValueError(f"chunk_size must be positive, got {chunk}")
+    chunk = min(chunk, t_len)
+    n_chunks = -(-t_len // chunk)
+    tb = chunk if t_block is None else max(1, min(t_block, chunk))
+    n_tb = -(-chunk // tb)
+    padded_chunk = n_tb * tb
+    total_rows = n_chunks * padded_chunk
 
-    tbl_spec = pl.BlockSpec((1, k), lambda i: (0, 0))
-    out = pl.pallas_call(
-        functools.partial(_encode_kernel, t_len=t_len, prob_bits=prob_bits),
+    k = tbl.freq.shape[-1]
+    ndim = tbl.freq.ndim
+    planes = update.encode_planes(tbl)
+    if ndim == 1:
+        layout = "static"
+        planes_in = [p.reshape(1, k) for p in planes]
+        tbl_specs = [pl.BlockSpec((1, k), lambda i, c, j: (0, 0))] * 5
+    elif ndim == 2:
+        if tbl.freq.shape[0] != t_len:
+            raise ValueError(
+                f"per-position tables carry T={tbl.freq.shape[0]} rows but "
+                f"t_len={t_len}")
+        layout = "perpos"
+        planes_in = [_pad_chunk_rows(p, t_len, chunk, n_chunks, padded_chunk)
+                     for p in planes]
+        tbl_specs = [pl.BlockSpec(
+            (tb, k), lambda i, c, j: (c * n_tb + n_tb - 1 - j, 0))] * 5
+    elif ndim == 3:
+        if tbl.freq.shape[0] != t_len or tbl.freq.shape[1] != lanes:
+            raise ValueError(
+                f"per-lane tables must be (T, lanes, K)=({t_len}, {lanes}, "
+                f"{k}); got {tbl.freq.shape}")
+        layout = "lane"
+        planes_in = [_pad_chunk_rows(p, t_len, chunk, n_chunks, padded_chunk)
+                     for p in planes]
+        tbl_specs = [pl.BlockSpec(
+            (tb, lane_block, k),
+            lambda i, c, j: (c * n_tb + n_tb - 1 - j, i, 0))] * 5
+    else:
+        raise ValueError(f"unsupported table rank {ndim}")
+
+    sym_in = _pad_chunk_rows(symbols.T.astype(jnp.int32), t_len, chunk,
+                             n_chunks, padded_chunk)
+    grid = (lanes // lane_block, n_chunks, n_tb)
+
+    rec_b, rec_m, states = pl.pallas_call(
+        functools.partial(_encode_kernel, t_len=t_len, chunk_size=chunk,
+                          t_block=tb, n_tb=n_tb, layout=layout),
         grid=grid,
-        in_specs=[pl.BlockSpec((t_len, lane_block), lambda i: (0, i))]
-        + [tbl_spec] * 6,
+        in_specs=[pl.BlockSpec((tb, lane_block),
+                               lambda i, c, j: (c * n_tb + n_tb - 1 - j, i))]
+        + tbl_specs,
         out_specs=[
-            pl.BlockSpec((t_len, C.MAX_RENORM_STEPS, lane_block),
-                         lambda i: (0, 0, i)),
-            pl.BlockSpec((t_len, C.MAX_RENORM_STEPS, lane_block),
-                         lambda i: (0, 0, i)),
-            pl.BlockSpec((1, lane_block), lambda i: (0, i)),
+            pl.BlockSpec((tb, C.MAX_RENORM_STEPS, lane_block),
+                         lambda i, c, j: (c * n_tb + n_tb - 1 - j, 0, i)),
+            pl.BlockSpec((tb, C.MAX_RENORM_STEPS, lane_block),
+                         lambda i, c, j: (c * n_tb + n_tb - 1 - j, 0, i)),
+            pl.BlockSpec((1, lane_block), lambda i, c, j: (c, i)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((t_len, C.MAX_RENORM_STEPS, lanes), _U8),
-            jax.ShapeDtypeStruct((t_len, C.MAX_RENORM_STEPS, lanes), _U8),
-            jax.ShapeDtypeStruct((1, lanes), _U32),
+            jax.ShapeDtypeStruct((total_rows, C.MAX_RENORM_STEPS, lanes),
+                                 _U8),
+            jax.ShapeDtypeStruct((total_rows, C.MAX_RENORM_STEPS, lanes),
+                                 _U8),
+            jax.ShapeDtypeStruct((n_chunks, lanes), _U32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, lane_block), _U32),   # encoder states across T
         ],
         interpret=interpret,
-    )(symbols.T.astype(jnp.int32), freq.reshape(1, k), x_max.reshape(1, k),
-      rcp.reshape(1, k), rshift.reshape(1, k), bias.reshape(1, k),
-      cmpl.reshape(1, k))
-    return out
+    )(sym_in, *planes_in)
+    shape = (n_chunks, padded_chunk, C.MAX_RENORM_STEPS, lanes)
+    return rec_b.reshape(shape), rec_m.reshape(shape), states

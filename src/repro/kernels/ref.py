@@ -23,6 +23,14 @@ def rans_encode_ref(symbols: jax.Array, tbl: spc.TableSet,
     return coder.encode(symbols, tbl, cap=cap)
 
 
+def rans_encode_chunked_ref(symbols: jax.Array, tbl: spc.TableSet,
+                            chunk_size: int,
+                            cap: int | None = None) -> coder.ChunkedLanes:
+    """Oracle for the kernel's chunk grid axis: the coder's chunked encode
+    (itself a ``core.update`` consumer, byte-identical per chunk)."""
+    return coder.encode_chunked(symbols, tbl, chunk_size, cap=cap)
+
+
 def rans_decode_ref(enc: coder.EncodedLanes, n_symbols: int,
                     tbl: spc.TableSet, use_pred: bool = False,
                     window: int = 4, delta: int = 8, predictor=None,

@@ -62,9 +62,8 @@ def main(argv=None):
     stats = lm_compress(params, cfg, toks)
     jax.block_until_ready(stats.enc.buf)
     t_enc = time.time() - t0
-    blob = bitstream.pack(np.asarray(stats.enc.buf),
-                          np.asarray(stats.enc.start),
-                          np.asarray(stats.enc.length), args.symbols)
+    blob = bitstream.pack(*map(np.asarray, stats.enc),
+                          n_symbols=args.symbols)
     t0 = time.time()
     dec, probes = lm_decompress(params, cfg, stats.enc, args.symbols,
                                 topk=args.topk)

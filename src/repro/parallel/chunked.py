@@ -46,57 +46,92 @@ def _chunked_table_specs(tbl: TableSet, sharded: bool):
 
 def encode_chunked(symbols: jax.Array, tbl: TableSet, chunk_size: int,
                    mesh: Mesh | None = None,
-                   cap: int | None = None) -> ChunkedLanes:
-    """Device-parallel :func:`core.coder.encode_chunked`.
+                   cap: int | None = None,
+                   backend: str = "coder",
+                   interpret: bool = True) -> ChunkedLanes:
+    """Device-parallel chunked encode over either encode backend.
 
     Full chunks are sharded over the mesh's ``chunks`` axis; per-position
     tables (leading T dim) are split chunk-major and ride on the same axis.
-    Falls back to the single-device vmap path whenever the mesh cannot
-    evenly take the chunk axis.
+    ``backend="coder"`` runs the pure-JAX lane encoder (vmap over the local
+    chunk slab); ``backend="kernel"`` runs the Pallas encode kernel — one
+    ``pallas_call`` per device covering its whole local slab (the kernel's
+    chunk grid axis, interpret mode on CPU).  Both consume
+    ``core.update``/``core.bitstream.compact_records``, so the produced
+    streams are byte-identical across backends and mesh shapes.  Falls back
+    to the single-device path whenever the mesh cannot evenly take the
+    chunk axis.
     """
+    if backend == "kernel":
+        from repro.kernels import ops as kops
+    elif backend != "coder":
+        raise ValueError(f"unknown encode backend {backend!r}")
     lanes, t_len = symbols.shape
     coder.num_chunks(t_len, chunk_size)     # validates chunk_size > 0
     n_full, tail_len = divmod(t_len, chunk_size)
     cap = coder.default_cap(min(chunk_size, t_len)) if cap is None else cap
     if not _usable(mesh, n_full):
+        if backend == "kernel":
+            return kops.rans_encode_chunked(symbols, tbl, chunk_size,
+                                            cap=cap, interpret=interpret)
         return coder.encode_chunked(symbols, tbl, chunk_size, cap=cap)
 
     per_position = coder.is_per_position(tbl, t_len)
     full = symbols[:, :n_full * chunk_size]
     full = full.reshape(lanes, n_full, chunk_size).swapaxes(0, 1)
 
-    out_specs = EncodedLanes(buf=P("chunks"), start=P("chunks"),
-                             length=P("chunks"))
-    if per_position:
-        tbl_full = coder.chunk_tables(tbl, n_full, chunk_size)
-
-        def body(sym_loc, tbl_loc):
+    def _slab_encode(sym_loc, tbl_loc, chunk_major: bool):
+        """Encode the local (n_loc, lanes, chunk_size) chunk slab.
+        ``tbl_loc`` is chunk-major ``(n_loc, chunk_size, ...)`` when
+        ``chunk_major`` else a replicated static/shared TableSet."""
+        if backend == "kernel":
+            # one pallas_call for the whole local slab: stitch the local
+            # chunks back into a (lanes, n_loc * chunk_size) stream and let
+            # the kernel's chunk grid axis re-cut it
+            n_loc = sym_loc.shape[0]
+            flat = sym_loc.swapaxes(0, 1).reshape(lanes, n_loc * chunk_size)
+            tbl_flat = (jax.tree.map(
+                lambda a: a.reshape((n_loc * chunk_size,) + a.shape[2:]),
+                tbl_loc) if chunk_major else tbl_loc)
+            ch = kops.rans_encode_chunked(flat, tbl_flat, chunk_size,
+                                          cap=cap, interpret=interpret)
+            return EncodedLanes(ch.buf, ch.start, ch.length, ch.overflow)
+        if chunk_major:
             return jax.vmap(lambda s, tb: coder.encode(s, tb, cap=cap))(
                 sym_loc, tbl_loc)
+        return jax.vmap(lambda s: coder.encode(s, tbl_loc, cap=cap))(sym_loc)
 
-        enc = shard_map(body, mesh=mesh,
-                        in_specs=(P("chunks"),
+    spec = P("chunks")
+    out_specs = EncodedLanes(buf=spec, start=spec, length=spec,
+                             overflow=spec)
+    check_rep = {"check_rep": False} if backend == "kernel" else {}
+    if per_position:
+        tbl_full = coder.chunk_tables(tbl, n_full, chunk_size)
+        enc = shard_map(lambda s, tb: _slab_encode(s, tb, True), mesh=mesh,
+                        in_specs=(spec,
                                   _chunked_table_specs(tbl, sharded=True)),
-                        out_specs=out_specs)(full, tbl_full)
+                        out_specs=out_specs, **check_rep)(full, tbl_full)
     else:
-        def body(sym_loc, tbl_rep):
-            return jax.vmap(lambda s: coder.encode(s, tbl_rep, cap=cap))(
-                sym_loc)
-
-        enc = shard_map(body, mesh=mesh,
-                        in_specs=(P("chunks"),
+        enc = shard_map(lambda s, tb: _slab_encode(s, tb, False), mesh=mesh,
+                        in_specs=(spec,
                                   _chunked_table_specs(tbl, sharded=False)),
-                        out_specs=out_specs)(full, tbl)
-    enc = ChunkedLanes(buf=enc.buf, start=enc.start, length=enc.length)
+                        out_specs=out_specs, **check_rep)(full, tbl)
+    enc = ChunkedLanes(buf=enc.buf, start=enc.start, length=enc.length,
+                       overflow=enc.overflow)
 
     if tail_len:
         tbl_tail = (coder.slice_tables(tbl, n_full * chunk_size, t_len)
                     if per_position else tbl)
-        tail = coder.encode(symbols[:, n_full * chunk_size:], tbl_tail,
-                            cap=cap)
+        sym_tail = symbols[:, n_full * chunk_size:]
+        if backend == "kernel":
+            tail = kops.rans_encode(sym_tail, tbl_tail, cap=cap,
+                                    interpret=interpret)
+        else:
+            tail = coder.encode(sym_tail, tbl_tail, cap=cap)
         enc = jax.tree.map(
             lambda a, b: jnp.concatenate([a, b[None]], axis=0), enc,
-            ChunkedLanes(buf=tail.buf, start=tail.start, length=tail.length))
+            ChunkedLanes(buf=tail.buf, start=tail.start, length=tail.length,
+                         overflow=tail.overflow))
     return enc
 
 

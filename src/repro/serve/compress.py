@@ -74,11 +74,28 @@ def collect_tables(params, cfg: ModelConfig, tokens: jax.Array,
 
 
 def lm_compress(params, cfg: ModelConfig, tokens: jax.Array,
-                prob_bits: int = C.PROB_BITS) -> CompressStats:
-    """tokens (lanes, T) -> multi-lane rANS bitstream + stats."""
+                prob_bits: int = C.PROB_BITS,
+                backend: str = "coder",
+                interpret: bool = True) -> CompressStats:
+    """tokens (lanes, T) -> multi-lane rANS bitstream + stats.
+
+    ``backend="kernel"`` feeds the teacher-forced ``(T, lanes, K)`` tables
+    of :func:`collect_tables` straight into the Pallas encode kernel (the
+    adaptive per-lane layout encodes in-kernel; interpret mode on CPU);
+    ``backend="coder"`` runs the pure-JAX lane scan.  Both consume
+    ``core.update``, so the produced bitstream is byte-identical either way
+    and round-trips through :func:`lm_decompress` bit-exactly.
+    """
     lanes, t_len = tokens.shape
     tables, xent_bits = collect_tables(params, cfg, tokens, prob_bits)
-    enc = coder.encode(tokens.astype(jnp.int32), tables)
+    if backend == "kernel":
+        from repro.kernels.ops import rans_encode
+        enc = rans_encode(tokens.astype(jnp.int32), tables,
+                          prob_bits=prob_bits, interpret=interpret)
+    elif backend == "coder":
+        enc = coder.encode(tokens.astype(jnp.int32), tables)
+    else:
+        raise ValueError(f"unknown encode backend {backend!r}")
     bits = jnp.mean(enc.length.astype(jnp.float32)) * 8.0 / t_len
     return CompressStats(enc=enc, bits_per_symbol=bits,
                          model_xent_bits=xent_bits)
@@ -127,19 +144,22 @@ class ChunkedCompressStats(NamedTuple):
 
 def lm_compress_chunked(params, cfg: ModelConfig, tokens: jax.Array,
                         chunk_size: int, prob_bits: int = C.PROB_BITS,
-                        mesh=None) -> ChunkedCompressStats:
+                        mesh=None, backend: str = "coder",
+                        interpret: bool = True) -> ChunkedCompressStats:
     """tokens (lanes, T) -> chunked multi-lane bitstream + stats.
 
     Tables still come from one teacher-forced pass (the model cache spans
     chunk boundaries — chunking changes the *coder* framing, never the
     distributions), then the chunk x lane grid is encoded on ``mesh`` via
     ``repro.parallel.chunked`` (vmap fallback on one device).
+    ``backend="kernel"`` routes the encode through the Pallas kernel's
+    chunk grid axis — one ``pallas_call`` per device.
     """
     from repro.parallel.chunked import encode_chunked
     lanes, t_len = tokens.shape
     tables, xent_bits = collect_tables(params, cfg, tokens, prob_bits)
     chunks = encode_chunked(tokens.astype(jnp.int32), tables, chunk_size,
-                            mesh=mesh)
+                            mesh=mesh, backend=backend, interpret=interpret)
     bits = (jnp.sum(chunks.length.astype(jnp.float32)) * 8.0
             / (lanes * t_len))
     return ChunkedCompressStats(chunks=chunks, chunk_size=chunk_size,

@@ -17,7 +17,11 @@ import pytest
 
 import jax
 
-jax.config.update("jax_platforms", "cpu")
+# hermetic default: pin CPU (the container has no accelerator).  An explicit
+# JAX_PLATFORMS in the environment wins, so the real-hardware kernel tier
+# can run on a TPU host: JAX_PLATFORMS=tpu pytest tests/test_tpu_hw.py -m tpu
+if not os.environ.get("JAX_PLATFORMS"):
+    jax.config.update("jax_platforms", "cpu")
 
 _CACHE_DIR = os.path.join(os.path.dirname(os.path.dirname(__file__)),
                           ".pytest_cache", "jax")

@@ -128,7 +128,7 @@ def test_jax_encode_bit_exact_vs_golden(rans_case, seed):
     tbl, syms = rans_case(seed)
     f, cdf = np.asarray(tbl.freq), np.asarray(tbl.cdf)
     enc = coder.encode(jnp.asarray(syms), tbl)
-    buf, start, length = map(np.asarray, enc)
+    buf, start, length, _ = map(np.asarray, enc)
     for i in range(syms.shape[0]):
         ref = golden.encode(syms[i], f, cdf)
         got = buf[i, start[i]:start[i] + length[i]].tobytes()
@@ -192,7 +192,7 @@ def test_per_position_roundtrip_and_golden():
     tbl = spc.tables_from_probs(jnp.asarray(probs))  # (T, K) tables
     syms = rng.integers(0, k, (lanes, t))
     enc = coder.encode(jnp.asarray(syms), tbl)
-    buf, start, length = map(np.asarray, enc)
+    buf, start, length, _ = map(np.asarray, enc)
     f, cdf = np.asarray(tbl.freq), np.asarray(tbl.cdf)
     for i in range(lanes):
         ref = golden.encode_per_position(syms[i], f, cdf)

@@ -33,6 +33,37 @@ def test_lm_compress_roundtrip_bit_exact(params):
     assert float(probes) > 0
 
 
+def test_lm_compress_kernel_backend_bit_exact(params):
+    """backend="kernel" feeds the teacher-forced (T, lanes, K) tables
+    straight into the Pallas encode kernel: bytes identical to the coder
+    backend, and the stream round-trips through lm_decompress."""
+    toks = jnp.asarray(token_stream(CFG.vocab_size, (4, 48), seed=13),
+                       jnp.int32)
+    a = lm_compress(params, CFG, toks)
+    b = lm_compress(params, CFG, toks, backend="kernel")
+    for x, y in zip(a.enc, b.enc):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    dec, _ = lm_decompress(params, CFG, b.enc, 48)
+    np.testing.assert_array_equal(np.asarray(dec), np.asarray(toks))
+    with pytest.raises(ValueError, match="backend"):
+        lm_compress(params, CFG, toks, backend="nope")
+
+
+def test_lm_compress_chunked_kernel_backend_bit_exact(params):
+    """The chunked serve path through the kernel's chunk grid axis."""
+    from repro.serve.compress import (lm_compress_chunked,
+                                      lm_decompress_chunked)
+    toks = jnp.asarray(token_stream(CFG.vocab_size, (2, 40), seed=14),
+                       jnp.int32)
+    a = lm_compress_chunked(params, CFG, toks, chunk_size=16)
+    b = lm_compress_chunked(params, CFG, toks, chunk_size=16,
+                            backend="kernel")
+    for x, y in zip(a.chunks, b.chunks):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    dec, _ = lm_decompress_chunked(params, CFG, b.chunks, 40, 16)
+    np.testing.assert_array_equal(np.asarray(dec), np.asarray(toks))
+
+
 def test_lm_compress_respects_model_bound(params):
     """Coded bits/symbol ~ model cross entropy + quantization overhead."""
     toks = jnp.asarray(token_stream(CFG.vocab_size, (8, 128), seed=5),
@@ -51,8 +82,8 @@ def test_lm_compress_across_lane_counts(params):
     full = lm_compress(params, CFG, jnp.asarray(base, jnp.int32))
     # encode lanes 0..3 alone: identical per-lane payloads
     half = lm_compress(params, CFG, jnp.asarray(base[:4], jnp.int32))
-    fb, fs, fl = map(np.asarray, full.enc)
-    hb, hs, hl = map(np.asarray, half.enc)
+    fb, fs, fl, _ = map(np.asarray, full.enc)
+    hb, hs, hl, _ = map(np.asarray, half.enc)
     for i in range(4):
         a = fb[i, fs[i]:fs[i] + fl[i]].tobytes()
         b = hb[i, hs[i]:hs[i] + hl[i]].tobytes()
@@ -100,7 +131,7 @@ def test_container_integration(params):
     stats = lm_compress(params, CFG, toks)
     blob = bitstream.pack(np.asarray(stats.enc.buf),
                           np.asarray(stats.enc.start),
-                          np.asarray(stats.enc.length), 32)
+                          np.asarray(stats.enc.length), n_symbols=32)
     buf, start, meta = bitstream.unpack(blob)
     from repro.core.coder import EncodedLanes
     enc2 = EncodedLanes(jnp.asarray(buf), jnp.asarray(start),

@@ -1,0 +1,71 @@
+"""Real-hardware kernel tier (``-m tpu``): interpret=False on a TPU.
+
+Every other suite runs the Pallas kernels in interpret mode (this container
+is CPU-only).  These tests compile the same kernels for real hardware
+(``interpret=False``) and re-pin the cross-backend bit-exactness contract
+there — run them on a TPU host with
+
+    JAX_PLATFORMS=tpu pytest tests/test_tpu_hw.py -m tpu
+
+(target this file alone: several other suites pin the CPU backend at import
+time, and collection imports every module).  They skip (not fail) anywhere
+else, so the tier is a no-op on CPU CI and a readiness gate on hardware.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import coder, spc
+from repro.kernels import ops
+
+pytestmark = [
+    pytest.mark.tpu,
+    pytest.mark.skipif(jax.default_backend() != "tpu",
+                       reason="real-TPU tier: needs a TPU backend "
+                              "(interpret=False)"),
+]
+
+
+def _case(seed, k, lanes, t):
+    rng = np.random.default_rng(seed)
+    tbl = spc.tables_from_probs(
+        jnp.asarray(rng.dirichlet(np.ones(k) * 0.5), jnp.float32))
+    return tbl, jnp.asarray(rng.integers(0, k, (lanes, t)), jnp.int32)
+
+
+def test_encode_kernel_compiled_bit_exact():
+    tbl, syms = _case(400, k=256, lanes=128, t=256)
+    got = ops.rans_encode(syms, tbl, interpret=False)
+    want = coder.encode(syms, tbl)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+def test_encode_kernel_compiled_chunked_adaptive():
+    rng = np.random.default_rng(401)
+    k, lanes, t = 64, 128, 192
+    probs = rng.dirichlet(np.ones(k) * 0.5, size=t).astype(np.float32)
+    tbl = spc.tables_from_probs(jnp.asarray(probs))
+    syms = jnp.asarray(rng.integers(0, k, (lanes, t)), jnp.int32)
+    got = ops.rans_encode_chunked(syms, tbl, 80, t_block=16,
+                                  interpret=False)
+    want = coder.encode_chunked(syms, tbl, 80)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+def test_decode_kernel_compiled_roundtrip():
+    tbl, syms = _case(402, k=256, lanes=128, t=256)
+    enc = coder.encode(syms, tbl)
+    dec, _ = ops.rans_decode(enc, 256, tbl, interpret=False)
+    np.testing.assert_array_equal(np.asarray(dec), np.asarray(syms))
+
+
+def test_spc_kernel_compiled_matches_ref():
+    rng = np.random.default_rng(403)
+    probs = jnp.asarray(rng.dirichlet(np.ones(256), size=8), jnp.float32)
+    got = np.asarray(ops.spc_quantize_tables(probs, interpret=False).freq)
+    want = np.asarray(spc.quantize_probs(probs))
+    np.testing.assert_array_equal(got, want)
