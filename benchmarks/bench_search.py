@@ -1,7 +1,8 @@
 """Fig. 4(b): decoder CDF-search cost — baseline binary search vs
 prediction-guided decoding (paper: 7.00 -> 3.15 avg steps, ~55% fewer).
 
-    PYTHONPATH=src python -m benchmarks.bench_search [--out BENCH_search.json]
+    PYTHONPATH=src python -m benchmarks.bench_search \
+        [--out BENCH_search.json] [--decode-out BENCH_decode.json]
 
 Workload: spatially-correlated image-like rows (the paper's image
 workloads); predictor: neighbour average with the paper's +-8 window.
@@ -12,6 +13,11 @@ the Pallas decode kernel (interpret mode on CPU) — consume
 *same canonical counters* regardless of which backend ran the decode.  The
 sweep decodes with both, asserts the per-lane counters are integer-identical,
 and reports once per point.
+
+``--decode-out`` additionally runs the decode-backend sweep: coder vs
+kernel x static/adaptive/chunked table layouts x model-top-k candidate
+speculation topk in {0, 4} — symbol and probe identity asserted at every
+point, mean probes reported per point (BENCH_decode.json).
 """
 
 from __future__ import annotations
@@ -25,7 +31,7 @@ import jax.numpy as jnp
 
 from repro.core import coder, spc
 from repro.core.predictors import NeighborAverage
-from repro.data.pipeline import image_rows
+from repro.data.pipeline import candidate_planes, image_rows
 from repro.kernels import ops
 
 
@@ -66,6 +72,67 @@ def run(lanes: int = 64, t: int = 2048, seed: int = 0,
     return points
 
 
+def run_decode_sweep(lanes: int = 8, t: int = 256, seed: int = 1,
+                     chunk_size: int = 48, topks=(0, 4),
+                     hit_rate: float = 0.8) -> list[dict]:
+    """Decode-backend sweep: coder vs kernel x table layout x topk.
+
+    Every point decodes the same stream on both backends and asserts
+    byte-identical symbols + integer-identical per-lane probe counters;
+    the emitted rows carry one mean-probe number per point (they are the
+    same counters on both backends by construction).
+    """
+    rng = np.random.default_rng(seed)
+    k = 256
+    rows = image_rows(lanes, t, seed=seed)
+    static_tbl = jax.tree.map(jnp.asarray, spc.tables_from_counts_np(
+        np.bincount(rows.ravel(), minlength=k)))
+    perpos_tbl = spc.tables_from_probs(jnp.asarray(
+        rng.dirichlet(np.full(k, 0.4), size=t), jnp.float32))
+    syms = jnp.asarray(rows, jnp.int32)
+
+    layouts = {
+        "static": (static_tbl, False),
+        "adaptive": (perpos_tbl, False),
+        "chunked": (perpos_tbl, True),
+    }
+    points = []
+    for layout, (tbl, chunked) in layouts.items():
+        if chunked:
+            stream = coder.encode_chunked(syms, tbl, chunk_size)
+        else:
+            stream = coder.encode(syms, tbl)
+        for topk in topks:
+            cands = (jnp.asarray(candidate_planes(rows, k, topk, hit_rate,
+                                                  seed + 7), jnp.int32)
+                     if topk else None)
+            if chunked:
+                csym, cavg, cl = coder.decode_chunked(
+                    stream, t, tbl, chunk_size, candidates=cands,
+                    lane_probes=True)
+                ksym, kavg, kl = ops.rans_decode_chunked(
+                    stream, t, tbl, chunk_size, candidates=cands,
+                    lane_probes=True)
+            else:
+                csym, cavg, cl = coder.decode(stream, t, tbl,
+                                              candidates=cands,
+                                              lane_probes=True)
+                ksym, kavg, kl = ops.rans_decode(stream, t, tbl,
+                                                 candidates=cands,
+                                                 lane_probes=True)
+            assert np.array_equal(np.asarray(csym), np.asarray(ksym))
+            assert np.array_equal(np.asarray(csym), rows)
+            assert np.array_equal(np.asarray(cl), np.asarray(kl)), (
+                f"{layout} topk={topk}: probe counters diverge")
+            points.append({
+                "layout": layout, "topk": topk, "lanes": lanes,
+                "n_symbols": t, "hit_rate": hit_rate if topk else None,
+                "avg_probes": float(np.asarray(cl).sum()) / (lanes * t),
+                "backends_agree": True,
+            })
+    return points
+
+
 def main(emit):
     pts = {p["name"]: p for p in run(t=1024)}
     base = pts["baseline"]["avg_steps"]
@@ -79,11 +146,17 @@ def main(emit):
     emit("fig4b_backend_agreement",
          float(all(p["backends_agree"] for p in pts.values())),
          "1.0 = kernel and coder probe counters integer-identical")
+    dec = {(p["layout"], p["topk"]): p for p in run_decode_sweep(t=128)}
+    spec, nospec = dec[("static", 4)], dec[("static", 0)]
+    emit("decode_sweep_speculation_probes", spec["avg_probes"],
+         f"model-top-4 candidates; no-spec={nospec['avg_probes']:.2f}, "
+         f"reduction={1 - spec['avg_probes']/nospec['avg_probes']:.1%}")
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="BENCH_search.json")
+    ap.add_argument("--decode-out", default="BENCH_decode.json")
     args = ap.parse_args()
     pts = run()
     with open(args.out, "w") as f:
@@ -94,3 +167,10 @@ if __name__ == "__main__":
               f"(reduction {1 - p['avg_steps']/base:.1%}, "
               f"backends_agree={p['backends_agree']})")
     print(f"wrote {len(pts)} points -> {args.out}")
+    dpts = run_decode_sweep()
+    with open(args.decode_out, "w") as f:
+        json.dump(dpts, f, indent=2)
+    for p in dpts:
+        print(f"{p['layout']} topk={p['topk']}: "
+              f"{p['avg_probes']:.3f} probes/symbol")
+    print(f"wrote {len(dpts)} points -> {args.decode_out}")

@@ -218,17 +218,36 @@ def unpack(blob: bytes) -> tuple[np.ndarray, np.ndarray, Container]:
     The returned buffer is forward-readable from ``start`` per lane, i.e.
     directly consumable by ``coder.decoder_init``.  v2 blobs are chunked —
     read them with :func:`unpack_chunked`.
+
+    Corrupt input raises :class:`ValueError` naming the damaged region
+    (truncated header / length table / per-lane payload) — never a raw
+    struct/numpy error and never a silently short buffer.
     """
-    magic, version, prob_bits, _, lanes, n_symbols = _HEADER.unpack_from(blob)
-    if magic == MAGIC_V2:
+    if blob[:4] == MAGIC_V2:
         raise ValueError("chunked container v2: use bitstream.unpack_chunked")
-    if magic != MAGIC:
+    if blob[:4] != MAGIC:
         raise ValueError("not a RAS container")
+    if len(blob) < _HEADER.size:
+        raise ValueError(
+            f"truncated container v1: header needs {_HEADER.size} bytes, "
+            f"blob has {len(blob)}")
+    magic, version, prob_bits, _, lanes, n_symbols = _HEADER.unpack_from(blob)
     if version != 1:
         raise ValueError(f"unsupported container version {version}")
     off = _HEADER.size
+    if off + 4 * lanes > len(blob):
+        raise ValueError(
+            f"truncated container v1: lane-length table needs bytes "
+            f"[{off}, {off + 4 * lanes}) for {lanes} lanes, blob has "
+            f"{len(blob)}")
     length = np.frombuffer(blob, np.uint32, lanes, off).astype(np.int64)
     off += 4 * lanes
+    if off + int(length.sum()) > len(blob):
+        bad = int(np.argmax(off + np.cumsum(length) > len(blob)))
+        raise ValueError(
+            f"truncated payload at lane {bad}: lane lengths claim "
+            f"{int(length.sum())} payload bytes but blob has "
+            f"{len(blob) - off}")
     cap = int(length.max()) if lanes else 0
     buf = np.zeros((lanes, cap), np.uint8)
     start = (cap - length).astype(np.int32)
@@ -315,6 +334,11 @@ def unpack_chunked(blob: bytes) -> tuple[np.ndarray, np.ndarray,
     chunk slice is directly consumable by ``coder.decoder_init``.  v1 blobs
     are presented as a single chunk of ``n_symbols`` symbols — the
     back-compat path for pre-chunking archives.
+
+    Corrupt input raises :class:`ValueError` naming the damaged cell or
+    region (truncated header / index / payload span, CRC mismatch at a
+    specific (chunk, lane)) — never a raw struct/numpy error and never a
+    silently short stream.
     """
     magic = blob[:4]
     if magic == MAGIC:
@@ -326,6 +350,10 @@ def unpack_chunked(blob: bytes) -> tuple[np.ndarray, np.ndarray,
                                  n_chunks=1))
     if magic != MAGIC_V2:
         raise ValueError("not a RAS container")
+    if len(blob) < _HEADER_V2.size:
+        raise ValueError(
+            f"truncated container v2: header needs {_HEADER_V2.size} bytes, "
+            f"blob has {len(blob)}")
     (magic, version, prob_bits, flags, lanes, n_symbols, chunk_size,
      n_chunks) = _HEADER_V2.unpack_from(blob)
     if version != 2:
@@ -334,16 +362,39 @@ def unpack_chunked(blob: bytes) -> tuple[np.ndarray, np.ndarray,
     off = _HEADER_V2.size
     cells = n_chunks * lanes
     index_dt = _INDEX_V2C_DT if has_crc else _INDEX_V2_DT
-    index = np.frombuffer(blob, index_dt, cells, off)
-    offsets = index["offset"].astype(np.int64)
-    length = index["length"].astype(np.int64)
     base = off + cells * index_dt.itemsize
+    if base > len(blob):
+        raise ValueError(
+            f"truncated container v2: chunk index table needs bytes "
+            f"[{off}, {base}) for {n_chunks} chunks x {lanes} lanes, blob "
+            f"has {len(blob)}")
+    index = np.frombuffer(blob, index_dt, cells, off)
+    offsets_u = index["offset"]                 # u64: validate BEFORE any
+    length = index["length"].astype(np.int64)   # signed use — a corrupt
+    payload_len = len(blob) - base              # offset must not wrap
+    oob = offsets_u > np.uint64(payload_len)
+    spans = offsets_u.astype(np.int64) + length
+    bad_cell = oob | (spans > payload_len)
+    if cells and bad_cell.any():
+        bad = int(np.argmax(bad_cell))
+        c, lane = divmod(bad, lanes)
+        raise ValueError(
+            f"truncated payload at chunk {c}, lane {lane}: cell claims "
+            f"payload bytes [{int(offsets_u[bad])}, "
+            f"{int(offsets_u[bad]) + int(length[bad])}) but the payload "
+            f"holds {payload_len}")
+    offsets = offsets_u.astype(np.int64)
+    if cells and int(length.sum()) > payload_len:
+        raise ValueError(
+            f"corrupt chunk index: cells claim {int(length.sum())} total "
+            f"payload bytes but the payload holds {payload_len} — "
+            "overlapping or inflated spans")
     cap = int(length.max()) if cells else 0
     buf = np.zeros((n_chunks, lanes, cap), np.uint8)
     start = (cap - length.reshape(n_chunks, lanes)).astype(np.int32)
     # right-align every cell's span with one vectorized gather through the
     # index's per-cell offsets (writers may order/pad payloads freely)
-    payload = np.frombuffer(blob, np.uint8, len(blob) - base, base)
+    payload = np.frombuffer(blob, np.uint8, payload_len, base)
     if has_crc:
         for cell in range(cells):
             o, n = int(offsets[cell]), int(length[cell])

@@ -266,7 +266,8 @@ def encode_chunked(symbols: jax.Array, tbl: TableSet, chunk_size: int,
 def decode_chunked(chunks: ChunkedLanes, n_symbols: int, tbl: TableSet,
                    chunk_size: int, prob_bits: int = C.PROB_BITS,
                    use_lut: bool = False, predictor=None,
-                   lane_probes: bool = False):
+                   lane_probes: bool = False,
+                   candidates: jax.Array | None = None):
     """Decode a chunked stream; returns (symbols (lanes, T), avg_probes).
 
     Full-size chunks decode in parallel (vmap over the chunk axis — see
@@ -275,7 +276,9 @@ def decode_chunked(chunks: ChunkedLanes, n_symbols: int, tbl: TableSet,
     :func:`encode_chunked`.  ``predictor`` drives prediction-guided search
     inside every chunk (context resets at chunk boundaries — the chunks are
     independent streams); ``lane_probes`` also returns the per-lane probe
-    totals summed across chunks.
+    totals summed across chunks.  ``candidates`` is an optional
+    ``(T, lanes, topk)`` model-top-k candidate plane, cut chunk-major like
+    the per-position tables (rows [c*S, c*S+n) speculate chunk ``c``).
     """
     n_total = num_chunks(n_symbols, chunk_size)
     if chunks.buf.shape[0] != n_total:
@@ -285,23 +288,30 @@ def decode_chunked(chunks: ChunkedLanes, n_symbols: int, tbl: TableSet,
             "decode with the chunk_size the stream was encoded with")
     n_full, tail_len = divmod(n_symbols, chunk_size)
     per_position = is_per_position(tbl, n_symbols)
+    if candidates is not None and candidates.shape[-1] == 0:
+        candidates = None
 
     syms, probe_sums, lane_sums = [], [], []
     if n_full:
         sub = jax.tree.map(lambda a: a[:n_full], chunks)
+        cand_full = (candidates[:n_full * chunk_size].reshape(
+            (n_full, chunk_size) + candidates.shape[1:])
+            if candidates is not None else None)
         if per_position:
             dec = jax.vmap(
-                lambda e, tb: decode(EncodedLanes(*e), chunk_size, tb,
-                                     prob_bits, predictor=predictor,
-                                     use_lut=use_lut,
-                                     lane_probes=lane_probes))(
-                sub, chunk_tables(tbl, n_full, chunk_size))
+                lambda e, tb, cd: decode(EncodedLanes(*e), chunk_size, tb,
+                                         prob_bits, predictor=predictor,
+                                         use_lut=use_lut,
+                                         lane_probes=lane_probes,
+                                         candidates=cd))(
+                sub, chunk_tables(tbl, n_full, chunk_size), cand_full)
         else:
             dec = jax.vmap(
-                lambda e: decode(EncodedLanes(*e), chunk_size, tbl,
-                                 prob_bits, predictor=predictor,
-                                 use_lut=use_lut,
-                                 lane_probes=lane_probes))(sub)
+                lambda e, cd: decode(EncodedLanes(*e), chunk_size, tbl,
+                                     prob_bits, predictor=predictor,
+                                     use_lut=use_lut,
+                                     lane_probes=lane_probes,
+                                     candidates=cd))(sub, cand_full)
         if lane_probes:
             sym_full, probes_full, lp_full = dec
             lane_sums.append(jnp.sum(lp_full, axis=0))
@@ -316,7 +326,9 @@ def decode_chunked(chunks: ChunkedLanes, n_symbols: int, tbl: TableSet,
                     if per_position else tbl)
         dec_tail = decode(
             chunk_encoded(chunks, n_full), tail_len, tbl_tail, prob_bits,
-            predictor=predictor, use_lut=use_lut, lane_probes=lane_probes)
+            predictor=predictor, use_lut=use_lut, lane_probes=lane_probes,
+            candidates=(candidates[n_full * chunk_size:]
+                        if candidates is not None else None))
         if lane_probes:
             sym_tail, probes_tail, lp_tail = dec_tail
             lane_sums.append(lp_tail)
@@ -407,7 +419,8 @@ def decode_get(st: DecState, buf: jax.Array, tbl: TableSet,
                                              "lane_probes"))
 def decode(enc: EncodedLanes, n_symbols: int, tbl: TableSet,
            prob_bits: int = C.PROB_BITS, predictor=None,
-           use_lut: bool = False, lane_probes: bool = False):
+           use_lut: bool = False, lane_probes: bool = False,
+           candidates: jax.Array | None = None):
     """Decode ``n_symbols`` per lane.  Returns (symbols (lanes,T), avg_probes).
 
     ``predictor`` is one of core.predictors (hashable NamedTuple of static
@@ -416,31 +429,48 @@ def decode(enc: EncodedLanes, n_symbols: int, tbl: TableSet,
     ``use_lut``: static tables only — O(1) slot->symbol inversion.
     ``lane_probes``: also return the per-lane probe totals ``(lanes,)`` int32
     — the raw Fig. 4(b) counters the cross-backend differential tests pin.
+    ``candidates``: optional ``(T, lanes, topk)`` plane of model-top-k trial
+    symbols (the serve pipeline's candidate speculation), scanned row-by-row
+    into :func:`decode_get` — the pure-JAX reference for the kernel's
+    candidate-plane input (topk == 0 disables speculation).
     """
     lanes = enc.buf.shape[0]
     per_position = (tbl.freq.ndim in (2, 3)
                     and tbl.freq.shape[0] == n_symbols)
+    if candidates is not None and candidates.shape[-1] == 0:
+        candidates = None
+    if candidates is not None and candidates.shape[:2] != (n_symbols, lanes):
+        raise ValueError(
+            f"candidate planes must be (T, lanes, topk)=({n_symbols}, "
+            f"{lanes}, *); got {candidates.shape}")
     ctx0 = predictor.init(lanes) if predictor is not None else jnp.zeros((lanes, 0), _I32)
     lut = None
     if use_lut:
         assert not per_position, "LUT path requires a static table"
+        if candidates is not None:
+            raise ValueError("use_lut and candidate planes are exclusive: "
+                             "the LUT already inverts in one probe")
         from repro.core.spc import decode_lut
         lut = decode_lut(tbl, prob_bits)
 
-    def step(carry, tbl_t):
+    def step(carry, xs):
         st, ctx = carry
+        tbl_t, cand_t = xs
         t = tbl if not per_position else tbl_t
         if predictor is not None:
             pred = predictor.predict(ctx)
+            cands = cand_t if cand_t is not None else pred.candidates
             st, x, probes = decode_get(st, enc.buf, t, prob_bits,
                                        mu=pred.mu, delta=pred.delta,
-                                       candidates=pred.candidates)
+                                       candidates=cands)
             ctx = predictor.update(ctx, x)
         else:
-            st, x, probes = decode_get(st, enc.buf, t, prob_bits, lut=lut)
+            st, x, probes = decode_get(st, enc.buf, t, prob_bits, lut=lut,
+                                       candidates=cand_t)
         return (st, ctx), (x, probes)
 
-    xs = tbl if per_position else None
+    xs = (tbl if per_position else None,
+          candidates.astype(_I32) if candidates is not None else None)
     (_, _), (sym_t, probes_t) = jax.lax.scan(
         step, (decoder_init(enc), ctx0), xs, length=n_symbols)
     avg_probes = jnp.mean(probes_t.astype(jnp.float32))

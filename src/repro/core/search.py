@@ -103,13 +103,19 @@ def find_symbol(cdf: jax.Array, k: int, slot: jax.Array,
 
     ``cdf`` is the ``(..., K+1)`` exclusive prefix table (shared or
     per-lane, matching ``gather``); ``k`` the alphabet size; ``slot`` the
-    ``(lanes,)`` low-bits slot of each lane's rANS state.
+    ``(lanes,)`` low-bits slot of each lane's rANS state.  ``candidates``
+    is a ``(lanes, topk)`` row of trial symbols (one row of the serve
+    pipeline's ``(T, lanes, topk)`` model-top-k candidate planes); a
+    zero-width row (``topk == 0``) is the explicit "no speculation" point
+    of the decode-backend sweeps and costs nothing.
 
     Returns ``(symbol, probes)`` where ``probes`` charges CDF accesses per
     lane exactly per the canonical accounting in the module docstring.
     Fallback lanes pay the verify + the full search — the paper's "bounded
     penalty" — so the worst case equals the baseline binary search.
     """
+    if candidates is not None and candidates.shape[-1] == 0:
+        candidates = None
     lanes = slot.shape[0]
     lo0 = jnp.zeros((lanes,), _I32)
     hi0 = jnp.full((lanes,), k, _I32)

@@ -7,7 +7,9 @@ multi-host input pipeline contract):
   * token streams   — Zipf-distributed ids with Markov momentum (LM-ish);
   * image rows      — smooth 2-D random fields quantized to bytes
                       (spatially correlated: the Fig. 3/4(b) workload);
-  * batches         — train batches (tokens, labels=shift) for any cfg.
+  * batches         — train batches (tokens, labels=shift) for any cfg;
+  * candidate planes — model-top-k stand-ins for decoder speculation
+                      sweeps (a model's top-1 accuracy without its cost).
 """
 
 from __future__ import annotations
@@ -54,6 +56,25 @@ def synthetic_image(h: int, w: int, *, seed: int = 0) -> np.ndarray:
     noise = rng.integers(-4, 5, (h, w))
     img = 128 + rows + cols + noise
     return np.clip(img, 0, 255).astype(np.uint8)
+
+
+def candidate_planes(syms: np.ndarray, k: int, topk: int,
+                     hit_rate: float, seed: int = 0) -> np.ndarray:
+    """(T, lanes, topk) model-top-k stand-in for speculation workloads.
+
+    Slot 0 holds the true symbol with probability ``hit_rate`` (a model's
+    top-1 accuracy); the remaining slots are random alphabet ids.  The
+    decode-backend sweeps and the Fig. 4(b) probe-regression tests share
+    this single synthesizer so the benchmark measures exactly the workload
+    the tests pin.
+    """
+    rng = _rng(seed, k, topk)
+    syms = np.asarray(syms)
+    lanes, t = syms.shape
+    cands = rng.integers(0, k, (t, lanes, topk))
+    hit = rng.random((t, lanes)) < hit_rate
+    cands[..., 0] = np.where(hit, syms.T, cands[..., 0])
+    return cands.astype(np.int32)
 
 
 def train_batch(cfg: ModelConfig, batch: int, seq: int, *, step: int = 0,

@@ -19,11 +19,45 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 # single-source integer primitives (core/update.py uses numpy-scalar masks,
 # so Pallas kernels see literals, not captured device constants); kept as a
 # re-export for the kernels' historical import path.
 from repro.core.update import umulhi32  # noqa: F401
+
+
+def pad_chunk_rows(a: jax.Array, t_len: int, chunk_size: int,
+                   n_chunks: int, padded_chunk: int) -> jax.Array:
+    """Re-lay rows [0, t_len) chunk-major with each chunk padded to
+    ``padded_chunk`` rows (zeros; padding rows are never read/emitting).
+
+    The shared layout transform of the chunk-grid kernels: both the encode
+    and decode kernels cut a stream into a chunk grid axis whose every chunk
+    spans a whole number of T blocks, so ragged chunks (and the ragged final
+    chunk) get zero rows appended up to ``padded_chunk``.
+    """
+    if padded_chunk == chunk_size and n_chunks * chunk_size == t_len:
+        return a    # aligned layout: the re-lay would be an identity copy
+    parts = []
+    for ci in range(n_chunks):
+        sl = a[ci * chunk_size:min((ci + 1) * chunk_size, t_len)]
+        pad = padded_chunk - sl.shape[0]
+        parts.append(jnp.pad(sl, ((0, pad),) + ((0, 0),) * (a.ndim - 1)))
+    return jnp.concatenate(parts, axis=0)
+
+
+def unpad_chunk_rows(a: jax.Array, t_len: int, chunk_size: int,
+                     n_chunks: int, padded_chunk: int) -> jax.Array:
+    """Inverse of :func:`pad_chunk_rows`: gather the ``t_len`` valid rows
+    back out of the chunk-major padded layout (padding rows dropped)."""
+    if padded_chunk == chunk_size and n_chunks * chunk_size == t_len:
+        return a
+    rows = np.concatenate([
+        ci * padded_chunk
+        + np.arange(min(chunk_size, t_len - ci * chunk_size))
+        for ci in range(n_chunks)])
+    return a[jnp.asarray(rows, jnp.int32)]
 
 
 def onehot_gather(table: jax.Array, idx: jax.Array) -> jax.Array:

@@ -8,11 +8,13 @@ scalar golden reference, for static ``(K,)``, per-position ``(T, K)`` and
 per-lane ``(T, lanes, K)`` TableSets.  The chunked encode is a single
 ``pallas_call`` (chunk grid axis with in-kernel state reset).
 ``rans_decode`` / ``rans_decode_chunked`` wrap the prediction-guided decode
-kernel (static and adaptive per-position TableSets; symbols AND per-lane
-probe counters are bit-identical to the pure-JAX coder — both consume
-``core.search``).  ``spc_quantize`` wraps the mass-correction kernel.  All
-default to ``interpret=True`` (this container is CPU-only; on a real TPU
-pass interpret=False).
+kernel (static and adaptive TableSets plus ``(T, lanes, topk)`` model-top-k
+candidate planes; symbols AND per-lane probe counters are bit-identical to
+the pure-JAX coder — both consume ``core.search``).  The chunked decode,
+like the chunked encode, is a single ``pallas_call`` (chunk grid axis with
+in-kernel state/pointer/context reset).  ``spc_quantize`` wraps the
+mass-correction kernel.  All default to ``interpret=True`` (this container
+is CPU-only; on a real TPU pass interpret=False).
 """
 
 from __future__ import annotations
@@ -24,9 +26,8 @@ from repro.core import constants as C
 # stream compaction lives in core (wire format); re-exported here for
 # back-compat with the historical kernels-side import path
 from repro.core.bitstream import compact_records  # noqa: F401
-from repro.core.coder import (ChunkedLanes, EncodedLanes, chunk_encoded,
-                              chunk_lengths, default_cap, is_per_position,
-                              num_chunks, slice_tables)
+from repro.core.coder import (ChunkedLanes, EncodedLanes, default_cap,
+                              num_chunks)
 from repro.core.predictors import NeighborAverage
 from repro.core.spc import TableSet, build_tables
 from repro.kernels.rans_decode import rans_decode_lanes
@@ -88,6 +89,7 @@ def rans_decode(enc: EncodedLanes, n_symbols: int, tbl: TableSet,
                 prob_bits: int = C.PROB_BITS,
                 use_pred: bool = False, window: int = 4, delta: int = 8,
                 predictor=None,
+                candidates: jax.Array | None = None,
                 lane_block: int = 128,
                 t_block: int | None = None,
                 interpret: bool = True,
@@ -98,10 +100,13 @@ def rans_decode(enc: EncodedLanes, n_symbols: int, tbl: TableSet,
     are all decoded in-kernel (the adaptive layouts block the T axis through
     VMEM — ``t_block``).  ``predictor`` is any ``core.predictors`` config;
     ``use_pred``/``window``/``delta`` remain as sugar for the paper's
-    neighbour-average predictor.  When the lane count does not tile the
-    ``lane_block`` grid the block collapses to one lane group (correctness
-    over occupancy — the serve/parallel paths run narrow lane counts).
-    ``lane_probes``: also return the per-lane probe counters ``(lanes,)``.
+    neighbour-average predictor.  ``candidates`` is an optional
+    ``(T, lanes, topk)`` model-top-k candidate plane verified in-kernel
+    (topk == 0 disables speculation).  When the lane count does not tile
+    the ``lane_block`` grid the block collapses to one lane group
+    (correctness over occupancy — the serve/parallel paths run narrow lane
+    counts).  ``lane_probes``: also return the per-lane counters
+    ``(lanes,)``.
     """
     if predictor is None and use_pred:
         predictor = NeighborAverage(window=window, delta=delta)
@@ -110,8 +115,9 @@ def rans_decode(enc: EncodedLanes, n_symbols: int, tbl: TableSet,
         lane_block = lanes
     sym, probes = rans_decode_lanes(
         enc.buf, enc.start, tbl.freq, tbl.cdf, t_len=n_symbols,
-        prob_bits=prob_bits, predictor=predictor, lane_block=lane_block,
-        t_block=t_block, interpret=interpret)
+        prob_bits=prob_bits, predictor=predictor, candidates=candidates,
+        lane_block=lane_block, t_block=t_block, interpret=interpret)
+    probes = probes[0]
     avg = jnp.mean(probes.astype(jnp.float32)) / n_symbols
     if lane_probes:
         return sym, avg, probes
@@ -122,19 +128,25 @@ def rans_decode_chunked(chunks: ChunkedLanes, n_symbols: int, tbl: TableSet,
                         chunk_size: int,
                         prob_bits: int = C.PROB_BITS,
                         predictor=None,
+                        candidates: jax.Array | None = None,
                         lane_block: int = 128,
                         t_block: int | None = None,
                         interpret: bool = True,
-                        lane_probes: bool = False):
+                        lane_probes: bool = False,
+                        chunk_probes: bool = False):
     """Kernel-backed chunked decode (mirrors :func:`rans_encode_chunked`).
 
-    Runs the decode kernel once per chunk — each (chunk, lane) cell is a
-    standalone stream, so the kernel re-reads the 4-byte state header per
-    chunk exactly like ``coder.decode_chunked``'s per-chunk ``decoder_init``.
-    Per-position TableSets (leading T dim of ``n_symbols``) are sliced
-    chunk-major, static tables are reused.  Probe accounting matches the
-    pure-JAX path per lane and per chunk (both consume ``core.search``).
-    Returns ``(symbols (lanes, T), avg_probes[, per-lane probes])``.
+    ONE ``pallas_call`` for the whole stream: the chunk axis is a grid
+    dimension of the decode kernel (in-kernel per-chunk state/pointer/
+    context reset — no host-side loop of kernel launches).  Each (chunk,
+    lane) cell is a standalone stream, so the kernel re-reads the 4-byte
+    state header at every chunk's first grid step exactly like
+    ``coder.decode_chunked``'s per-chunk ``decoder_init``.  Per-position
+    TableSets (leading T dim of ``n_symbols``) and ``(T, lanes, topk)``
+    candidate planes ride the chunk grid axis; static tables are reused.
+    Probe accounting matches the pure-JAX path per lane and per chunk (both
+    consume ``core.search``).  Returns ``(symbols (lanes, T), avg_probes
+    [, per-lane probes][, per-(chunk, lane) probes])``.
     """
     n_total = num_chunks(n_symbols, chunk_size)
     if chunks.buf.shape[0] != n_total:
@@ -142,23 +154,22 @@ def rans_decode_chunked(chunks: ChunkedLanes, n_symbols: int, tbl: TableSet,
             f"stream has {chunks.buf.shape[0]} chunks but n_symbols="
             f"{n_symbols} at chunk_size={chunk_size} implies {n_total}; "
             "decode with the chunk_size the stream was encoded with")
-    per_position = is_per_position(tbl, n_symbols)
-    syms, probe_sums, lane_sums = [], [], []
-    for c, n in enumerate(chunk_lengths(n_symbols, chunk_size)):
-        t0 = c * chunk_size
-        tbl_c = slice_tables(tbl, t0, t0 + n) if per_position else tbl
-        sym, avg, lanes_c = rans_decode(
-            chunk_encoded(chunks, c), n, tbl_c, prob_bits=prob_bits,
-            predictor=predictor, lane_block=lane_block, t_block=t_block,
-            interpret=interpret, lane_probes=True)
-        syms.append(sym)
-        probe_sums.append(avg * n)
-        lane_sums.append(lanes_c)
-    out = jnp.concatenate(syms, axis=1)
-    avg_probes = sum(probe_sums) / n_symbols
+    lanes = chunks.buf.shape[1]
+    if lanes % lane_block:
+        lane_block = lanes
+    sym, cprobes = rans_decode_lanes(
+        chunks.buf, chunks.start, tbl.freq, tbl.cdf, t_len=n_symbols,
+        chunk_size=chunk_size, prob_bits=prob_bits, predictor=predictor,
+        candidates=candidates, lane_block=lane_block, t_block=t_block,
+        interpret=interpret)
+    avg_probes = (jnp.sum(cprobes.astype(jnp.float32))
+                  / (lanes * n_symbols))
+    out = (sym, avg_probes)
     if lane_probes:
-        return out, avg_probes, sum(lane_sums)
-    return out, avg_probes
+        out = out + (jnp.sum(cprobes, axis=0),)
+    if chunk_probes:
+        out = out + (cprobes,)
+    return out
 
 
 def spc_quantize_tables(probs: jax.Array,

@@ -17,6 +17,12 @@ probes (state-to-symbol search) and stream reads.  Kernel design:
     ``NeighborAverage``/``LastValue``/``ZeroPredictor`` behave identically
     in kernel and reference paths — bit-exactness is structural (the
     bracket only narrows the search start, the search itself is unchanged);
+  * **candidate planes** (model-top-k speculation, Fig. 2 trial symbols):
+    the kernel accepts a ``(T, lanes, topk)`` plane of trial symbols — the
+    serve pipeline's model-top-k ids — blocked through VMEM alongside the
+    tables.  Each row feeds ``core.search.find_symbol``'s candidate path
+    (one O(1) one-hot CDF probe per trial), so in-kernel speculation pays
+    exactly the canonical probe accounting of the pure-JAX decoder;
   * **adaptive tables**: besides a static ``(K,)`` TableSet the kernel
     accepts per-position ``(T, K)`` and per-position-per-lane
     ``(T, lanes, K)`` tables — the neural-prior layouts of
@@ -24,16 +30,24 @@ probes (state-to-symbol search) and stream reads.  Kernel design:
     (``t_block`` rows of freq/cdf per grid step); decoder state persists in
     scratch between T blocks, so arbitrarily long adaptive streams decode
     without holding all T tables on chip;
+  * **chunk grid axis**: chunked streams (independent per-chunk flush — the
+    interleaved-ANS construction) decode in ONE ``pallas_call``: the chunk
+    axis is a grid dimension; at each chunk's first grid step the kernel
+    re-reads that chunk's 4-byte state header and resets the read cursors,
+    probe counters and predictor context (chunks are standalone streams).
+    Ragged chunks are padded to whole T blocks; padding rows decode nothing
+    and their output rows are dropped host-side;
   * fixed 2-step masked byte refill mirrors the encoder's renorm bound.
 
-Grid: ``(lanes // lane_block, ceil(T / t_block))`` — the T axis iterates
-fastest, so each lane block streams its table blocks sequentially while the
-byte stream (cap x Lb) stays resident.
+Grid: ``(lanes // lane_block, n_chunks, ceil(chunk_size / t_block))`` — the
+T axis iterates fastest (innermost), then chunks, so each (lane block,
+chunk) streams its table blocks sequentially while that chunk's byte
+stream (cap x Lb) stays resident.
 
 VMEM per grid step: stream (cap x Lb) + tables (t_block x [Lb x] (2K+1)
-u32) + symbols out (t_block x Lb).  For T=4096, Lb=128, K=256 static:
-~3.7 MB; for the (T, lanes, K) adaptive layout, t_block=8 keeps the table
-slab at ~2.1 MB.
+u32) + candidates (t_block x Lb x topk) + symbols out (t_block x Lb).  For
+T=4096, Lb=128, K=256 static: ~3.7 MB; for the (T, lanes, K) adaptive
+layout, t_block=8 keeps the table slab at ~2.1 MB.
 
 Context layout note: the predictor protocol's ``(lanes, window)`` context is
 kept as-is inside the kernel (sublane-major for the tiny ``window`` axis);
@@ -53,25 +67,31 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core import constants as C
 from repro.core import search
 from repro.kernels.common import (onehot_gather, onehot_gather_lanes,
-                                  onehot_gather_rows)
+                                  onehot_gather_rows, pad_chunk_rows,
+                                  unpad_chunk_rows)
 
 _U32 = jnp.uint32
 _I32 = jnp.int32
 
 
-def _decode_kernel(buf_ref, start_ref, freq_ref, cdf_ref,
-                   sym_ref, probes_ref,
-                   s_scr, ptr_scr, ctx_scr,
-                   *, t_len: int, t_block: int, prob_bits: int, k: int,
-                   layout: str, predictor, ctx_w: int):
-    lanes = buf_ref.shape[1]
+def _decode_kernel(buf_ref, start_ref, freq_ref, cdf_ref, *rest,
+                   t_len: int, chunk_size: int, t_block: int, n_tb: int,
+                   prob_bits: int, k: int, layout: str, predictor,
+                   ctx_w: int, has_cands: bool):
+    if has_cands:
+        cand_ref, sym_ref, probes_ref, s_scr, ptr_scr, ctx_scr = rest
+    else:
+        sym_ref, probes_ref, s_scr, ptr_scr, ctx_scr = rest
+    lanes = sym_ref.shape[1]
     mask = _U32((1 << prob_bits) - 1)
-    buf = buf_ref[...]        # (cap, lanes) resident in VMEM
-    j = pl.program_id(1)      # T-block index (innermost grid axis)
+    buf = buf_ref[0]          # (cap, lanes): this chunk's streams in VMEM
+    c = pl.program_id(1)      # chunk index
+    j = pl.program_id(2)      # T-block index (innermost grid axis)
 
     @pl.when(j == 0)
     def _init():
-        # read the 4-byte big-endian state header once per lane block
+        # per-chunk re-init: every chunk is a standalone stream — read its
+        # 4-byte big-endian state header and reset cursors/probes/context
         ptr = start_ref[0].astype(_I32)
         s = jnp.zeros((lanes,), _U32)
         for _ in range(4):
@@ -94,8 +114,14 @@ def _decode_kernel(buf_ref, start_ref, freq_ref, cdf_ref,
     else:
         ctx0 = jnp.zeros((lanes, 0), _I32)
 
-    # number of valid positions in this T block (last block may be ragged)
-    n_t = jnp.minimum(t_block, t_len - j * t_block)
+    # valid rows in this T block: the final chunk may be ragged, and padding
+    # rows (up to a whole T block) decode nothing
+    chunk_len = jnp.minimum(chunk_size, t_len - c * chunk_size)
+    n_t = jnp.clip(chunk_len - j * t_block, 0, t_block)
+
+    # zero the symbol block first: rows >= n_t are padding (dropped by the
+    # host-side unpad), and valid rows overwrite below
+    sym_ref[...] = jnp.zeros(sym_ref.shape, _I32)
 
     def body(t, carry):
         s, ptr, probes, ctx = carry
@@ -110,14 +136,18 @@ def _decode_kernel(buf_ref, start_ref, freq_ref, cdf_ref,
             freq_t = freq_ref[pl.dslice(t, 1), :, :][0]    # (lanes, K)
             cdf_t = cdf_ref[pl.dslice(t, 1), :, :][0]      # (lanes, K+1)
             g = onehot_gather_lanes
+        cand_t = (cand_ref[pl.dslice(t, 1), :, :][0]       # (lanes, topk)
+                  if has_cands else None)
         if predictor is not None:
             pred = predictor.predict(ctx)
+            cands = cand_t if has_cands else pred.candidates
             x, p = search.find_symbol(cdf_t, k, slot, mu=pred.mu,
                                       delta=pred.delta,
-                                      candidates=pred.candidates, gather=g)
+                                      candidates=cands, gather=g)
             ctx = predictor.update(ctx, x)
         else:
-            x, p = search.find_symbol(cdf_t, k, slot, gather=g)
+            x, p = search.find_symbol(cdf_t, k, slot, candidates=cand_t,
+                                      gather=g)
         sym_ref[pl.dslice(t, 1), :] = x.reshape(1, lanes)
         f = g(freq_t, x)
         start = g(cdf_t[..., :k], x)
@@ -139,18 +169,37 @@ def _decode_kernel(buf_ref, start_ref, freq_ref, cdf_ref,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("t_len", "prob_bits", "predictor",
-                                    "lane_block", "t_block", "interpret"))
+                   static_argnames=("t_len", "chunk_size", "prob_bits",
+                                    "predictor", "lane_block", "t_block",
+                                    "interpret"))
 def rans_decode_lanes(buf: jax.Array,      # (lanes, cap) uint8 forward stream
                       start: jax.Array,    # (lanes,) int32
                       freq: jax.Array, cdf: jax.Array,
                       t_len: int,
+                      chunk_size: int | None = None,
                       prob_bits: int = C.PROB_BITS,
                       predictor=None,
+                      candidates: jax.Array | None = None,
                       lane_block: int = 128,
                       t_block: int | None = None,
                       interpret: bool = True):
-    """Decode t_len symbols/lane.  Returns (symbols (lanes,T), probes (lanes,)).
+    """Decode t_len symbols/lane — ONE ``pallas_call`` for the whole stream.
+
+    Returns ``(symbols (lanes, T), probes (n_chunks, lanes))``: the probe
+    plane carries the canonical per-(chunk, lane) Fig. 4(b) counters of
+    ``core.search`` — integer-identical to ``core.coder.decode[_chunked]``.
+
+    Stream layouts (detected from ``buf.ndim``):
+      * ``(lanes, cap)``            — one monolithic stream per lane
+                                      (``chunk_size`` must be None);
+      * ``(n_chunks, lanes, cap)``  — chunked streams (``ChunkedLanes``
+                                      device form): every (chunk, lane) cell
+                                      is standalone; the chunk axis is a
+                                      *grid* dimension with in-kernel
+                                      state/pointer/context reset, not a
+                                      host-side loop of launches.  ``start``
+                                      must carry the matching leading axis
+                                      and ``chunk_size`` is required.
 
     Table layouts (detected from ``freq.ndim``):
       * ``(K,)``            — static shared table (classic rANS);
@@ -161,68 +210,106 @@ def rans_decode_lanes(buf: jax.Array,      # (lanes, cap) uint8 forward stream
     ``cdf`` must carry the matching shape with a trailing ``K+1``.
 
     ``predictor`` is a ``core.predictors`` config (hashable NamedTuple) or
-    None; ``t_block`` blocks the T axis through VMEM (None = whole stream in
-    one block).  ``probes`` are the canonical per-lane Fig. 4(b) counters of
-    ``core.search`` — bit-identical to ``core.coder.decode``'s.
+    None; ``candidates`` an optional ``(T, lanes, topk)`` plane of
+    model-top-k trial symbols (topk == 0 disables speculation), verified
+    in-kernel with O(1) probes each; ``t_block`` blocks the T axis through
+    VMEM (None = whole chunk in one block).
     """
-    lanes, cap = buf.shape
+    if buf.ndim == 2:
+        if chunk_size is not None:
+            raise ValueError("monolithic (lanes, cap) stream cannot take a "
+                             "chunk_size; pass a (n_chunks, lanes, cap) buf")
+        buf3 = buf[None]
+        start2 = start.reshape(1, -1)
+        chunk = t_len
+    elif buf.ndim == 3:
+        if chunk_size is None:
+            raise ValueError("chunked (n_chunks, lanes, cap) stream needs "
+                             "chunk_size")
+        buf3, start2, chunk = buf, start, min(chunk_size, t_len)
+    else:
+        raise ValueError(f"unsupported stream rank {buf.ndim}")
+    n_chunks, lanes, cap = buf3.shape
+    if n_chunks != -(-t_len // chunk):
+        raise ValueError(
+            f"stream has {n_chunks} chunks but t_len={t_len} at chunk_size="
+            f"{chunk} implies {-(-t_len // chunk)}")
     if lanes % lane_block:
         raise ValueError(f"lanes={lanes} not a multiple of {lane_block}")
     k = freq.shape[-1]
-    t_block = t_len if t_block is None else min(t_block, t_len)
-    t_block = max(t_block, 1)
-    n_tb = -(-t_len // t_block)
+    tb = chunk if t_block is None else max(1, min(t_block, chunk))
+    n_tb = -(-chunk // tb)
+    padded_chunk = n_tb * tb
+    total_rows = n_chunks * padded_chunk
 
     if freq.ndim == 1:
         layout = "static"
         freq_in, cdf_in = freq.reshape(1, k), cdf.reshape(1, k + 1)
-        freq_spec = pl.BlockSpec((1, k), lambda i, j: (0, 0))
-        cdf_spec = pl.BlockSpec((1, k + 1), lambda i, j: (0, 0))
+        freq_spec = pl.BlockSpec((1, k), lambda i, c, j: (0, 0))
+        cdf_spec = pl.BlockSpec((1, k + 1), lambda i, c, j: (0, 0))
     elif freq.ndim == 2:
         if freq.shape[0] != t_len:
             raise ValueError(
                 f"per-position tables carry T={freq.shape[0]} rows but "
                 f"t_len={t_len}")
         layout = "perpos"
-        freq_in, cdf_in = freq, cdf
-        freq_spec = pl.BlockSpec((t_block, k), lambda i, j: (j, 0))
-        cdf_spec = pl.BlockSpec((t_block, k + 1), lambda i, j: (j, 0))
+        freq_in = pad_chunk_rows(freq, t_len, chunk, n_chunks, padded_chunk)
+        cdf_in = pad_chunk_rows(cdf, t_len, chunk, n_chunks, padded_chunk)
+        freq_spec = pl.BlockSpec((tb, k),
+                                 lambda i, c, j: (c * n_tb + j, 0))
+        cdf_spec = pl.BlockSpec((tb, k + 1),
+                                lambda i, c, j: (c * n_tb + j, 0))
     elif freq.ndim == 3:
         if freq.shape[0] != t_len or freq.shape[1] != lanes:
             raise ValueError(
                 f"per-lane tables must be (T, lanes, K)=({t_len}, {lanes}, "
                 f"{k}); got {freq.shape}")
         layout = "lane"
-        freq_in, cdf_in = freq, cdf
-        freq_spec = pl.BlockSpec((t_block, lane_block, k),
-                                 lambda i, j: (j, i, 0))
-        cdf_spec = pl.BlockSpec((t_block, lane_block, k + 1),
-                                lambda i, j: (j, i, 0))
+        freq_in = pad_chunk_rows(freq, t_len, chunk, n_chunks, padded_chunk)
+        cdf_in = pad_chunk_rows(cdf, t_len, chunk, n_chunks, padded_chunk)
+        freq_spec = pl.BlockSpec((tb, lane_block, k),
+                                 lambda i, c, j: (c * n_tb + j, i, 0))
+        cdf_spec = pl.BlockSpec((tb, lane_block, k + 1),
+                                lambda i, c, j: (c * n_tb + j, i, 0))
     else:
         raise ValueError(f"unsupported table rank {freq.ndim}")
 
+    has_cands = candidates is not None and candidates.shape[-1] > 0
+    extra_in, extra_specs = [], []
+    if has_cands:
+        if candidates.shape[:2] != (t_len, lanes):
+            raise ValueError(
+                f"candidate planes must be (T, lanes, topk)=({t_len}, "
+                f"{lanes}, *); got {candidates.shape}")
+        topk = candidates.shape[-1]
+        extra_in.append(pad_chunk_rows(candidates.astype(_I32), t_len,
+                                       chunk, n_chunks, padded_chunk))
+        extra_specs.append(pl.BlockSpec(
+            (tb, lane_block, topk), lambda i, c, j: (c * n_tb + j, i, 0)))
+
     ctx_w = (int(predictor.init(lane_block).shape[-1])
              if predictor is not None else 0)
-    grid = (lanes // lane_block, n_tb)
+    grid = (lanes // lane_block, n_chunks, n_tb)
 
     sym, probes = pl.pallas_call(
-        functools.partial(_decode_kernel, t_len=t_len, t_block=t_block,
-                          prob_bits=prob_bits, k=k, layout=layout,
-                          predictor=predictor, ctx_w=ctx_w),
+        functools.partial(_decode_kernel, t_len=t_len, chunk_size=chunk,
+                          t_block=tb, n_tb=n_tb, prob_bits=prob_bits, k=k,
+                          layout=layout, predictor=predictor, ctx_w=ctx_w,
+                          has_cands=has_cands),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((cap, lane_block), lambda i, j: (0, i)),
-            pl.BlockSpec((1, lane_block), lambda i, j: (0, i)),
+            pl.BlockSpec((1, cap, lane_block), lambda i, c, j: (c, 0, i)),
+            pl.BlockSpec((1, lane_block), lambda i, c, j: (c, i)),
             freq_spec,
             cdf_spec,
-        ],
+        ] + extra_specs,
         out_specs=[
-            pl.BlockSpec((t_block, lane_block), lambda i, j: (j, i)),
-            pl.BlockSpec((1, lane_block), lambda i, j: (0, i)),
+            pl.BlockSpec((tb, lane_block), lambda i, c, j: (c * n_tb + j, i)),
+            pl.BlockSpec((1, lane_block), lambda i, c, j: (c, i)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((t_len, lanes), _I32),
-            jax.ShapeDtypeStruct((1, lanes), _I32),
+            jax.ShapeDtypeStruct((total_rows, lanes), _I32),
+            jax.ShapeDtypeStruct((n_chunks, lanes), _I32),
         ],
         scratch_shapes=[
             pltpu.VMEM((1, lane_block), _U32),              # rANS states
@@ -230,5 +317,6 @@ def rans_decode_lanes(buf: jax.Array,      # (lanes, cap) uint8 forward stream
             pltpu.VMEM((lane_block, max(1, ctx_w)), _I32),  # predictor ctx
         ],
         interpret=interpret,
-    )(buf.T, start.reshape(1, lanes).astype(_I32), freq_in, cdf_in)
-    return sym.T, probes[0]
+    )(buf3.swapaxes(1, 2), start2.astype(_I32), freq_in, cdf_in, *extra_in)
+    sym = unpad_chunk_rows(sym, t_len, chunk, n_chunks, padded_chunk)
+    return sym.T, probes

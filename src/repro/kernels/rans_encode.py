@@ -61,7 +61,8 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core import constants as C
 from repro.core import update
 from repro.core.spc import TableSet
-from repro.kernels.common import onehot_gather, onehot_gather_lanes
+from repro.kernels.common import (onehot_gather, onehot_gather_lanes,
+                                  pad_chunk_rows)
 
 _U32 = jnp.uint32
 _U8 = jnp.uint8
@@ -136,20 +137,6 @@ def _encode_kernel(sym_ref, rcp_ref, rshift_ref, bias_ref, cmpl_ref,
         state_ref[0, :] = s_scr[0, :]
 
 
-def _pad_chunk_rows(a: jax.Array, t_len: int, chunk_size: int,
-                    n_chunks: int, padded_chunk: int) -> jax.Array:
-    """Re-lay rows [0, t_len) chunk-major with each chunk padded to
-    ``padded_chunk`` rows (zeros; padding rows are never read/emitting)."""
-    if padded_chunk == chunk_size and n_chunks * chunk_size == t_len:
-        return a    # aligned layout: the re-lay would be an identity copy
-    parts = []
-    for ci in range(n_chunks):
-        sl = a[ci * chunk_size:min((ci + 1) * chunk_size, t_len)]
-        pad = padded_chunk - sl.shape[0]
-        parts.append(jnp.pad(sl, ((0, pad),) + ((0, 0),) * (a.ndim - 1)))
-    return jnp.concatenate(parts, axis=0)
-
-
 @functools.partial(jax.jit,
                    static_argnames=("chunk_size", "prob_bits", "lane_block",
                                     "t_block", "interpret"))
@@ -206,7 +193,7 @@ def rans_encode_records(symbols: jax.Array,   # (lanes, T) int32
                 f"per-position tables carry T={tbl.freq.shape[0]} rows but "
                 f"t_len={t_len}")
         layout = "perpos"
-        planes_in = [_pad_chunk_rows(p, t_len, chunk, n_chunks, padded_chunk)
+        planes_in = [pad_chunk_rows(p, t_len, chunk, n_chunks, padded_chunk)
                      for p in planes]
         tbl_specs = [pl.BlockSpec(
             (tb, k), lambda i, c, j: (c * n_tb + n_tb - 1 - j, 0))] * 5
@@ -216,7 +203,7 @@ def rans_encode_records(symbols: jax.Array,   # (lanes, T) int32
                 f"per-lane tables must be (T, lanes, K)=({t_len}, {lanes}, "
                 f"{k}); got {tbl.freq.shape}")
         layout = "lane"
-        planes_in = [_pad_chunk_rows(p, t_len, chunk, n_chunks, padded_chunk)
+        planes_in = [pad_chunk_rows(p, t_len, chunk, n_chunks, padded_chunk)
                      for p in planes]
         tbl_specs = [pl.BlockSpec(
             (tb, lane_block, k),
@@ -224,7 +211,7 @@ def rans_encode_records(symbols: jax.Array,   # (lanes, T) int32
     else:
         raise ValueError(f"unsupported table rank {ndim}")
 
-    sym_in = _pad_chunk_rows(symbols.T.astype(jnp.int32), t_len, chunk,
+    sym_in = pad_chunk_rows(symbols.T.astype(jnp.int32), t_len, chunk,
                              n_chunks, padded_chunk)
     grid = (lanes // lane_block, n_chunks, n_tb)
 

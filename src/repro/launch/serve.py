@@ -35,6 +35,11 @@ def main(argv=None):
     ap.add_argument("--symbols", type=int, default=256)
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--topk", type=int, default=4)
+    ap.add_argument("--backend", choices=["coder", "kernel"],
+                    default="coder",
+                    help="rANS datapath: pure-JAX lane coder, or the Pallas "
+                         "kernels (encode + two-pass candidate-speculation "
+                         "decode; interpret mode off-TPU)")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch)
@@ -59,19 +64,20 @@ def main(argv=None):
                                     (args.lanes, args.symbols), seed=7),
                        jnp.int32)
     t0 = time.time()
-    stats = lm_compress(params, cfg, toks)
+    stats = lm_compress(params, cfg, toks, backend=args.backend)
     jax.block_until_ready(stats.enc.buf)
     t_enc = time.time() - t0
     blob = bitstream.pack(*map(np.asarray, stats.enc),
                           n_symbols=args.symbols)
     t0 = time.time()
     dec, probes = lm_decompress(params, cfg, stats.enc, args.symbols,
-                                topk=args.topk)
+                                topk=args.topk, backend=args.backend)
     jax.block_until_ready(dec)
     t_dec = time.time() - t0
     exact = bool(np.array_equal(np.asarray(dec), np.asarray(toks)))
     raw = args.lanes * args.symbols
-    print(f"lanes={args.lanes} symbols/lane={args.symbols}")
+    print(f"lanes={args.lanes} symbols/lane={args.symbols} "
+          f"backend={args.backend}")
     print(f"  bits/symbol     : {float(stats.bits_per_symbol):.3f} "
           f"(model bound {float(stats.model_xent_bits):.3f})")
     print(f"  container bytes : {len(blob)} (raw {raw})  "

@@ -143,10 +143,11 @@ def decode_chunked(chunks: ChunkedLanes, n_symbols: int, tbl: TableSet,
     """Device-parallel chunked decode over either decode backend.
 
     ``backend="coder"`` runs the pure-JAX lane decoder (vmap per local
-    chunk slab); ``backend="kernel"`` runs the Pallas decode kernel per
-    chunk (interpret mode on CPU).  Both consume ``core.search``, so the
-    returned (symbols (lanes, T), avg_probes) are bit-identical across
-    backends and mesh shapes (chunks carry no cross-device state).
+    chunk slab); ``backend="kernel"`` runs the Pallas decode kernel — one
+    ``pallas_call`` per device covering its whole local slab (the kernel's
+    chunk grid axis, interpret mode on CPU).  Both consume ``core.search``,
+    so the returned (symbols (lanes, T), avg_probes) are bit-identical
+    across backends and mesh shapes (chunks carry no cross-device state).
     ``predictor`` drives prediction-guided search inside every chunk.
     """
     if backend == "kernel":
@@ -180,28 +181,39 @@ def decode_chunked(chunks: ChunkedLanes, n_symbols: int, tbl: TableSet,
         return coder.decode(enc, n, tb, prob_bits,
                             predictor=predictor, use_lut=use_lut)
 
-    def _slab_decode(enc_loc, tbl_of_chunk):
+    def _slab_decode(enc_loc, tbl_loc, chunk_major: bool):
+        """Decode the local (n_loc, lanes, cap) chunk slab.  ``tbl_loc`` is
+        chunk-major ``(n_loc, chunk_size, ...)`` when ``chunk_major`` else a
+        replicated static/shared TableSet."""
         if backend == "kernel":
-            # one pallas_call per local chunk (static count): the kernel
-            # owns its own lane-block grid, so the chunk axis stays a loop
-            outs = [_decode_one(
-                EncodedLanes(enc_loc.buf[c], enc_loc.start[c],
-                             enc_loc.length[c]), tbl_of_chunk(c))
-                for c in range(n_loc)]
-            return (jnp.stack([o[0] for o in outs], 0),
-                    jnp.stack([o[1] for o in outs], 0))
+            # one pallas_call for the whole local slab: the kernel's chunk
+            # grid axis decodes every local chunk in a single launch
+            lanes = enc_loc.buf.shape[1]
+            tbl_flat = (jax.tree.map(
+                lambda a: a.reshape((n_loc * chunk_size,) + a.shape[2:]),
+                tbl_loc) if chunk_major else tbl_loc)
+            sym, _, cpro = kops.rans_decode_chunked(
+                enc_loc, n_loc * chunk_size, tbl_flat, chunk_size,
+                prob_bits=prob_bits, predictor=predictor,
+                interpret=interpret, chunk_probes=True)
+            sym3 = sym.reshape(lanes, n_loc, chunk_size).swapaxes(0, 1)
+            per_chunk = (jnp.sum(cpro.astype(jnp.float32), axis=1)
+                         / (lanes * chunk_size))
+            return sym3, per_chunk
         # coder path: batch the local chunk slab through one vmapped scan
+        if chunk_major:
+            return jax.vmap(
+                lambda e, tb: _decode_one(EncodedLanes(*e), TableSet(*tb)))(
+                enc_loc, tbl_loc)
         return jax.vmap(
-            lambda e, c: _decode_one(EncodedLanes(*e), tbl_of_chunk(c)))(
-            enc_loc, jnp.arange(n_loc))
+            lambda e: _decode_one(EncodedLanes(*e), tbl_loc))(enc_loc)
 
     if per_position:
         tbl_full = coder.chunk_tables(tbl, n_full, chunk_size)
 
         def body(enc_loc, tbl_loc):
-            return _slab_decode(ChunkedLanes(*enc_loc),
-                                lambda c: jax.tree.map(lambda a: a[c],
-                                                       TableSet(*tbl_loc)))
+            return _slab_decode(ChunkedLanes(*enc_loc), TableSet(*tbl_loc),
+                                True)
 
         sym_full, probes_full = shard_map(
             body, mesh=mesh,
@@ -210,8 +222,8 @@ def decode_chunked(chunks: ChunkedLanes, n_symbols: int, tbl: TableSet,
             out_specs=out_specs, check_rep=False)(sub, tbl_full)
     else:
         def body(enc_loc, tbl_rep):
-            return _slab_decode(ChunkedLanes(*enc_loc),
-                                lambda c: TableSet(*tbl_rep))
+            return _slab_decode(ChunkedLanes(*enc_loc), TableSet(*tbl_rep),
+                                False)
 
         sym_full, probes_full = shard_map(
             body, mesh=mesh,

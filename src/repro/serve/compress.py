@@ -12,6 +12,11 @@ stream is the payload:
                 rANS decoder (prediction-guided: the model's own top-k are
                 the trial symbols, verified with O(1) CDF probes and a safe
                 binary-search fallback) and is fed back into the model.
+                ``backend="kernel"`` adds a second pass: the scan collects
+                the per-step tables and top-k candidate planes, then the
+                Pallas decode kernel replays the whole bitstream in ONE
+                launch with in-kernel candidate speculation (chunked
+                streams ride the kernel's chunk grid axis).
 
 Bit-exactness: both directions run the *identical* decode_step function on
 the identical cache evolution, so the distributions (and therefore tables
@@ -102,11 +107,18 @@ def lm_compress(params, cfg: ModelConfig, tokens: jax.Array,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("cfg", "n_symbols", "prob_bits", "topk"))
-def lm_decompress(params, cfg: ModelConfig, enc: coder.EncodedLanes,
-                  n_symbols: int, prob_bits: int = C.PROB_BITS,
-                  topk: int = 4):
-    """Bitstream -> tokens, decoding with model-top-k speculation (T3)."""
+                   static_argnames=("cfg", "n_symbols", "prob_bits", "topk",
+                                    "collect_planes"))
+def _lm_decompress_scan(params, cfg: ModelConfig, enc: coder.EncodedLanes,
+                        n_symbols: int, prob_bits: int, topk: int,
+                        collect_planes: bool = False):
+    """Sequential model-driven decode scan (the pure-JAX reference pass).
+
+    With ``collect_planes`` the scan also stacks each step's quantized
+    TableSet and model-top-k candidate row — the ``(T, lanes, K)`` tables
+    and ``(T, lanes, topk)`` candidate planes the Pallas decode kernel
+    consumes (the serve two-pass kernel decode, see :func:`lm_decompress`).
+    """
     lanes = enc.buf.shape[0]
     cache = init_cache(cfg, lanes, n_symbols)
     dec0 = coder.decoder_init(enc)
@@ -119,11 +131,52 @@ def lm_decompress(params, cfg: ModelConfig, enc: coder.EncodedLanes,
         cands = model_topk_candidates(lg[:, :cfg.vocab_size], topk)
         dec, sym, probes = coder.decode_get(dec, enc.buf, tbl, prob_bits,
                                             candidates=cands)
-        return (cache, dec, sym[:, None].astype(jnp.int32)), (sym, probes)
+        ys = (sym, probes) + ((tbl, cands) if collect_planes else ())
+        return (cache, dec, sym[:, None].astype(jnp.int32)), ys
 
-    (_, _, _), (symbols, probes) = jax.lax.scan(
+    (_, _, _), ys = jax.lax.scan(
         body, (cache, dec0, tok0), jnp.arange(n_symbols))
-    return symbols.T, jnp.mean(probes.astype(jnp.float32))
+    return ys     # (symbols (T, lanes), probes (T, lanes)[, tables, cands])
+
+
+def lm_decompress(params, cfg: ModelConfig, enc: coder.EncodedLanes,
+                  n_symbols: int, prob_bits: int = C.PROB_BITS,
+                  topk: int = 4, backend: str = "coder",
+                  interpret: bool = True, lane_probes: bool = False):
+    """Bitstream -> tokens, decoding with model-top-k speculation (T3).
+
+    ``backend="coder"`` pops every symbol inside the sequential model scan
+    (the pure-JAX path).  ``backend="kernel"`` is the two-pass serve decode:
+    pass 1 runs the same scan (it must — the model is autoregressive over
+    its own decoded tokens) but *collects* the per-step ``(T, lanes, K)``
+    tables and ``(T, lanes, topk)`` model-top-k candidate planes; pass 2
+    re-decodes the untouched bitstream in ONE Pallas launch with in-kernel
+    candidate speculation.  Both passes consume ``core.search``, so pass 2's
+    symbols and per-lane probe counters are integer-identical to pass 1's —
+    the returned values come from the kernel, making the round-trip against
+    ``lm_compress(backend="kernel")`` a true kernel-datapath round-trip.
+
+    Returns ``(tokens (lanes, T), avg_probes[, per-lane probes])``.
+    """
+    if backend == "coder":
+        symbols, probes = _lm_decompress_scan(params, cfg, enc, n_symbols,
+                                              prob_bits, topk)
+        out = (symbols.T, jnp.mean(probes.astype(jnp.float32)))
+        if lane_probes:
+            out = out + (jnp.sum(probes, axis=0),)
+        return out
+    if backend != "kernel":
+        raise ValueError(f"unknown decode backend {backend!r}")
+    from repro.kernels.ops import rans_decode
+    _, _, tables, cands = _lm_decompress_scan(params, cfg, enc, n_symbols,
+                                              prob_bits, topk,
+                                              collect_planes=True)
+    sym, avg, per_lane = rans_decode(enc, n_symbols, tables,
+                                     prob_bits=prob_bits, candidates=cands,
+                                     interpret=interpret, lane_probes=True)
+    if lane_probes:
+        return sym, avg, per_lane
+    return sym, avg
 
 
 # ---------------------------------------------------------------------------
@@ -168,10 +221,16 @@ def lm_compress_chunked(params, cfg: ModelConfig, tokens: jax.Array,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("cfg", "n", "prob_bits", "topk"))
+                   static_argnames=("cfg", "n", "prob_bits", "topk",
+                                    "collect_planes"))
 def _lm_decompress_chunk(params, cfg: ModelConfig, enc: coder.EncodedLanes,
-                         cache, tok, t0, n: int, prob_bits: int, topk: int):
-    """Decode one chunk (positions [t0, t0+n)) with carried model cache."""
+                         cache, tok, t0, n: int, prob_bits: int, topk: int,
+                         collect_planes: bool = False):
+    """Decode one chunk (positions [t0, t0+n)) with carried model cache.
+
+    ``collect_planes`` also stacks the chunk's ``(n, lanes, K)`` TableSet
+    and ``(n, lanes, topk)`` candidate rows for the kernel's second pass.
+    """
     dec0 = coder.decoder_init(enc)
 
     def body(carry, t):
@@ -181,42 +240,81 @@ def _lm_decompress_chunk(params, cfg: ModelConfig, enc: coder.EncodedLanes,
         cands = model_topk_candidates(lg[:, :cfg.vocab_size], topk)
         dec, sym, probes = coder.decode_get(dec, enc.buf, tbl, prob_bits,
                                             candidates=cands)
-        return (cache, dec, sym[:, None].astype(jnp.int32)), (sym, probes)
+        ys = (sym, probes) + ((tbl, cands) if collect_planes else ())
+        return (cache, dec, sym[:, None].astype(jnp.int32)), ys
 
-    (cache, _, tok), (symbols, probes) = jax.lax.scan(
+    (cache, _, tok), ys = jax.lax.scan(
         body, (cache, dec0, tok), t0 + jnp.arange(n))
-    return cache, tok, symbols.T, jnp.sum(probes.astype(jnp.float32))
+    symbols, probes = ys[0], ys[1]
+    out = (cache, tok, symbols.T, jnp.sum(probes, axis=0))
+    if collect_planes:
+        out = out + (ys[2], ys[3])
+    return out
 
 
 def lm_decompress_chunked(params, cfg: ModelConfig,
                           chunks: coder.ChunkedLanes, n_symbols: int,
                           chunk_size: int, prob_bits: int = C.PROB_BITS,
-                          topk: int = 4):
+                          topk: int = 4, backend: str = "coder",
+                          interpret: bool = True,
+                          lane_probes: bool = False):
     """Chunked bitstream -> tokens (bit-exact inverse of lm_compress_chunked).
 
     The rANS decoder re-initializes per chunk (each chunk is a standalone
     stream); the model cache and fed-back token carry across chunks, so the
-    distribution sequence is float-identical to the monolithic path.  Only
-    one chunk's byte buffer is live at a time — the streaming-decode shape.
+    distribution sequence is float-identical to the monolithic path.  With
+    ``backend="coder"`` only one chunk's byte buffer is live at a time —
+    the streaming-decode shape.
+
+    ``backend="kernel"`` is the chunked two-pass serve decode: pass 1 walks
+    the chunks sequentially as above (the model must see its own decoded
+    tokens) while collecting every chunk's tables and model-top-k candidate
+    planes; pass 2 re-decodes the *entire* chunked stream in ONE Pallas
+    launch — the kernel's chunk grid axis replays every (chunk, lane) cell
+    with in-kernel state reset and candidate speculation.  Returned symbols
+    and probe counters come from the kernel and are integer-identical to
+    pass 1's (both consume ``core.search``).
+
+    Returns ``(tokens (lanes, T), avg_probes[, per-lane probes])``.
     """
+    if backend not in ("coder", "kernel"):
+        raise ValueError(f"unknown decode backend {backend!r}")
     lanes = chunks.buf.shape[1]
     n_total = coder.num_chunks(n_symbols, chunk_size)
     if chunks.buf.shape[0] != n_total:
         raise ValueError(
             f"stream has {chunks.buf.shape[0]} chunks but n_symbols="
             f"{n_symbols} at chunk_size={chunk_size} implies {n_total}")
+    collect = backend == "kernel"
     cache = init_cache(cfg, lanes, n_symbols)
     tok = jnp.full((lanes, 1), BOS, jnp.int32)
-    outs, probe_sum = [], jnp.float32(0)
+    outs, lane_sum, planes = [], jnp.zeros((lanes,), jnp.int32), []
     for c, n in enumerate(coder.chunk_lengths(n_symbols, chunk_size)):
         enc = coder.chunk_encoded(chunks, c)
-        cache, tok, sym, probes = _lm_decompress_chunk(
+        res = _lm_decompress_chunk(
             params, cfg, enc, cache, tok, jnp.int32(c * chunk_size), n=n,
-            prob_bits=prob_bits, topk=topk)
+            prob_bits=prob_bits, topk=topk, collect_planes=collect)
+        cache, tok, sym, probes = res[:4]
         outs.append(sym)
-        probe_sum = probe_sum + probes
-    return (jnp.concatenate(outs, axis=1),
-            probe_sum / (lanes * n_symbols))
+        lane_sum = lane_sum + probes
+        if collect:
+            planes.append(res[4:])
+    if collect:
+        from repro.kernels.ops import rans_decode_chunked
+        tables = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0),
+                              *[p[0] for p in planes])
+        cands = jnp.concatenate([p[1] for p in planes], axis=0)
+        sym, avg, per_lane = rans_decode_chunked(
+            chunks, n_symbols, tables, chunk_size, prob_bits=prob_bits,
+            candidates=cands, interpret=interpret, lane_probes=True)
+        if lane_probes:
+            return sym, avg, per_lane
+        return sym, avg
+    out = (jnp.concatenate(outs, axis=1),
+           jnp.sum(lane_sum.astype(jnp.float32)) / (lanes * n_symbols))
+    if lane_probes:
+        out = out + (lane_sum,)
+    return out
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,87 @@
+"""Golden-vector corpus generator (frozen container blobs).
+
+The blobs checked in next to this script freeze the *wire format*: every
+future refactor of the coder, the kernels or the container writers must
+keep producing byte-identical blobs for these seeds and keep decoding the
+stored bytes to the identical symbols (``tests/test_golden_vectors.py``
+asserts both, on every decode backend).  Regenerate only on a deliberate,
+versioned container change:
+
+    PYTHONPATH=src python tests/golden_vectors/generate.py
+
+Corpus axes: container v1 vs v2, v2 with and without per-(chunk, lane)
+CRC32 checksums, static / per-position (T, K) / per-lane (T, lanes, K)
+TableSets, aligned and ragged chunking.  Cases are deliberately tiny —
+the point is coverage of the format, not of the coder (the differential
+suites own that).
+"""
+
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+
+# name, fmt, seed, k, lanes, t, chunk_size (v2), checksums (v2), tables
+CASES = [
+    dict(name="v1_static", fmt="v1", seed=41, k=64, lanes=4, t=64,
+         tables="static"),
+    dict(name="v2_static_crc", fmt="v2", seed=42, k=64, lanes=4, t=64,
+         chunk_size=20, checksums=True, tables="static"),     # ragged tail 4
+    dict(name="v2_perpos_nocrc", fmt="v2", seed=43, k=32, lanes=4, t=48,
+         chunk_size=16, checksums=False, tables="perpos"),    # aligned
+    dict(name="v2_perlane_crc", fmt="v2", seed=44, k=16, lanes=4, t=32,
+         chunk_size=13, checksums=True, tables="perlane"),    # ragged tail 6
+]
+
+
+def blob_path(case: dict) -> str:
+    return os.path.join(HERE, case["name"] + ".ras")
+
+
+def build_case(case: dict):
+    """Deterministic (TableSet, symbols (lanes, t) np.int32) for a case."""
+    import jax.numpy as jnp
+    from repro.core import spc
+    rng = np.random.default_rng(case["seed"])
+    k, lanes, t = case["k"], case["lanes"], case["t"]
+    if case["tables"] == "static":
+        probs = rng.dirichlet(np.full(k, 0.5))
+    elif case["tables"] == "perpos":
+        probs = rng.dirichlet(np.full(k, 0.5), size=t)
+    else:  # perlane
+        probs = rng.dirichlet(np.full(k, 0.5), size=(t, lanes))
+    tbl = spc.tables_from_probs(jnp.asarray(probs.astype(np.float32)))
+    syms = rng.integers(0, k, (lanes, t)).astype(np.int32)
+    return tbl, syms
+
+
+def pack_case(case: dict) -> bytes:
+    """Encode + pack a case exactly as the test re-derives it."""
+    import jax.numpy as jnp
+    from repro.core import bitstream, coder
+    tbl, syms = build_case(case)
+    if case["fmt"] == "v1":
+        enc = coder.encode(jnp.asarray(syms), tbl)
+        return bitstream.pack(*map(np.asarray, enc), n_symbols=case["t"])
+    ch = coder.encode_chunked(jnp.asarray(syms), tbl, case["chunk_size"])
+    return bitstream.pack_chunked(*map(np.asarray, ch),
+                                  chunk_size=case["chunk_size"],
+                                  n_symbols=case["t"],
+                                  checksums=case["checksums"])
+
+
+def main():
+    import jax
+    jax.config.update("jax_platforms", "cpu")
+    for case in CASES:
+        blob = pack_case(case)
+        with open(blob_path(case), "wb") as f:
+            f.write(blob)
+        print(f"wrote {blob_path(case)} ({len(blob)} bytes)")
+
+
+if __name__ == "__main__":
+    main()

@@ -23,9 +23,17 @@ import pytest
 
 from repro.core import coder, search, spc
 from repro.core.predictors import LastValue, NeighborAverage, ZeroPredictor
+from repro.data.pipeline import candidate_planes
 from repro.kernels import ops, rans_decode, ref
 
 jax.config.update("jax_platforms", "cpu")
+
+
+def _candidate_planes(syms, k, topk, hit_rate, seed):
+    """jnp view of the shared model-top-k plane synthesizer (the benchmark
+    sweep consumes the same one, so it measures what these tests pin)."""
+    return jnp.asarray(candidate_planes(np.asarray(syms), k, topk,
+                                        hit_rate, seed), jnp.int32)
 
 PREDICTORS = [
     None,
@@ -123,6 +131,66 @@ def test_chunked_differential(perpos_case, predictor):
     _assert_identical(got, want, syms)
 
 
+@pytest.mark.parametrize("layout", ["static", "perpos", "perlane"])
+def test_candidate_plane_differential(rans_case, perpos_case, perlane_case,
+                                      layout):
+    """(T, lanes, topk) model-top-k candidate planes decode identically on
+    both backends — symbols AND per-lane probe counters — for every table
+    layout (the kernel's in-kernel speculation vs the coder's scanned
+    ``decode_get`` candidates)."""
+    if layout == "static":
+        tbl, syms = rans_case(80, k=64, lanes=8, t=64)
+        syms = jnp.asarray(syms, jnp.int32)
+    elif layout == "perpos":
+        tbl, syms = perpos_case
+    else:
+        tbl, syms = perlane_case
+    k, t = tbl.freq.shape[-1], syms.shape[1]
+    cands = _candidate_planes(syms, k, topk=4, hit_rate=0.7, seed=81)
+    enc = coder.encode(syms, tbl)
+    got = ops.rans_decode(enc, t, tbl, candidates=cands, lane_probes=True)
+    want = coder.decode(enc, t, tbl, candidates=cands, lane_probes=True)
+    _assert_identical(got, want, syms)
+
+
+def test_chunked_candidate_plane_differential(perpos_case):
+    """Candidate planes ride the chunk grid axis (ragged tail included):
+    kernel single-launch chunked decode == coder per chunk and per lane."""
+    tbl, syms = perpos_case
+    t = syms.shape[1]
+    k = tbl.freq.shape[-1]
+    cands = _candidate_planes(syms, k, topk=4, hit_rate=0.7, seed=82)
+    ch = coder.encode_chunked(syms, tbl, 13)
+    got = ops.rans_decode_chunked(ch, t, tbl, 13, candidates=cands,
+                                  lane_probes=True)
+    want = coder.decode_chunked(ch, t, tbl, 13, candidates=cands,
+                                lane_probes=True)
+    _assert_identical(got, want, syms)
+
+
+def test_chunked_decode_is_one_pallas_call(perpos_case, monkeypatch):
+    """The chunk axis is a grid dimension, not a host-side loop: a 4-chunk
+    adaptive decode must launch exactly ONE pallas_call (the decode-side
+    mirror of PR 3's encode assertion)."""
+    tbl, syms = perpos_case
+    calls = []
+    real = rans_decode.pl.pallas_call
+
+    def counting(*args, **kwargs):
+        calls.append(kwargs.get("grid"))
+        return real(*args, **kwargs)
+
+    monkeypatch.setattr(rans_decode.pl, "pallas_call", counting)
+    # fresh shapes so the jit cache cannot satisfy the call without tracing
+    sub = syms[:, :45]
+    tbl_sub = jax.tree.map(lambda a: a[:45], tbl)
+    ch = coder.encode_chunked(sub, tbl_sub, 12)  # 3 full chunks + tail of 9
+    got, _ = ops.rans_decode_chunked(ch, 45, tbl_sub, 12)
+    assert len(calls) == 1, f"expected 1 pallas_call, saw {len(calls)}"
+    assert calls[0][1] == 4                      # chunk grid axis
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(sub))
+
+
 def test_t_blocked_decode_matches_single_block(perpos_case):
     """Blocking the T axis through VMEM (t_block < T) must not change a
     single bit or probe: decoder state carries across blocks in scratch."""
@@ -174,6 +242,87 @@ def test_bracket_miss_accounting_symmetry():
     # every symbol missed the bracket: cost >= baseline (verify + search)
     base = coder.decode(enc, t, tbl, lane_probes=True)
     assert (np.asarray(got[2]) >= np.asarray(base[2])).all()
+
+
+# ---------------------------------------------------------------------------
+# Fig. 4(b) probe-count regression: speculation must keep paying off
+# ---------------------------------------------------------------------------
+
+def test_fig4b_speculation_probe_regression(rans_case):
+    """Pins the Fig. 4(b) trajectory on a seeded stream.
+
+    Baseline binary search over K=256 costs ~7 probes/symbol (paper: 7.00);
+    model-top-k speculation with a realistic 80% top-1 hit rate must land
+    in the paper's guided band (~3.15: hits pay 1 verify, misses pay the
+    bounded penalty), and the per-lane counters must be integer-identical
+    between coder and kernel on the monolithic AND the chunked
+    single-launch path.  A perturbed accounting rule — an extra or missing
+    probe anywhere — shifts the integer counters and fails this loudly.
+    """
+    k, t, topk = 256, 128, 4
+    tbl, syms = rans_case(85, k=k, lanes=8, t=t)
+    syms = jnp.asarray(syms, jnp.int32)
+    cands = _candidate_planes(syms, k, topk=topk, hit_rate=0.8, seed=86)
+    enc = coder.encode(syms, tbl)
+
+    base = coder.decode(enc, t, tbl, lane_probes=True)
+    spec = coder.decode(enc, t, tbl, candidates=cands, lane_probes=True)
+    kspec = ops.rans_decode(enc, t, tbl, candidates=cands, lane_probes=True)
+    _assert_identical(kspec, spec, syms)
+
+    base_avg, spec_avg = float(base[1]), float(spec[1])
+    # Fig. 4(b): ~7.00 baseline -> ~3.15 guided (bands, not exact floats —
+    # the integer counters above are the exact pin)
+    assert 6.0 <= base_avg <= 8.0, base_avg
+    assert 2.5 <= spec_avg <= 4.5, spec_avg
+    assert spec_avg < 0.55 * base_avg, (spec_avg, base_avg)
+
+    # same contract on the chunked single-pallas_call path (ragged tail)
+    ch = coder.encode_chunked(syms, tbl, 48)
+    cspec = coder.decode_chunked(ch, t, tbl, 48, candidates=cands,
+                                 lane_probes=True)
+    kchunk = ops.rans_decode_chunked(ch, t, tbl, 48, candidates=cands,
+                                     lane_probes=True)
+    _assert_identical(kchunk, cspec, syms)
+    cbase = coder.decode_chunked(ch, t, tbl, 48, lane_probes=True)
+    assert float(cspec[1]) < 0.55 * float(cbase[1])
+
+
+def test_fig4b_probe_count_monotone_in_hit_rate(rans_case):
+    """More accurate speculation can only help: mean probes decrease
+    monotonically with the candidate top-1 hit rate, identically on both
+    backends (the regression guard for the speculation *trend*, not just
+    one point)."""
+    k, t = 64, 64
+    tbl, syms = rans_case(87, k=k, lanes=4, t=t)
+    syms = jnp.asarray(syms, jnp.int32)
+    enc = coder.encode(syms, tbl)
+    totals = []
+    for hit_rate in (0.0, 0.5, 0.9):
+        cands = _candidate_planes(syms, k, topk=4, hit_rate=hit_rate,
+                                  seed=88)
+        got = ops.rans_decode(enc, t, tbl, candidates=cands,
+                              lane_probes=True)
+        want = coder.decode(enc, t, tbl, candidates=cands, lane_probes=True)
+        _assert_identical(got, want, syms)
+        totals.append(int(np.asarray(got[2]).sum()))
+    assert totals[0] > totals[1] > totals[2], totals
+
+
+def test_topk0_plane_equals_no_speculation(rans_case):
+    """topk=0 candidate planes are the explicit 'no speculation' sweep
+    point: identical counters to passing no plane at all, on both
+    backends."""
+    tbl, syms = rans_case(89, k=64, lanes=4, t=32)
+    syms = jnp.asarray(syms, jnp.int32)
+    enc = coder.encode(syms, tbl)
+    empty = jnp.zeros((32, 4, 0), jnp.int32)
+    base = coder.decode(enc, 32, tbl, lane_probes=True)
+    for got in (coder.decode(enc, 32, tbl, candidates=empty,
+                             lane_probes=True),
+                ops.rans_decode(enc, 32, tbl, candidates=empty,
+                                lane_probes=True)):
+        _assert_identical(got, base, syms)
 
 
 # ---------------------------------------------------------------------------

@@ -64,6 +64,54 @@ def test_lm_compress_chunked_kernel_backend_bit_exact(params):
     np.testing.assert_array_equal(np.asarray(dec), np.asarray(toks))
 
 
+def test_lm_decompress_kernel_backend_bit_exact(params):
+    """The two-pass serve kernel decode: lm_decompress(backend="kernel")
+    round-trips lm_compress(backend="kernel") bit-exactly, with per-lane
+    probe counters integer-identical to backend="coder" (both passes and
+    both backends consume core.search, so the model-top-k candidate planes
+    charge the canonical Fig. 4(b) accounting in-kernel)."""
+    from repro.serve.compress import lm_decompress
+    toks = jnp.asarray(token_stream(CFG.vocab_size, (4, 40), seed=15),
+                       jnp.int32)
+    stats = lm_compress(params, CFG, toks, backend="kernel")
+    dc, ac, lc = lm_decompress(params, CFG, stats.enc, 40,
+                               backend="coder", lane_probes=True)
+    dk, ak, lk = lm_decompress(params, CFG, stats.enc, 40,
+                               backend="kernel", lane_probes=True)
+    np.testing.assert_array_equal(np.asarray(dk), np.asarray(toks))
+    np.testing.assert_array_equal(np.asarray(dc), np.asarray(dk))
+    np.testing.assert_array_equal(np.asarray(lc), np.asarray(lk))
+    assert abs(float(ac) - float(ak)) < 1e-5
+    # speculation pays off: the model's own top-k resolves most symbols in
+    # ~1 probe, far under the log2(vocab) baseline
+    assert float(ak) < np.ceil(np.log2(CFG.vocab_size))
+    with pytest.raises(ValueError, match="backend"):
+        lm_decompress(params, CFG, stats.enc, 40, backend="nope")
+
+
+def test_lm_decompress_chunked_kernel_backend_bit_exact(params):
+    """Chunked two-pass serve decode: pass 2 replays ALL chunks in one
+    kernel launch (chunk grid axis) and must match the sequential coder
+    pass symbol-for-symbol and probe-for-probe, ragged tail included."""
+    from repro.serve.compress import (lm_compress_chunked,
+                                      lm_decompress_chunked)
+    toks = jnp.asarray(token_stream(CFG.vocab_size, (2, 40), seed=16),
+                       jnp.int32)
+    st = lm_compress_chunked(params, CFG, toks, chunk_size=16,
+                             backend="kernel")   # ragged tail of 8
+    dc, ac, lc = lm_decompress_chunked(params, CFG, st.chunks, 40, 16,
+                                       backend="coder", lane_probes=True)
+    dk, ak, lk = lm_decompress_chunked(params, CFG, st.chunks, 40, 16,
+                                       backend="kernel", lane_probes=True)
+    np.testing.assert_array_equal(np.asarray(dk), np.asarray(toks))
+    np.testing.assert_array_equal(np.asarray(dc), np.asarray(dk))
+    np.testing.assert_array_equal(np.asarray(lc), np.asarray(lk))
+    assert abs(float(ac) - float(ak)) < 1e-5
+    with pytest.raises(ValueError, match="backend"):
+        lm_decompress_chunked(params, CFG, st.chunks, 40, 16,
+                              backend="nope")
+
+
 def test_lm_compress_respects_model_bound(params):
     """Coded bits/symbol ~ model cross entropy + quantization overhead."""
     toks = jnp.asarray(token_stream(CFG.vocab_size, (8, 128), seed=5),
