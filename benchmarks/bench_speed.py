@@ -6,13 +6,20 @@ cycle-normalized with a nominal clock (the paper used 2.9 GHz for its M4
 baseline; we time both sides on *this* host so the ratio is self-normalizing).
 
 Encode-backend sweep (``--out BENCH_encode.json``): coder vs Pallas kernel
-x static / per-position / per-lane / chunked table layouts.  Every point
-asserts the two backends' streams are byte-identical before timing, so the
-JSON doubles as a cross-backend differential record.  NOTE: the kernel runs
-in interpret mode on CPU — its wall-clock here measures the *interpreter*,
-not TPU hardware; the point of the sweep is the bit-exactness seal plus a
-tracked shape/latency baseline to diff against real-TPU runs
-(``tests/test_tpu_hw.py``).
+x static / per-position / per-lane / chunked table layouts — and, on the
+kernel side, **fused in-kernel compaction vs the records reference path**
+(DESIGN.md §8).  Every point asserts all backends' streams are
+byte-identical before timing, so the JSON doubles as a cross-backend
+differential record, and reports the analytic encode-side HBM stream
+traffic of both kernel datapaths (``fused_stream_hbm_bytes`` /
+``records_stream_hbm_bytes``): the records path ships fixed-shape
+``(T, 2, lanes)`` byte+mask planes to HBM and reads them back for
+host-side compaction (~4x the record planes plus the packed buffer), the
+fused path writes each packed ``(cap, lanes)`` stream exactly once.  NOTE:
+the kernel runs in interpret mode on CPU — its wall-clock here measures
+the *interpreter*, not TPU hardware; the point of the sweep is the
+bit-exactness seal, the bytes-moved ledger, and a tracked shape/latency
+baseline to diff against real-TPU runs (``tests/test_tpu_hw.py``).
 
     PYTHONPATH=src python -m benchmarks.bench_speed [--out BENCH_encode.json]
 """
@@ -27,7 +34,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import coder, python_baseline, spc
+from repro.core import coder, constants as C, python_baseline, spc
 from repro.data.pipeline import image_rows
 
 NOMINAL_HZ = 2.9e9
@@ -99,14 +106,39 @@ def _timed_encode(fn, syms):
     return (time.perf_counter() - t0) / syms.size, out
 
 
+def _encode_stream_hbm_bytes(lanes: int, t: int, chunk: int | None,
+                             cap: int) -> dict:
+    """Analytic encode-side HBM stream traffic of the two kernel datapaths.
+
+    Records path: the kernel writes ``(rows, 2, lanes)`` byte + mask planes
+    to HBM and ``compact_records`` reads both back before writing the
+    packed buffer — every encoded byte crosses HBM ~2x plus the mask
+    overhead.  Fused path: the packed ``(n_chunks, lanes, cap)`` buffer is
+    written once (plus three small per-lane geometry planes).  Symbol and
+    table input traffic is identical on both paths and excluded.
+    """
+    chunk = t if chunk is None else min(chunk, t)
+    n_chunks = -(-t // chunk)
+    rows = n_chunks * chunk          # t_block=None: no padding rows
+    rec_planes = rows * C.MAX_RENORM_STEPS * lanes * 2   # bytes + mask, u8
+    packed = n_chunks * lanes * cap
+    return {
+        "records_stream_hbm_bytes": 2 * rec_planes + packed,
+        "fused_stream_hbm_bytes": packed + 3 * n_chunks * lanes * 4,
+    }
+
+
 def run_encode_backends(seed: int = 0) -> list[dict]:
-    """coder vs kernel x static/per-position/per-lane/chunked encode.
+    """coder vs kernel-fused vs kernel-records x static/adaptive/chunked.
 
     Shapes are deliberately modest: the kernel side runs the Pallas
     *interpreter* on CPU (see module docstring).  Each point asserts
-    byte-identity between backends before reporting wall-clock.
+    byte-identity between all backends before reporting wall-clock and the
+    bytes-moved ledger.
     """
+    from repro.core import bitstream
     from repro.kernels import ops
+    from repro.kernels.rans_encode import rans_encode_records
     rng = np.random.default_rng(seed)
 
     def static_case(k, lanes, t):
@@ -134,25 +166,49 @@ def run_encode_backends(seed: int = 0) -> list[dict]:
     ]
     points = []
     for name, (tbl, syms), chunk in cases:
+        lanes, t = map(int, syms.shape)
+        cap = coder.default_cap(t if chunk is None else min(chunk, t))
         if chunk is None:
             coder_fn = jax.jit(lambda s, tb=tbl: coder.encode(s, tb))
             kern_fn = lambda s, tb=tbl: ops.rans_encode(s, tb)  # noqa: E731
+
+            def rec_fn(s, tb=tbl, cp=cap):
+                b, m, st = rans_encode_records(s, tb)
+                return bitstream.compact_records(b[0], m[0], st[0], cp)
         else:
             coder_fn = (lambda s, tb=tbl, c=chunk:
                         coder.encode_chunked(s, tb, c))
             kern_fn = (lambda s, tb=tbl, c=chunk:
                        ops.rans_encode_chunked(s, tb, c))
+
+            def rec_fn(s, tb=tbl, c=chunk, cp=cap):
+                b, m, st = rans_encode_records(s, tb, chunk_size=c)
+                return jax.vmap(
+                    lambda bb, mm, ss:
+                    bitstream.compact_records(bb, mm, ss, cp))(b, m, st)
         c_us, c_out = _timed_encode(coder_fn, syms)
         k_us, k_out = _timed_encode(kern_fn, syms)
+        r_us, r_out = _timed_encode(rec_fn, syms)
         for a, b in zip(c_out, k_out):
             assert np.array_equal(np.asarray(a), np.asarray(b)), (
-                f"{name}: backend streams diverge")
+                f"{name}: fused kernel streams diverge from the coder")
+        for a, b in zip(r_out, k_out):
+            assert np.array_equal(np.asarray(a), np.asarray(b)), (
+                f"{name}: records-path streams diverge from the fused path")
+        moved = _encode_stream_hbm_bytes(lanes, t, chunk, cap)
         points.append({
-            "name": name, "lanes": int(syms.shape[0]),
-            "n_symbols": int(syms.shape[1]),
+            "name": name, "lanes": lanes,
+            "n_symbols": t,
             "chunk_size": chunk,
+            "cap": cap,
             "coder_us_per_symbol": c_us * 1e6,
+            # the fused (production) kernel datapath — field name kept from
+            # the PR 3 sweep so dashboards diff across PRs
             "kernel_interpret_us_per_symbol": k_us * 1e6,
+            "kernel_records_us_per_symbol": r_us * 1e6,
+            **moved,
+            "stream_hbm_bytes_saved": (moved["records_stream_hbm_bytes"]
+                                       - moved["fused_stream_hbm_bytes"]),
             "backends_byte_identical": True,
         })
     return points
@@ -175,7 +231,15 @@ def main(emit):
              "us/symbol, pure-JAX lane coder")
         emit(f"encode_backend_{p['name']}_kernel",
              p["kernel_interpret_us_per_symbol"],
-             "us/symbol, Pallas kernel (INTERPRET mode; byte-identical)")
+             "us/symbol, fused Pallas kernel (INTERPRET; byte-identical)")
+        emit(f"encode_backend_{p['name']}_kernel_records",
+             p["kernel_records_us_per_symbol"],
+             "us/symbol, records kernel + host compact_records (reference)")
+        emit(f"encode_backend_{p['name']}_hbm_saved",
+             p["stream_hbm_bytes_saved"],
+             f"stream HBM bytes saved by fused compaction "
+             f"({p['records_stream_hbm_bytes']} -> "
+             f"{p['fused_stream_hbm_bytes']})")
 
 
 if __name__ == "__main__":
@@ -187,7 +251,11 @@ if __name__ == "__main__":
         json.dump(pts, f, indent=2)
     for p in pts:
         print(f"{p['name']}: coder {p['coder_us_per_symbol']:.3f} us/sym, "
-              f"kernel(interpret) "
-              f"{p['kernel_interpret_us_per_symbol']:.3f} us/sym, "
+              f"kernel-fused {p['kernel_interpret_us_per_symbol']:.3f} "
+              f"us/sym, kernel-records "
+              f"{p['kernel_records_us_per_symbol']:.3f} us/sym, "
+              f"stream HBM {p['records_stream_hbm_bytes']} -> "
+              f"{p['fused_stream_hbm_bytes']} B "
+              f"({p['stream_hbm_bytes_saved']} saved), "
               f"byte-identical={p['backends_byte_identical']}")
     print(f"wrote {len(pts)} points -> {args.out}")

@@ -4,7 +4,8 @@
 
 Compresses a synthetic image with (a) zlib/zstd classical baselines,
 (b) static-histogram rANS, and measures the prediction-guided decoder's
-search-step reduction (Fig. 3 / Fig. 4(b)(c) story).
+search-step reduction (Fig. 3 / Fig. 4(b)(c) story).  Runs as a CI smoke
+step, so example/API drift fails the build.
 """
 
 import zlib
@@ -12,7 +13,6 @@ import zlib
 import numpy as np
 import jax
 import jax.numpy as jnp
-import zstandard
 
 from repro.core import bitstream, coder
 from repro.core.predictors import NeighborAverage
@@ -24,19 +24,24 @@ raw = img.tobytes()
 print(f"image: {img.shape}, {len(raw)} bytes")
 
 print(f"  zlib -9 : CR {len(raw) / len(zlib.compress(raw, 9)):.3f}")
-zc = zstandard.ZstdCompressor(level=19)
-print(f"  zstd-19 : CR {len(raw) / len(zc.compress(raw)):.3f}")
+try:  # zstd is an optional baseline — not part of the locked deps
+    import zstandard
+    zc = zstandard.ZstdCompressor(level=19)
+    print(f"  zstd-19 : CR {len(raw) / len(zc.compress(raw)):.3f}")
+except ImportError:
+    print("  zstd-19 : skipped (zstandard not installed)")
 
 lanes = 32
 rows = img.reshape(lanes, -1).astype(np.int64)
 enc, tbl = histogram_compress(rows, 256)
+assert not np.asarray(enc.overflow).any()   # fits default_cap by contract
 size = bitstream.compressed_size(np.asarray(enc.length))
 print(f"  rANS    : CR {len(raw) / size:.3f} (static histogram, "
       f"{lanes} lanes)")
 
 t = rows.shape[1]
-_, probes_base = coder.decode(coder.EncodedLanes(*enc), t, tbl)
-dec, probes = coder.decode(coder.EncodedLanes(*enc), t, tbl,
+_, probes_base = coder.decode(enc, t, tbl)
+dec, probes = coder.decode(enc, t, tbl,
                            predictor=NeighborAverage(window=4, delta=8))
 assert np.array_equal(np.asarray(dec), rows)
 print(f"  decoder CDF probes/symbol: {float(probes_base):.2f} -> "
@@ -45,9 +50,21 @@ print(f"  decoder CDF probes/symbol: {float(probes_base):.2f} -> "
 
 # the same decode through the Pallas kernel (interpret mode on CPU): both
 # backends consume core/search.py, so symbols and probe telemetry match
-kdec, kprobes = histogram_decompress(coder.EncodedLanes(*enc), t, tbl,
+kdec, kprobes = histogram_decompress(enc, t, tbl,
                                      predictor=NeighborAverage(4, 8),
                                      backend="kernel")
 assert np.array_equal(np.asarray(kdec), rows)
 print(f"  kernel decode: identical symbols, {float(kprobes):.2f} "
       "probes/symbol (same counters)")
+
+# fused-compaction kernel encode (DESIGN.md §8): packed streams come
+# straight off the kernel — byte-identical to the coder's, so the packed
+# container bytes match too
+from repro.kernels import ops
+
+kenc = ops.rans_encode(jnp.asarray(rows, jnp.int32), tbl)
+blob = bitstream.pack(*map(np.asarray, enc), n_symbols=t)
+kblob = bitstream.pack(*map(np.asarray, kenc), n_symbols=t)
+assert kblob == blob
+print(f"  kernel encode: fused in-kernel compaction, container "
+      f"byte-identical ({len(kblob)} bytes)")

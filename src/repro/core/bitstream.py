@@ -44,12 +44,18 @@ stream, chunk-granular.
 This module also owns the **device-side stream representations** —
 :class:`EncodedLanes` (padded (lanes, cap) uint8 + start/length) and
 :class:`ChunkedLanes` ((n_chunks, lanes, cap) + per-cell start/length) —
-and the shared stream compaction :func:`compact_records` that turns the
+and the stream compaction :func:`compact_records` that turns the
 fixed-shape renorm records of :mod:`repro.core.update` into right-aligned
 per-lane streams.  Compaction lives here (not in ``kernels``) because it is
-part of the *wire format*, consumed by ``core.coder.encode_records`` and by
-every kernel-backed encode path; ``repro.kernels.ops`` re-exports it for
-back-compat.  Pack/unpack remain numpy-only host-side.
+part of the *wire format*: it is the **pure-JAX reference** for the layout
+every encode backend must produce, consumed by
+``core.coder.encode_records`` and by the kernel *records* path
+(``kernels.rans_encode.rans_encode_records``).  The production kernel
+datapath (``kernels.rans_encode.rans_encode_lanes``) fuses this compaction
+into the kernel itself — same cursor semantics, same overflow clamp,
+differential-tested byte-identical (DESIGN.md §8) — so the kernel encode
+wrappers no longer call it host-side; ``repro.kernels.ops`` re-exports it
+for back-compat.  Pack/unpack remain numpy-only host-side.
 ``unpack`` keeps full back-compat for v1 blobs; ``unpack_chunked`` reads
 both versions (a v1 blob is presented as a single-chunk stream).
 """
@@ -127,7 +133,13 @@ def compact_records(bytes_rec: jax.Array,   # (T, 2, lanes) uint8
     out-of-bounds drop sentinel instead of being scattered (negative
     indices wrap under numpy semantics and would silently corrupt the
     buffer head).  The lane's ``overflow`` flag is set and ``length``
-    reports the bytes that were needed.
+    reports the bytes that were needed.  This contract is position-exact —
+    any ``cap`` (including ``cap < 4``, where even the state header is
+    clipped) yields the same surviving bytes and the same flags as the
+    coder's backward cursor and the fused kernel's in-kernel cursor, so a
+    stream that overflows is flagged identically on the monolithic and
+    chunked paths of all three backends (pinned by the tiny-cap parity
+    tests in ``tests/test_update_unified.py``).
     """
     t_len, r, lanes = bytes_rec.shape
     seq_b = bytes_rec[::-1].reshape(t_len * r, lanes)

@@ -100,3 +100,20 @@ def onehot_gather_rows(buf: jax.Array, row_idx: jax.Array) -> jax.Array:
     hot = iota == row_idx[None, :].astype(jnp.int32)
     vals = jnp.where(hot, buf, jnp.zeros_like(buf))
     return jnp.sum(vals.astype(jnp.int32), axis=0).astype(buf.dtype)
+
+
+def onehot_scatter_rows(buf: jax.Array, row_idx: jax.Array, vals: jax.Array,
+                        cond: jax.Array) -> jax.Array:
+    """``buf[row_idx[lane], lane] = vals[lane]`` where ``cond[lane]``,
+    via one-hot select — the write analogue of :func:`onehot_gather_rows`.
+
+    buf: (cap, lanes); row_idx/vals/cond: (lanes,) -> updated (cap, lanes).
+    Out-of-range rows (including the negative indices of an overflowed
+    backward cursor) match no iota row, so the write is *dropped* — the
+    in-kernel equivalent of the coder's out-of-bounds drop sentinel
+    (DESIGN.md §3: truncated-but-flagged, never wrapped).
+    """
+    cap, lanes = buf.shape
+    iota = jax.lax.broadcasted_iota(jnp.int32, (cap, lanes), 0)
+    hot = (iota == row_idx[None, :].astype(jnp.int32)) & cond[None, :]
+    return jnp.where(hot, jnp.broadcast_to(vals[None, :], buf.shape), buf)

@@ -1,12 +1,16 @@
 """jit'd public wrappers around the RAS Pallas kernels.
 
-``rans_encode`` / ``rans_encode_chunked`` = kernel (fixed-shape renorm
-records from the shared ``core.update`` core) + the shared
-``core.bitstream.compact_records`` compaction; results are byte-identical
-to ``repro.core.coder.encode`` / ``encode_chunked`` and therefore to the
+``rans_encode`` / ``rans_encode_chunked`` wrap the **fused-compaction**
+encode kernel (``rans_encode_lanes``): the shared ``core.update`` two-stage
+update runs in-kernel and the renorm bytes scatter straight into per-lane
+output streams (in-kernel byte cursor — DESIGN.md §8), so the wrappers
+return packed ``EncodedLanes``/``ChunkedLanes`` with **no host-side
+``compact_records`` pass** and every encoded byte crosses HBM once.
+Results are byte-identical to ``repro.core.coder.encode`` /
+``encode_chunked`` (the pure-JAX records reference) and therefore to the
 scalar golden reference, for static ``(K,)``, per-position ``(T, K)`` and
 per-lane ``(T, lanes, K)`` TableSets.  The chunked encode is a single
-``pallas_call`` (chunk grid axis with in-kernel state reset).
+``pallas_call`` (chunk grid axis with in-kernel state + cursor reset).
 ``rans_decode`` / ``rans_decode_chunked`` wrap the prediction-guided decode
 kernel (static and adaptive TableSets plus ``(T, lanes, topk)`` model-top-k
 candidate planes; symbols AND per-lane probe counters are bit-identical to
@@ -24,14 +28,19 @@ import jax.numpy as jnp
 
 from repro.core import constants as C
 # stream compaction lives in core (wire format); re-exported here for
-# back-compat with the historical kernels-side import path
+# back-compat with the historical kernels-side import path.  The kernel
+# encode wrappers below no longer call it — compaction is fused in-kernel
+# (rans_encode_lanes) — but it remains the host-side half of the records
+# *reference* path (rans_encode_records), which the fused path is
+# differential-tested and benchmarked against.
 from repro.core.bitstream import compact_records  # noqa: F401
 from repro.core.coder import (ChunkedLanes, EncodedLanes, default_cap,
                               num_chunks)
 from repro.core.predictors import NeighborAverage
 from repro.core.spc import TableSet, build_tables
 from repro.kernels.rans_decode import rans_decode_lanes
-from repro.kernels.rans_encode import rans_encode_records
+from repro.kernels.rans_encode import (rans_encode_lanes,  # noqa: F401
+                                       rans_encode_records)
 
 
 def rans_encode(symbols: jax.Array, tbl: TableSet,
@@ -42,18 +51,23 @@ def rans_encode(symbols: jax.Array, tbl: TableSet,
                 interpret: bool = True) -> EncodedLanes:
     """Kernel-backed multi-lane encode (bit-exact vs. core/golden).
 
-    Static ``(K,)`` and adaptive ``(T, K)`` / ``(T, lanes, K)`` TableSets
-    are all encoded in-kernel (adaptive layouts block the T axis through
-    VMEM — ``t_block``).  When the lane count does not tile the
-    ``lane_block`` grid the block collapses to one lane group (correctness
-    over occupancy — the serve/parallel paths run narrow lane counts).
+    Fused datapath: ONE ``pallas_call`` returning finished wire-format
+    streams — the in-kernel byte cursor scatters every renorm byte into
+    its lane's stream as it is emitted, so there is no record-plane HBM
+    round-trip and no host-side ``compact_records`` pass.  Static ``(K,)``
+    and adaptive ``(T, K)`` / ``(T, lanes, K)`` TableSets are all encoded
+    in-kernel (adaptive layouts block the T axis through VMEM —
+    ``t_block``).  When the lane count does not tile the ``lane_block``
+    grid the block collapses to one lane group (correctness over
+    occupancy — the serve/parallel paths run narrow lane counts).
     """
     lanes, t_len = symbols.shape
     cap = default_cap(t_len) if cap is None else cap
-    rec_b, rec_m, states = rans_encode_records(
-        symbols, tbl, prob_bits=prob_bits, lane_block=lane_block,
+    buf, start, length, overflow = rans_encode_lanes(
+        symbols, tbl, cap=cap, prob_bits=prob_bits, lane_block=lane_block,
         t_block=t_block, interpret=interpret)
-    return compact_records(rec_b[0], rec_m[0], states[0], cap)
+    return EncodedLanes(buf=buf[0], start=start[0], length=length[0],
+                        overflow=overflow[0])
 
 
 def rans_encode_chunked(symbols: jax.Array, tbl: TableSet, chunk_size: int,
@@ -65,24 +79,23 @@ def rans_encode_chunked(symbols: jax.Array, tbl: TableSet, chunk_size: int,
     """Kernel-backed chunked encode (bit-exact vs. coder.encode_chunked).
 
     ONE ``pallas_call`` for the whole stream: the chunk axis is a grid
-    dimension of the records kernel (in-kernel per-chunk state reset — no
-    host-side loop of kernel launches), then the shared
-    :func:`repro.core.bitstream.compact_records` compacts every chunk with
-    the chunk-aware cap (``default_cap(chunk_size)`` covers the worst case
-    of every chunk, ragged tail included, so all chunks land in one dense
-    ``(n_chunks, lanes, cap)`` buffer).  Static and per-position TableSets
-    both encode in-kernel (per-position rows ride the chunk grid axis).
+    dimension of the fused kernel (in-kernel per-chunk state + byte-cursor
+    reset — no host-side loop of kernel launches and no host-side
+    compaction), emitting every chunk's packed stream into one dense
+    ``(n_chunks, lanes, cap)`` buffer with the chunk-aware cap
+    (``default_cap(chunk_size)`` covers the worst case of every chunk,
+    ragged tail included).  Static and per-position TableSets both encode
+    in-kernel (per-position rows ride the chunk grid axis).  Overflow
+    flags are per (chunk, lane) cell, identical to the records reference.
     """
     lanes, t_len = symbols.shape
     num_chunks(t_len, chunk_size)           # validates chunk_size > 0
     cap = default_cap(min(chunk_size, t_len)) if cap is None else cap
-    rec_b, rec_m, states = rans_encode_records(
-        symbols, tbl, chunk_size=chunk_size, prob_bits=prob_bits,
+    buf, start, length, overflow = rans_encode_lanes(
+        symbols, tbl, cap=cap, chunk_size=chunk_size, prob_bits=prob_bits,
         lane_block=lane_block, t_block=t_block, interpret=interpret)
-    enc = jax.vmap(lambda b, m, s: compact_records(b, m, s, cap))(
-        rec_b, rec_m, states)
-    return ChunkedLanes(buf=enc.buf, start=enc.start, length=enc.length,
-                        overflow=enc.overflow)
+    return ChunkedLanes(buf=buf, start=start, length=length,
+                        overflow=overflow)
 
 
 def rans_decode(enc: EncodedLanes, n_symbols: int, tbl: TableSet,

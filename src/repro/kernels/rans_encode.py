@@ -1,6 +1,6 @@
 """Pallas TPU kernel: multi-lane rANS encode (paper Sec. IV-B, T2+T4).
 
-Kernel shape (hardware adaptation — see DESIGN.md §2):
+Kernel shape (hardware adaptation — see DESIGN.md §2/§8):
 
   * grid ``(lane blocks, chunks, T blocks)`` — the lane dim is last in the
     data layout and sized in multiples of 128 (= VREG width); each grid
@@ -13,14 +13,22 @@ Kernel shape (hardware adaptation — see DESIGN.md §2):
     dense math — the TPU replacement for the RTL's table SRAM port).
     Byte streams are therefore structurally identical to
     ``core.coder.encode``;
-  * the data-dependent byte FIFO of the RTL is split out of the kernel: the
-    kernel emits the core's **fixed-shape renorm records**
-    (``bytes (T, 2, lanes)`` + ``mask (T, 2, lanes)``, at most
-    MAX_RENORM_STEPS=2 bytes per symbol — DESIGN.md §4), and the shared
-    vectorized compaction (:func:`repro.core.bitstream.compact_records`)
-    builds the per-lane streams.  This keeps the kernel free of dynamic
-    addressing — pure VPU math at one symbol per "cycle" (loop step),
-    exactly the paper's two-stage pipeline;
+  * **fused in-kernel byte compaction** (:func:`rans_encode_lanes`, the
+    production datapath): a per-lane byte cursor lives in VMEM scratch and
+    every renorm record of :func:`repro.core.update.encode_step` is
+    scattered straight into the per-lane output streams (one-hot row
+    scatter — ``kernels.common.onehot_scatter_rows``).  The LIFO backward
+    block walk already emits bytes in exactly the order the wire format
+    stores them reversed, so the cursor simply decrements from ``cap`` —
+    the TPU analogue of the RAS byte FIFO.  The kernel emits packed
+    ``(cap, lanes)`` byte planes plus per-lane start/length/overflow — no
+    host-side compaction pass, so encoded bytes cross HBM once;
+  * the **records path** (:func:`rans_encode_records`) is retained as the
+    bytes-moved reference: it emits the core's fixed-shape renorm records
+    (``bytes (T, 2, lanes)`` + ``mask (T, 2, lanes)``) to HBM and leaves
+    compaction to :func:`repro.core.bitstream.compact_records` — every
+    encoded byte crosses HBM ~2x.  ``benchmarks/bench_speed.py`` diffs the
+    two datapaths; the differential tests pin them byte-identical;
   * **adaptive tables**: besides a static ``(K,)`` TableSet the kernel
     accepts per-position ``(T, K)`` and per-position-per-lane
     ``(T, lanes, K)`` tables — the neural-prior layouts of
@@ -32,29 +40,30 @@ Kernel shape (hardware adaptation — see DESIGN.md §2):
     order) and each block's inner loop walks its rows in reverse;
   * **chunk grid axis**: chunked streams (independent per-chunk flush — the
     interleaved-ANS construction) are ONE ``pallas_call``: the chunk axis
-    is a grid dimension, encoder state resets to ``RANS_L`` at each chunk's
-    first grid step and the per-chunk final state is written at its last.
-    Each chunk's rows are padded to a whole number of T blocks; padding
-    rows emit mask-0 records which the shared compaction drops.
+    is a grid dimension, encoder state (and the fused path's byte cursor)
+    resets at each chunk's first grid step and the per-chunk stream
+    geometry is written at its last.  Each chunk's rows are padded to a
+    whole number of T blocks; padding rows emit nothing.
 
 Grid: ``(lanes // lane_block, n_chunks, ceil(chunk_size / t_block))`` — the
 T axis iterates fastest (innermost), then chunks, so each (lane block,
-chunk) streams its table blocks sequentially while state lives in VMEM
-scratch.
+chunk) streams its table blocks sequentially while state — and, fused, the
+chunk's ``(cap, lane_block)`` output stream — lives in VMEM across T blocks.
 
-VMEM per grid step: symbols (t_block x Lb x 4 B) + records
-(t_block x 2 x Lb x 2 B) + five table planes (t_block x [Lb x] K x 4 B
-adaptive, K x 4 B static).  For T=4096, Lb=128, K=256 static: ~4.2 MB; for
-the (T, lanes, K) adaptive layout, t_block=8 keeps the table slab at
-~1.3 MB.
+VMEM per grid step (fused): symbols (t_block x Lb x 4 B) + stream block
+(cap x Lb x 1 B) + five table planes (t_block x [Lb x] K x 4 B adaptive,
+K x 4 B static).  For T=4096, Lb=128, K=256 static: ~5.2 MB; for the
+(T, lanes, K) adaptive layout, t_block=8 keeps the table slab at ~1.3 MB.
 """
 
 from __future__ import annotations
 
 import functools
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
@@ -62,114 +71,43 @@ from repro.core import constants as C
 from repro.core import update
 from repro.core.spc import TableSet
 from repro.kernels.common import (onehot_gather, onehot_gather_lanes,
-                                  pad_chunk_rows)
+                                  onehot_scatter_rows, pad_chunk_rows)
 
 _U32 = jnp.uint32
 _U8 = jnp.uint8
+_I32 = jnp.int32
+_M8 = np.uint32(0xFF)
 
 _PLANES = ("rcp", "rshift", "bias", "cmpl", "x_max")
 
 
-def _encode_kernel(sym_ref, rcp_ref, rshift_ref, bias_ref, cmpl_ref,
-                   xmax_ref, bytes_ref, mask_ref, state_ref, s_scr,
-                   *, t_len: int, chunk_size: int, t_block: int, n_tb: int,
-                   layout: str):
-    lanes = sym_ref.shape[1]
-    c = pl.program_id(1)      # chunk index
-    j = pl.program_id(2)      # T-block step (innermost; blocks walk backward)
+class _Plan(NamedTuple):
+    """Shared grid/layout plan of both encode entrypoints (records and
+    fused): table layout, padded chunk geometry, kernel inputs + specs."""
 
-    @pl.when(j == 0)
-    def _reset():
-        # per-chunk state reset: every chunk is a standalone stream
-        s_scr[0, :] = jnp.full((lanes,), C.RANS_L, _U32)
-
-    b = n_tb - 1 - j          # T-block index within the chunk (LIFO order)
-    # valid rows in this block: the final chunk may be ragged, and padding
-    # rows (up to a whole T block) must emit nothing
-    chunk_len = jnp.minimum(chunk_size, t_len - c * chunk_size)
-    n_t = jnp.clip(chunk_len - b * t_block, 0, t_block)
-
-    # zero the record block first: rows >= n_t are padding (mask 0), and
-    # valid rows overwrite below
-    bytes_ref[...] = jnp.zeros(bytes_ref.shape, _U8)
-    mask_ref[...] = jnp.zeros(mask_ref.shape, _U8)
-
-    if layout == "static":
-        planes_static = update.EncTables(
-            rcp_ref[0], rshift_ref[0], bias_ref[0], cmpl_ref[0], xmax_ref[0])
-
-    def body(i, s):
-        t = n_t - 1 - i       # rANS is LIFO: walk rows in reverse
-        x = sym_ref[pl.dslice(t, 1), :][0]
-        if layout == "static":
-            planes, g = planes_static, onehot_gather
-        elif layout == "perpos":
-            planes = update.EncTables(
-                rcp_ref[pl.dslice(t, 1), :][0],
-                rshift_ref[pl.dslice(t, 1), :][0],
-                bias_ref[pl.dslice(t, 1), :][0],
-                cmpl_ref[pl.dslice(t, 1), :][0],
-                xmax_ref[pl.dslice(t, 1), :][0])
-            g = onehot_gather
-        else:  # "lane": per-position per-lane rows (lanes, K)
-            planes = update.EncTables(
-                rcp_ref[pl.dslice(t, 1), :, :][0],
-                rshift_ref[pl.dslice(t, 1), :, :][0],
-                bias_ref[pl.dslice(t, 1), :, :][0],
-                cmpl_ref[pl.dslice(t, 1), :, :][0],
-                xmax_ref[pl.dslice(t, 1), :, :][0])
-            g = onehot_gather_lanes
-        e = update.gather_encode_entry(planes, x, gather=g)
-        s, recs = update.encode_step(s, e)
-        for r, (byte, cond) in enumerate(recs):
-            bytes_ref[pl.dslice(t, 1), pl.dslice(r, 1), :] = (
-                byte.reshape(1, 1, lanes))
-            mask_ref[pl.dslice(t, 1), pl.dslice(r, 1), :] = (
-                cond.astype(_U8).reshape(1, 1, lanes))
-        return s
-
-    s = jax.lax.fori_loop(0, n_t, body, s_scr[0, :])
-    s_scr[0, :] = s
-
-    @pl.when(j == n_tb - 1)
-    def _final():
-        # the last (backward) block ends at t=0: the chunk's final state
-        state_ref[0, :] = s_scr[0, :]
+    layout: str                  # "static" | "perpos" | "lane"
+    lanes: int
+    t_len: int
+    chunk: int                   # effective chunk size (t_len if monolithic)
+    n_chunks: int
+    tb: int                      # T-block rows per grid step
+    n_tb: int
+    padded_chunk: int
+    total_rows: int
+    k: int
+    grid: tuple
+    sym_in: jax.Array
+    sym_spec: pl.BlockSpec
+    planes_in: list
+    tbl_specs: list
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("chunk_size", "prob_bits", "lane_block",
-                                    "t_block", "interpret"))
-def rans_encode_records(symbols: jax.Array,   # (lanes, T) int32
-                       tbl: TableSet,
-                       chunk_size: int | None = None,
-                       prob_bits: int = C.PROB_BITS,
-                       lane_block: int = 128,
-                       t_block: int | None = None,
-                       interpret: bool = True):
-    """Run the encode kernel — ONE ``pallas_call`` for the whole stream.
-
-    Table layouts (detected from ``tbl.freq.ndim``):
-      * ``(K,)``            — static shared table (classic rANS);
-      * ``(T, K)``          — per-position shared rows (neural prior, all
-                              lanes share each step's distribution);
-      * ``(T, lanes, K)``   — per-position per-lane rows (the
-                              ``serve.compress`` TableSet layout).
-
-    ``chunk_size`` (None = monolithic): cut the stream into independent
-    chunks, each flushed separately — the chunk axis is a *grid* dimension
-    with in-kernel state reset, not a host-side loop of kernel launches.
-    ``t_block`` blocks the T axis through VMEM (None = whole chunk in one
-    block).
-
-    Returns ``(bytes, mask, states)`` with shapes
-    ``(n_chunks, padded_chunk, 2, lanes)`` / same / ``(n_chunks, lanes)``
-    where ``padded_chunk = ceil(chunk_size / t_block) * t_block``; padding
-    rows carry mask 0 and are dropped by ``compact_records``.
-    """
+def _encode_plan(symbols: jax.Array, tbl: TableSet,
+                 chunk_size: int | None, lane_block: int,
+                 t_block: int | None) -> _Plan:
+    """Validate shapes and build the chunk-padded inputs + BlockSpecs shared
+    by the records and fused kernels (the LIFO-reversed T-block maps)."""
     lanes, t_len = symbols.shape
-    if lanes % lane_block:
-        lane_block = lanes
     chunk = t_len if chunk_size is None else chunk_size
     if chunk <= 0:
         raise ValueError(f"chunk_size must be positive, got {chunk}")
@@ -212,34 +150,313 @@ def rans_encode_records(symbols: jax.Array,   # (lanes, T) int32
         raise ValueError(f"unsupported table rank {ndim}")
 
     sym_in = pad_chunk_rows(symbols.T.astype(jnp.int32), t_len, chunk,
-                             n_chunks, padded_chunk)
+                            n_chunks, padded_chunk)
+    sym_spec = pl.BlockSpec((tb, lane_block),
+                            lambda i, c, j: (c * n_tb + n_tb - 1 - j, i))
     grid = (lanes // lane_block, n_chunks, n_tb)
+    return _Plan(layout=layout, lanes=lanes, t_len=t_len, chunk=chunk,
+                 n_chunks=n_chunks, tb=tb, n_tb=n_tb,
+                 padded_chunk=padded_chunk, total_rows=total_rows, k=k,
+                 grid=grid, sym_in=sym_in, sym_spec=sym_spec,
+                 planes_in=planes_in, tbl_specs=tbl_specs)
+
+
+def _block_entry(sym_ref, rcp_ref, rshift_ref, bias_ref, cmpl_ref, xmax_ref,
+                 t, layout: str, planes_static):
+    """Gather the encode-side table entry for row ``t`` of this T block."""
+    x = sym_ref[pl.dslice(t, 1), :][0]
+    if layout == "static":
+        planes, g = planes_static, onehot_gather
+    elif layout == "perpos":
+        planes = update.EncTables(
+            rcp_ref[pl.dslice(t, 1), :][0],
+            rshift_ref[pl.dslice(t, 1), :][0],
+            bias_ref[pl.dslice(t, 1), :][0],
+            cmpl_ref[pl.dslice(t, 1), :][0],
+            xmax_ref[pl.dslice(t, 1), :][0])
+        g = onehot_gather
+    else:  # "lane": per-position per-lane rows (lanes, K)
+        planes = update.EncTables(
+            rcp_ref[pl.dslice(t, 1), :, :][0],
+            rshift_ref[pl.dslice(t, 1), :, :][0],
+            bias_ref[pl.dslice(t, 1), :, :][0],
+            cmpl_ref[pl.dslice(t, 1), :, :][0],
+            xmax_ref[pl.dslice(t, 1), :, :][0])
+        g = onehot_gather_lanes
+    return x, planes, g
+
+
+def _encode_kernel(sym_ref, rcp_ref, rshift_ref, bias_ref, cmpl_ref,
+                   xmax_ref, bytes_ref, mask_ref, state_ref, s_scr,
+                   *, t_len: int, chunk_size: int, t_block: int, n_tb: int,
+                   layout: str):
+    """Records kernel: fixed-shape renorm record planes out to HBM
+    (compaction deferred to ``core.bitstream.compact_records``)."""
+    lanes = sym_ref.shape[1]
+    c = pl.program_id(1)      # chunk index
+    j = pl.program_id(2)      # T-block step (innermost; blocks walk backward)
+
+    @pl.when(j == 0)
+    def _reset():
+        # per-chunk state reset: every chunk is a standalone stream
+        s_scr[0, :] = jnp.full((lanes,), C.RANS_L, _U32)
+
+    b = n_tb - 1 - j          # T-block index within the chunk (LIFO order)
+    # valid rows in this block: the final chunk may be ragged, and padding
+    # rows (up to a whole T block) must emit nothing
+    chunk_len = jnp.minimum(chunk_size, t_len - c * chunk_size)
+    n_t = jnp.clip(chunk_len - b * t_block, 0, t_block)
+
+    # zero the record block first: rows >= n_t are padding (mask 0), and
+    # valid rows overwrite below
+    bytes_ref[...] = jnp.zeros(bytes_ref.shape, _U8)
+    mask_ref[...] = jnp.zeros(mask_ref.shape, _U8)
+
+    if layout == "static":
+        planes_static = update.EncTables(
+            rcp_ref[0], rshift_ref[0], bias_ref[0], cmpl_ref[0], xmax_ref[0])
+    else:
+        planes_static = None
+
+    def body(i, s):
+        t = n_t - 1 - i       # rANS is LIFO: walk rows in reverse
+        x, planes, g = _block_entry(sym_ref, rcp_ref, rshift_ref, bias_ref,
+                                    cmpl_ref, xmax_ref, t, layout,
+                                    planes_static)
+        e = update.gather_encode_entry(planes, x, gather=g)
+        s, recs = update.encode_step(s, e)
+        for r, (byte, cond) in enumerate(recs):
+            bytes_ref[pl.dslice(t, 1), pl.dslice(r, 1), :] = (
+                byte.reshape(1, 1, lanes))
+            mask_ref[pl.dslice(t, 1), pl.dslice(r, 1), :] = (
+                cond.astype(_U8).reshape(1, 1, lanes))
+        return s
+
+    s = jax.lax.fori_loop(0, n_t, body, s_scr[0, :])
+    s_scr[0, :] = s
+
+    @pl.when(j == n_tb - 1)
+    def _final():
+        # the last (backward) block ends at t=0: the chunk's final state
+        state_ref[0, :] = s_scr[0, :]
+
+
+def _encode_fused_kernel(sym_ref, rcp_ref, rshift_ref, bias_ref, cmpl_ref,
+                         xmax_ref, buf_ref, start_ref, len_ref, ovf_ref,
+                         s_scr, ptr_scr,
+                         *, t_len: int, chunk_size: int, t_block: int,
+                         n_tb: int, layout: str, cap: int):
+    """Fused kernel: renorm bytes scatter straight into the per-lane output
+    streams (DESIGN.md §8) — no record planes, no host-side compaction.
+
+    The per-lane byte cursor ``ptr`` starts at ``cap`` and decrements per
+    emitted byte; each write lands at ``ptr - 1`` via a one-hot row scatter
+    into the chunk's ``(cap, lanes)`` stream block, which stays resident in
+    VMEM across the chunk's T blocks (the output index map ignores the
+    T-block grid axis).  The LIFO block walk emits bytes in exactly the
+    order the wire format stores them reversed, so cursor semantics are
+    identical to ``coder._emit_backward``: an overflowed cursor goes
+    negative, its writes drop (never wrap), and ``cap - ptr`` still reports
+    the true byte need.  At the chunk's last grid step the 4-byte
+    big-endian state header is flushed (low byte first — backward writes
+    make it big-endian forward) and start/length/overflow are published.
+    """
+    lanes = sym_ref.shape[1]
+    c = pl.program_id(1)      # chunk index
+    j = pl.program_id(2)      # T-block step (innermost; blocks walk backward)
+
+    @pl.when(j == 0)
+    def _reset():
+        # per-chunk reset: fresh state, cursor at the buffer tail, zeroed
+        # stream block (bytes outside the final span stay 0 on the wire)
+        s_scr[0, :] = jnp.full((lanes,), C.RANS_L, _U32)
+        ptr_scr[0, :] = jnp.full((lanes,), cap, _I32)
+        buf_ref[...] = jnp.zeros(buf_ref.shape, _U8)
+
+    b = n_tb - 1 - j          # T-block index within the chunk (LIFO order)
+    chunk_len = jnp.minimum(chunk_size, t_len - c * chunk_size)
+    n_t = jnp.clip(chunk_len - b * t_block, 0, t_block)
+
+    if layout == "static":
+        planes_static = update.EncTables(
+            rcp_ref[0], rshift_ref[0], bias_ref[0], cmpl_ref[0], xmax_ref[0])
+    else:
+        planes_static = None
+
+    def body(i, carry):
+        s, ptr, buf = carry
+        t = n_t - 1 - i       # rANS is LIFO: walk rows in reverse
+        x, planes, g = _block_entry(sym_ref, rcp_ref, rshift_ref, bias_ref,
+                                    cmpl_ref, xmax_ref, t, layout,
+                                    planes_static)
+        e = update.gather_encode_entry(planes, x, gather=g)
+        s, recs = update.encode_step(s, e)
+        for byte, cond in recs:
+            buf = onehot_scatter_rows(buf, ptr - 1, byte, cond)
+            ptr = ptr - cond.astype(_I32)
+        return s, ptr, buf
+
+    s, ptr, buf = jax.lax.fori_loop(
+        0, n_t, body, (s_scr[0, :], ptr_scr[0, :], buf_ref[0]))
+    buf_ref[0] = buf
+    s_scr[0, :] = s
+    ptr_scr[0, :] = ptr
+
+    @pl.when(j == n_tb - 1)
+    def _flush():
+        # chunk's last (backward) block ends at t=0: flush the 4-byte
+        # big-endian state header (low byte first — backward writes make it
+        # big-endian forward) and publish the stream geometry.  A negative
+        # cursor means the stream outgrew `cap` — its writes dropped in the
+        # scatter, so the stream is truncated-but-flagged, never wrapped.
+        s = s_scr[0, :]
+        ptr = ptr_scr[0, :]
+        buf = buf_ref[0]
+        emit = jnp.ones((lanes,), jnp.bool_)
+        for shift in (0, 8, 16, 24):
+            byte = ((s >> shift) & _M8).astype(_U8)
+            buf = onehot_scatter_rows(buf, ptr - 1, byte, emit)
+            ptr = ptr - 1
+        buf_ref[0] = buf
+        ptr_scr[0, :] = ptr
+        start_ref[0, :] = jnp.maximum(ptr, 0)
+        len_ref[0, :] = jnp.full((lanes,), cap, _I32) - ptr
+        ovf_ref[0, :] = (ptr < 0).astype(_I32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("chunk_size", "prob_bits", "lane_block",
+                                    "t_block", "interpret"))
+def rans_encode_records(symbols: jax.Array,   # (lanes, T) int32
+                       tbl: TableSet,
+                       chunk_size: int | None = None,
+                       prob_bits: int = C.PROB_BITS,
+                       lane_block: int = 128,
+                       t_block: int | None = None,
+                       interpret: bool = True):
+    """Records-path encode — the bytes-moved *reference* datapath.
+
+    ONE ``pallas_call`` emitting fixed-shape renorm record planes
+    (``bytes``/``mask`` of shape ``(n_chunks, padded_chunk, 2, lanes)``)
+    plus per-chunk final states; the caller compacts them host-side with
+    :func:`repro.core.bitstream.compact_records`.  Every encoded byte
+    crosses HBM ~2x (records out, compaction in) — the production path is
+    :func:`rans_encode_lanes`, which fuses compaction into the kernel.
+    Kept for the bytes-moved benchmark and as a second in-kernel
+    implementation the fused path is differential-tested against.
+
+    Table layouts (detected from ``tbl.freq.ndim``):
+      * ``(K,)``            — static shared table (classic rANS);
+      * ``(T, K)``          — per-position shared rows (neural prior, all
+                              lanes share each step's distribution);
+      * ``(T, lanes, K)``   — per-position per-lane rows (the
+                              ``serve.compress`` TableSet layout).
+
+    ``chunk_size`` (None = monolithic): cut the stream into independent
+    chunks, each flushed separately — the chunk axis is a *grid* dimension
+    with in-kernel state reset, not a host-side loop of kernel launches.
+    ``t_block`` blocks the T axis through VMEM (None = whole chunk in one
+    block).
+
+    Returns ``(bytes, mask, states)`` with shapes
+    ``(n_chunks, padded_chunk, 2, lanes)`` / same / ``(n_chunks, lanes)``
+    where ``padded_chunk = ceil(chunk_size / t_block) * t_block``; padding
+    rows carry mask 0 and are dropped by ``compact_records``.
+    """
+    lanes, _ = symbols.shape
+    if lanes % lane_block:
+        lane_block = lanes
+    p = _encode_plan(symbols, tbl, chunk_size, lane_block, t_block)
 
     rec_b, rec_m, states = pl.pallas_call(
-        functools.partial(_encode_kernel, t_len=t_len, chunk_size=chunk,
-                          t_block=tb, n_tb=n_tb, layout=layout),
-        grid=grid,
-        in_specs=[pl.BlockSpec((tb, lane_block),
-                               lambda i, c, j: (c * n_tb + n_tb - 1 - j, i))]
-        + tbl_specs,
+        functools.partial(_encode_kernel, t_len=p.t_len, chunk_size=p.chunk,
+                          t_block=p.tb, n_tb=p.n_tb, layout=p.layout),
+        grid=p.grid,
+        in_specs=[p.sym_spec] + p.tbl_specs,
         out_specs=[
-            pl.BlockSpec((tb, C.MAX_RENORM_STEPS, lane_block),
-                         lambda i, c, j: (c * n_tb + n_tb - 1 - j, 0, i)),
-            pl.BlockSpec((tb, C.MAX_RENORM_STEPS, lane_block),
-                         lambda i, c, j: (c * n_tb + n_tb - 1 - j, 0, i)),
+            pl.BlockSpec((p.tb, C.MAX_RENORM_STEPS, lane_block),
+                         lambda i, c, j: (c * p.n_tb + p.n_tb - 1 - j, 0, i)),
+            pl.BlockSpec((p.tb, C.MAX_RENORM_STEPS, lane_block),
+                         lambda i, c, j: (c * p.n_tb + p.n_tb - 1 - j, 0, i)),
             pl.BlockSpec((1, lane_block), lambda i, c, j: (c, i)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((total_rows, C.MAX_RENORM_STEPS, lanes),
+            jax.ShapeDtypeStruct((p.total_rows, C.MAX_RENORM_STEPS, lanes),
                                  _U8),
-            jax.ShapeDtypeStruct((total_rows, C.MAX_RENORM_STEPS, lanes),
+            jax.ShapeDtypeStruct((p.total_rows, C.MAX_RENORM_STEPS, lanes),
                                  _U8),
-            jax.ShapeDtypeStruct((n_chunks, lanes), _U32),
+            jax.ShapeDtypeStruct((p.n_chunks, lanes), _U32),
         ],
         scratch_shapes=[
             pltpu.VMEM((1, lane_block), _U32),   # encoder states across T
         ],
         interpret=interpret,
-    )(sym_in, *planes_in)
-    shape = (n_chunks, padded_chunk, C.MAX_RENORM_STEPS, lanes)
+    )(p.sym_in, *p.planes_in)
+    shape = (p.n_chunks, p.padded_chunk, C.MAX_RENORM_STEPS, lanes)
     return rec_b.reshape(shape), rec_m.reshape(shape), states
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cap", "chunk_size", "prob_bits",
+                                    "lane_block", "t_block", "interpret"))
+def rans_encode_lanes(symbols: jax.Array,   # (lanes, T) int32
+                      tbl: TableSet,
+                      cap: int,
+                      chunk_size: int | None = None,
+                      prob_bits: int = C.PROB_BITS,
+                      lane_block: int = 128,
+                      t_block: int | None = None,
+                      interpret: bool = True):
+    """Fused-compaction encode — ONE ``pallas_call``, packed streams out.
+
+    The production encode datapath (DESIGN.md §8): renorm bytes scatter
+    directly into per-lane output streams inside the kernel (per-lane byte
+    cursor in VMEM scratch), so the kernel emits finished wire-format
+    streams — byte-identical to ``coder.encode[_chunked]`` and to the
+    records path + ``compact_records``, with no host-side compaction pass.
+
+    Table layouts and ``chunk_size``/``t_block`` semantics are those of
+    :func:`rans_encode_records`.  ``cap`` is the per-(chunk, lane) byte
+    budget (static: it sizes the output planes); streams that outgrow it
+    are truncated-but-flagged exactly like every other encode path.
+
+    Returns ``(buf, start, length, overflow)`` with shapes
+    ``(n_chunks, lanes, cap)`` uint8 / ``(n_chunks, lanes)`` int32 x2 /
+    ``(n_chunks, lanes)`` bool — ``ChunkedLanes``-layout planes; a
+    monolithic call (``chunk_size=None``) yields ``n_chunks == 1`` and the
+    caller drops the leading axis for ``EncodedLanes``.
+    """
+    lanes, _ = symbols.shape
+    if lanes % lane_block:
+        lane_block = lanes
+    if cap <= 0:
+        raise ValueError(f"cap must be positive, got {cap}")
+    p = _encode_plan(symbols, tbl, chunk_size, lane_block, t_block)
+
+    buf, start, length, ovf = pl.pallas_call(
+        functools.partial(_encode_fused_kernel, t_len=p.t_len,
+                          chunk_size=p.chunk, t_block=p.tb, n_tb=p.n_tb,
+                          layout=p.layout, cap=cap),
+        grid=p.grid,
+        in_specs=[p.sym_spec] + p.tbl_specs,
+        out_specs=[
+            pl.BlockSpec((1, cap, lane_block), lambda i, c, j: (c, 0, i)),
+            pl.BlockSpec((1, lane_block), lambda i, c, j: (c, i)),
+            pl.BlockSpec((1, lane_block), lambda i, c, j: (c, i)),
+            pl.BlockSpec((1, lane_block), lambda i, c, j: (c, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((p.n_chunks, cap, lanes), _U8),
+            jax.ShapeDtypeStruct((p.n_chunks, lanes), _I32),
+            jax.ShapeDtypeStruct((p.n_chunks, lanes), _I32),
+            jax.ShapeDtypeStruct((p.n_chunks, lanes), _I32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, lane_block), _U32),   # encoder states across T
+            pltpu.VMEM((1, lane_block), _I32),   # byte cursors across T
+        ],
+        interpret=interpret,
+    )(p.sym_in, *p.planes_in)
+    # (n_chunks, cap, lanes) -> the ChunkedLanes (n_chunks, lanes, cap)
+    # device form (the mirror of the decode kernel's input transpose)
+    return buf.swapaxes(1, 2), start, length, ovf.astype(jnp.bool_)

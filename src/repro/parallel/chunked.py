@@ -54,13 +54,14 @@ def encode_chunked(symbols: jax.Array, tbl: TableSet, chunk_size: int,
     Full chunks are sharded over the mesh's ``chunks`` axis; per-position
     tables (leading T dim) are split chunk-major and ride on the same axis.
     ``backend="coder"`` runs the pure-JAX lane encoder (vmap over the local
-    chunk slab); ``backend="kernel"`` runs the Pallas encode kernel — one
-    ``pallas_call`` per device covering its whole local slab (the kernel's
-    chunk grid axis, interpret mode on CPU).  Both consume
-    ``core.update``/``core.bitstream.compact_records``, so the produced
-    streams are byte-identical across backends and mesh shapes.  Falls back
-    to the single-device path whenever the mesh cannot evenly take the
-    chunk axis.
+    chunk slab); ``backend="kernel"`` runs the fused-compaction Pallas
+    encode kernel — one ``pallas_call`` per device covering its whole local
+    slab (the kernel's chunk grid axis, interpret mode on CPU) and emitting
+    packed streams directly (no host-side ``compact_records`` pass).  Both
+    consume ``core.update``, so the produced streams — and the per-cell
+    overflow flags — are byte-identical across backends and mesh shapes.
+    Falls back to the single-device path whenever the mesh cannot evenly
+    take the chunk axis.
     """
     if backend == "kernel":
         from repro.kernels import ops as kops
@@ -87,7 +88,9 @@ def encode_chunked(symbols: jax.Array, tbl: TableSet, chunk_size: int,
         if backend == "kernel":
             # one pallas_call for the whole local slab: stitch the local
             # chunks back into a (lanes, n_loc * chunk_size) stream and let
-            # the kernel's chunk grid axis re-cut it
+            # the fused kernel's chunk grid axis re-cut it — packed streams
+            # (and per-cell overflow flags) come straight off the kernel,
+            # no host-side compact_records pass
             n_loc = sym_loc.shape[0]
             flat = sym_loc.swapaxes(0, 1).reshape(lanes, n_loc * chunk_size)
             tbl_flat = (jax.tree.map(
@@ -139,6 +142,7 @@ def decode_chunked(chunks: ChunkedLanes, n_symbols: int, tbl: TableSet,
                    chunk_size: int, mesh: Mesh | None = None,
                    prob_bits: int = C.PROB_BITS, use_lut: bool = False,
                    predictor=None, backend: str = "coder",
+                   candidates: jax.Array | None = None,
                    interpret: bool = True):
     """Device-parallel chunked decode over either decode backend.
 
@@ -149,6 +153,12 @@ def decode_chunked(chunks: ChunkedLanes, n_symbols: int, tbl: TableSet,
     so the returned (symbols (lanes, T), avg_probes) are bit-identical
     across backends and mesh shapes (chunks carry no cross-device state).
     ``predictor`` drives prediction-guided search inside every chunk.
+    ``candidates`` is an optional ``(T, lanes, topk)`` model-top-k plane
+    (the serve pipeline's trial symbols): full-size chunks' rows are cut
+    chunk-major and sharded with the chunk slab on the same mesh axis, the
+    ragged tail's rows ride the tail decode — probe accounting is
+    identical to ``coder.decode_chunked(candidates=...)`` on every backend
+    and mesh shape (topk == 0 disables speculation).
     """
     if backend == "kernel":
         from repro.kernels import ops as kops
@@ -160,76 +170,117 @@ def decode_chunked(chunks: ChunkedLanes, n_symbols: int, tbl: TableSet,
             f"stream has {chunks.buf.shape[0]} chunks but n_symbols="
             f"{n_symbols} at chunk_size={chunk_size} implies {n_total}")
     n_full, tail_len = divmod(n_symbols, chunk_size)
+    if candidates is not None and candidates.shape[-1] == 0:
+        candidates = None
+    if candidates is not None:
+        lanes = chunks.buf.shape[1]
+        if candidates.shape[:2] != (n_symbols, lanes):
+            raise ValueError(
+                f"candidate planes must be (T, lanes, topk)=({n_symbols}, "
+                f"{lanes}, *); got {candidates.shape}")
+        candidates = candidates.astype(jnp.int32)
     if not _usable(mesh, n_full):
         if backend == "kernel":
             return kops.rans_decode_chunked(
                 chunks, n_symbols, tbl, chunk_size, prob_bits=prob_bits,
-                predictor=predictor, interpret=interpret)
+                predictor=predictor, candidates=candidates,
+                interpret=interpret)
         return coder.decode_chunked(chunks, n_symbols, tbl, chunk_size,
                                     prob_bits=prob_bits, use_lut=use_lut,
-                                    predictor=predictor)
+                                    predictor=predictor,
+                                    candidates=candidates)
 
     per_position = coder.is_per_position(tbl, n_symbols)
     sub = jax.tree.map(lambda a: a[:n_full], chunks)
     n_loc = n_full // mesh.shape["chunks"]
     out_specs = (P("chunks"), P("chunks"))
 
-    def _decode_one(enc, tb, n=chunk_size):
+    def _decode_one(enc, tb, n=chunk_size, cand=None):
         if backend == "kernel":
             return kops.rans_decode(enc, n, tb, prob_bits=prob_bits,
-                                    predictor=predictor, interpret=interpret)
+                                    predictor=predictor, candidates=cand,
+                                    interpret=interpret)
         return coder.decode(enc, n, tb, prob_bits,
-                            predictor=predictor, use_lut=use_lut)
+                            predictor=predictor, use_lut=use_lut,
+                            candidates=cand)
 
-    def _slab_decode(enc_loc, tbl_loc, chunk_major: bool):
+    def _slab_decode(enc_loc, tbl_loc, chunk_major: bool, cand_loc=None):
         """Decode the local (n_loc, lanes, cap) chunk slab.  ``tbl_loc`` is
         chunk-major ``(n_loc, chunk_size, ...)`` when ``chunk_major`` else a
-        replicated static/shared TableSet."""
+        replicated static/shared TableSet; ``cand_loc`` is the local
+        chunk-major ``(n_loc, chunk_size, lanes, topk)`` candidate slab."""
         if backend == "kernel":
             # one pallas_call for the whole local slab: the kernel's chunk
-            # grid axis decodes every local chunk in a single launch
+            # grid axis decodes every local chunk in a single launch (the
+            # candidate rows ride the chunk grid axis with the tables)
             lanes = enc_loc.buf.shape[1]
             tbl_flat = (jax.tree.map(
                 lambda a: a.reshape((n_loc * chunk_size,) + a.shape[2:]),
                 tbl_loc) if chunk_major else tbl_loc)
+            cand_flat = (cand_loc.reshape((n_loc * chunk_size,)
+                                          + cand_loc.shape[2:])
+                         if cand_loc is not None else None)
             sym, _, cpro = kops.rans_decode_chunked(
                 enc_loc, n_loc * chunk_size, tbl_flat, chunk_size,
                 prob_bits=prob_bits, predictor=predictor,
-                interpret=interpret, chunk_probes=True)
+                candidates=cand_flat, interpret=interpret,
+                chunk_probes=True)
             sym3 = sym.reshape(lanes, n_loc, chunk_size).swapaxes(0, 1)
             per_chunk = (jnp.sum(cpro.astype(jnp.float32), axis=1)
                          / (lanes * chunk_size))
             return sym3, per_chunk
         # coder path: batch the local chunk slab through one vmapped scan
         if chunk_major:
+            if cand_loc is not None:
+                return jax.vmap(
+                    lambda e, tb, cd: _decode_one(
+                        EncodedLanes(*e), TableSet(*tb), cand=cd))(
+                    enc_loc, tbl_loc, cand_loc)
             return jax.vmap(
                 lambda e, tb: _decode_one(EncodedLanes(*e), TableSet(*tb)))(
                 enc_loc, tbl_loc)
+        if cand_loc is not None:
+            return jax.vmap(
+                lambda e, cd: _decode_one(EncodedLanes(*e), tbl_loc,
+                                          cand=cd))(enc_loc, cand_loc)
         return jax.vmap(
             lambda e: _decode_one(EncodedLanes(*e), tbl_loc))(enc_loc)
+
+    # the candidate rows of the full-size chunks, chunk-major, sharded on
+    # the same "chunks" axis as the stream slab
+    cand_full = (candidates[:n_full * chunk_size].reshape(
+        (n_full, chunk_size) + candidates.shape[1:])
+        if candidates is not None else None)
+    extra_args, extra_specs = [], []
+    if cand_full is not None:
+        extra_args.append(cand_full)
+        extra_specs.append(P("chunks"))
 
     if per_position:
         tbl_full = coder.chunk_tables(tbl, n_full, chunk_size)
 
-        def body(enc_loc, tbl_loc):
+        def body(enc_loc, tbl_loc, *cand):
             return _slab_decode(ChunkedLanes(*enc_loc), TableSet(*tbl_loc),
-                                True)
+                                True, cand[0] if cand else None)
 
         sym_full, probes_full = shard_map(
             body, mesh=mesh,
             in_specs=(jax.tree.map(lambda _: P("chunks"), sub),
-                      _chunked_table_specs(tbl, sharded=True)),
-            out_specs=out_specs, check_rep=False)(sub, tbl_full)
+                      _chunked_table_specs(tbl, sharded=True),
+                      *extra_specs),
+            out_specs=out_specs, check_rep=False)(sub, tbl_full,
+                                                  *extra_args)
     else:
-        def body(enc_loc, tbl_rep):
+        def body(enc_loc, tbl_rep, *cand):
             return _slab_decode(ChunkedLanes(*enc_loc), TableSet(*tbl_rep),
-                                False)
+                                False, cand[0] if cand else None)
 
         sym_full, probes_full = shard_map(
             body, mesh=mesh,
             in_specs=(jax.tree.map(lambda _: P("chunks"), sub),
-                      _chunked_table_specs(tbl, sharded=False)),
-            out_specs=out_specs, check_rep=False)(sub, tbl)
+                      _chunked_table_specs(tbl, sharded=False),
+                      *extra_specs),
+            out_specs=out_specs, check_rep=False)(sub, tbl, *extra_args)
 
     lanes = sym_full.shape[1]
     syms = [sym_full.swapaxes(0, 1).reshape(lanes, n_full * chunk_size)]
@@ -238,7 +289,9 @@ def decode_chunked(chunks: ChunkedLanes, n_symbols: int, tbl: TableSet,
         tbl_tail = (coder.slice_tables(tbl, n_full * chunk_size, n_symbols)
                     if per_position else tbl)
         sym_tail, probes_tail = _decode_one(
-            coder.chunk_encoded(chunks, n_full), tbl_tail, n=tail_len)
+            coder.chunk_encoded(chunks, n_full), tbl_tail, n=tail_len,
+            cand=(candidates[n_full * chunk_size:]
+                  if candidates is not None else None))
         syms.append(sym_tail)
         probe_sums.append(probes_tail * tail_len)
     out = jnp.concatenate(syms, axis=1)

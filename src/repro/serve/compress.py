@@ -85,11 +85,14 @@ def lm_compress(params, cfg: ModelConfig, tokens: jax.Array,
     """tokens (lanes, T) -> multi-lane rANS bitstream + stats.
 
     ``backend="kernel"`` feeds the teacher-forced ``(T, lanes, K)`` tables
-    of :func:`collect_tables` straight into the Pallas encode kernel (the
-    adaptive per-lane layout encodes in-kernel; interpret mode on CPU);
-    ``backend="coder"`` runs the pure-JAX lane scan.  Both consume
-    ``core.update``, so the produced bitstream is byte-identical either way
-    and round-trips through :func:`lm_decompress` bit-exactly.
+    of :func:`collect_tables` straight into the fused-compaction Pallas
+    encode kernel (the adaptive per-lane layout encodes in-kernel and the
+    packed stream comes straight off the kernel — no host-side
+    ``compact_records`` pass; interpret mode on CPU); ``backend="coder"``
+    runs the pure-JAX lane scan.  Both consume ``core.update``, so the
+    produced bitstream — including the per-lane ``overflow`` flags on the
+    returned ``EncodedLanes`` — is byte-identical either way and
+    round-trips through :func:`lm_decompress` bit-exactly.
     """
     lanes, t_len = tokens.shape
     tables, xent_bits = collect_tables(params, cfg, tokens, prob_bits)
@@ -198,6 +201,7 @@ class ChunkedCompressStats(NamedTuple):
 def lm_compress_chunked(params, cfg: ModelConfig, tokens: jax.Array,
                         chunk_size: int, prob_bits: int = C.PROB_BITS,
                         mesh=None, backend: str = "coder",
+                        cap: int | None = None,
                         interpret: bool = True) -> ChunkedCompressStats:
     """tokens (lanes, T) -> chunked multi-lane bitstream + stats.
 
@@ -205,14 +209,18 @@ def lm_compress_chunked(params, cfg: ModelConfig, tokens: jax.Array,
     chunk boundaries — chunking changes the *coder* framing, never the
     distributions), then the chunk x lane grid is encoded on ``mesh`` via
     ``repro.parallel.chunked`` (vmap fallback on one device).
-    ``backend="kernel"`` routes the encode through the Pallas kernel's
-    chunk grid axis — one ``pallas_call`` per device.
+    ``backend="kernel"`` routes the encode through the fused Pallas
+    kernel's chunk grid axis — one ``pallas_call`` per device emitting
+    packed streams.  ``cap`` optionally bounds the per-(chunk, lane) byte
+    budget; under-provisioned cells come back truncated-but-flagged on
+    ``chunks.overflow`` (identically on either backend) and refuse to pack.
     """
     from repro.parallel.chunked import encode_chunked
     lanes, t_len = tokens.shape
     tables, xent_bits = collect_tables(params, cfg, tokens, prob_bits)
     chunks = encode_chunked(tokens.astype(jnp.int32), tables, chunk_size,
-                            mesh=mesh, backend=backend, interpret=interpret)
+                            mesh=mesh, backend=backend, cap=cap,
+                            interpret=interpret)
     bits = (jnp.sum(chunks.length.astype(jnp.float32)) * 8.0
             / (lanes * t_len))
     return ChunkedCompressStats(chunks=chunks, chunk_size=chunk_size,
@@ -256,6 +264,7 @@ def lm_decompress_chunked(params, cfg: ModelConfig,
                           chunks: coder.ChunkedLanes, n_symbols: int,
                           chunk_size: int, prob_bits: int = C.PROB_BITS,
                           topk: int = 4, backend: str = "coder",
+                          mesh=None,
                           interpret: bool = True,
                           lane_probes: bool = False):
     """Chunked bitstream -> tokens (bit-exact inverse of lm_compress_chunked).
@@ -275,10 +284,22 @@ def lm_decompress_chunked(params, cfg: ModelConfig,
     and probe counters come from the kernel and are integer-identical to
     pass 1's (both consume ``core.search``).
 
+    ``mesh`` (kernel backend only): place pass 2 on a ``("chunks",)``
+    device mesh via ``repro.parallel.chunked.decode_chunked`` — the
+    collected candidate planes are cut chunk-major and sharded with the
+    chunk slab, one kernel launch per device.  Per-lane probe counters are
+    not aggregated across devices, so ``lane_probes`` requires
+    ``mesh=None``.
+
     Returns ``(tokens (lanes, T), avg_probes[, per-lane probes])``.
     """
     if backend not in ("coder", "kernel"):
         raise ValueError(f"unknown decode backend {backend!r}")
+    if mesh is not None and backend != "kernel":
+        raise ValueError(
+            "mesh= requires backend='kernel': the coder backend decodes "
+            "inside the sequential model scan (pass 1 IS the decode), so "
+            "there is no pass 2 to place on a device mesh")
     lanes = chunks.buf.shape[1]
     n_total = coder.num_chunks(n_symbols, chunk_size)
     if chunks.buf.shape[0] != n_total:
@@ -300,10 +321,19 @@ def lm_decompress_chunked(params, cfg: ModelConfig,
         if collect:
             planes.append(res[4:])
     if collect:
-        from repro.kernels.ops import rans_decode_chunked
         tables = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0),
                               *[p[0] for p in planes])
         cands = jnp.concatenate([p[1] for p in planes], axis=0)
+        if mesh is not None:
+            if lane_probes:
+                raise ValueError(
+                    "lane_probes requires mesh=None: the sharded decode "
+                    "does not aggregate per-lane counters across devices")
+            from repro.parallel.chunked import decode_chunked as pdecode
+            return pdecode(chunks, n_symbols, tables, chunk_size, mesh=mesh,
+                           prob_bits=prob_bits, backend="kernel",
+                           candidates=cands, interpret=interpret)
+        from repro.kernels.ops import rans_decode_chunked
         sym, avg, per_lane = rans_decode_chunked(
             chunks, n_symbols, tables, chunk_size, prob_bits=prob_bits,
             candidates=cands, interpret=interpret, lane_probes=True)

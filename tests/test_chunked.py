@@ -256,6 +256,66 @@ def test_shard_map_kernel_backend_matches_coder(case):
         pchunked.decode_chunked(ch, T, tbl, 17, backend="nope")
 
 
+def test_shard_map_candidate_planes_parity(case):
+    """Model-top-k candidate planes shard with the chunk slab (ISSUE 5
+    satellite): ``parallel.decode_chunked(candidates=...)`` matches
+    ``coder.decode_chunked(candidates=...)`` in symbols AND probe
+    accounting on both backends, mesh and no-mesh, ragged tail included —
+    and speculation actually cuts the probe count."""
+    tbl, syms = case
+    rng = np.random.default_rng(62)
+    lanes, topk = syms.shape[0], 4
+    # ~80% top-1 hits: candidate row 0 is the true symbol, else decoys
+    truth = np.asarray(syms).T                              # (T, lanes)
+    cands = rng.integers(0, 64, (T, lanes, topk))
+    hit = rng.random((T, lanes)) < 0.8
+    cands[..., 0] = np.where(hit, truth, cands[..., 0])
+    cands = jnp.asarray(cands, jnp.int32)
+    mesh = pchunked.chunk_mesh()
+    ch = coder.encode_chunked(syms, tbl, 17)
+    want, wp = coder.decode_chunked(ch, T, tbl, 17, candidates=cands)
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(syms))
+    base, bp = coder.decode_chunked(ch, T, tbl, 17)
+    assert float(wp) < 0.75 * float(bp)     # speculation pays
+    for backend in ("coder", "kernel"):
+        for m in (mesh, None):
+            got, gp = pchunked.decode_chunked(ch, T, tbl, 17, mesh=m,
+                                              backend=backend,
+                                              candidates=cands)
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(syms))
+            assert abs(float(gp) - float(wp)) < 1e-5, (backend, m)
+    # topk == 0 planes disable speculation (baseline probe accounting)
+    empty = jnp.zeros((T, lanes, 0), jnp.int32)
+    got0, gp0 = pchunked.decode_chunked(ch, T, tbl, 17, mesh=mesh,
+                                        candidates=empty)
+    np.testing.assert_array_equal(np.asarray(got0), np.asarray(syms))
+    assert abs(float(gp0) - float(bp)) < 1e-5
+    with pytest.raises(ValueError, match="candidate planes"):
+        pchunked.decode_chunked(ch, T, tbl, 17, mesh=mesh,
+                                candidates=cands[:, :1])
+
+
+def test_shard_map_candidate_planes_per_position(per_position_case):
+    """Candidate rows and per-position table rows ride the same chunk-major
+    sharding — probe parity holds for the neural-prior layout too."""
+    tbl, syms = per_position_case
+    rng = np.random.default_rng(63)
+    lanes, topk = syms.shape[0], 2
+    truth = np.asarray(syms).T
+    cands = rng.integers(0, 32, (T, lanes, topk))
+    hit = rng.random((T, lanes)) < 0.8
+    cands[..., 0] = np.where(hit, truth, cands[..., 0])
+    cands = jnp.asarray(cands, jnp.int32)
+    mesh = pchunked.chunk_mesh()
+    ch = coder.encode_chunked(syms, tbl, 17)
+    want, wp = coder.decode_chunked(ch, T, tbl, 17, candidates=cands)
+    for backend in ("coder", "kernel"):
+        got, gp = pchunked.decode_chunked(ch, T, tbl, 17, mesh=mesh,
+                                          backend=backend, candidates=cands)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(syms))
+        assert abs(float(gp) - float(wp)) < 1e-5, backend
+
+
 def test_sharded_fallback_paths(case):
     """None mesh and indivisible chunk counts silently take the vmap path."""
     tbl, syms = case

@@ -117,8 +117,8 @@ def test_decode_kernel_probes_match_core():
 
 @pytest.mark.parametrize("chunk_size", [32, 70, 71])   # ragged / exact / one
 def test_encode_kernel_chunked_bit_exact(chunk_size):
-    """ops.rans_encode_chunked (records kernel per chunk + shared
-    compact_records) must be byte-identical to coder.encode_chunked."""
+    """ops.rans_encode_chunked (fused kernel: chunk grid axis + in-kernel
+    byte compaction) must be byte-identical to coder.encode_chunked."""
     k, lanes, t = 64, 128, 70
     tbl, syms = _case(99, k, lanes, t)
     got = ops.rans_encode_chunked(syms, tbl, chunk_size)
@@ -129,7 +129,7 @@ def test_encode_kernel_chunked_bit_exact(chunk_size):
 
 def test_encode_kernel_on_chunk_payloads():
     """Standalone kernel encode of each chunk slice == the chunk's cell
-    (the chunk-aware cap keeps compact_records' layout aligned)."""
+    (the chunk-aware cap keeps the fused streams' layout aligned)."""
     k, lanes, t, chunk_size = 64, 128, 70, 32
     tbl, syms = _case(98, k, lanes, t)
     ch = coder.encode_chunked(syms, tbl, chunk_size)

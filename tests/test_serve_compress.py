@@ -112,6 +112,52 @@ def test_lm_decompress_chunked_kernel_backend_bit_exact(params):
                               backend="nope")
 
 
+def test_lm_decompress_chunked_on_mesh(params):
+    """mesh= places pass 2 on the ("chunks",) mesh via
+    parallel.chunked.decode_chunked — the collected candidate planes shard
+    with the chunk slab; symbols and probe averages match the no-mesh
+    kernel path (ISSUE 5 satellite: candidates through the sharded path)."""
+    from repro.parallel.chunked import chunk_mesh
+    from repro.serve.compress import (lm_compress_chunked,
+                                      lm_decompress_chunked)
+    toks = jnp.asarray(token_stream(CFG.vocab_size, (2, 32), seed=17),
+                       jnp.int32)
+    st = lm_compress_chunked(params, CFG, toks, chunk_size=16,
+                             backend="kernel")   # 2 aligned chunks
+    d0, a0 = lm_decompress_chunked(params, CFG, st.chunks, 32, 16,
+                                   backend="kernel")
+    dm, am = lm_decompress_chunked(params, CFG, st.chunks, 32, 16,
+                                   backend="kernel", mesh=chunk_mesh())
+    np.testing.assert_array_equal(np.asarray(dm), np.asarray(toks))
+    np.testing.assert_array_equal(np.asarray(d0), np.asarray(dm))
+    assert abs(float(a0) - float(am)) < 1e-5
+    with pytest.raises(ValueError, match="lane_probes"):
+        lm_decompress_chunked(params, CFG, st.chunks, 32, 16,
+                              backend="kernel", mesh=chunk_mesh(),
+                              lane_probes=True)
+    with pytest.raises(ValueError, match="mesh"):
+        lm_decompress_chunked(params, CFG, st.chunks, 32, 16,
+                              backend="coder", mesh=chunk_mesh())
+
+
+def test_lm_compress_chunked_overflow_parity(params):
+    """An under-provisioned cap comes back truncated-but-flagged with the
+    SAME per-(chunk, lane) overflow plane on both encode backends, and the
+    flagged stream refuses to pack."""
+    from repro.serve.compress import lm_compress_chunked
+    toks = jnp.asarray(token_stream(CFG.vocab_size, (2, 32), seed=18),
+                       jnp.int32)
+    a = lm_compress_chunked(params, CFG, toks, chunk_size=16, cap=6)
+    b = lm_compress_chunked(params, CFG, toks, chunk_size=16, cap=6,
+                            backend="kernel")
+    assert np.asarray(a.chunks.overflow).any()
+    for x, y in zip(a.chunks, b.chunks):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    with pytest.raises(ValueError, match="overflow"):
+        bitstream.pack_chunked(*map(np.asarray, b.chunks), chunk_size=16,
+                               n_symbols=32)
+
+
 def test_lm_compress_respects_model_bound(params):
     """Coded bits/symbol ~ model cross entropy + quantization overhead."""
     toks = jnp.asarray(token_stream(CFG.vocab_size, (8, 128), seed=5),

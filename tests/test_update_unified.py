@@ -1,4 +1,5 @@
-"""Unified encode datapath (ISSUE 3): one shared update core, every backend.
+"""Unified encode datapath (ISSUE 3 + ISSUE 5): one shared update core,
+every backend, fused in-kernel compaction.
 
 Acceptance pins:
   * the two-stage rANS update + fixed-depth renorm record emission exist
@@ -14,8 +15,15 @@ Acceptance pins:
     ``(K,)``, per-position ``(T, K)``, per-lane ``(T, lanes, K)`` and
     chunked streams (ragged tails included), with
     ``ops.rans_encode_chunked`` issuing a SINGLE ``pallas_call``;
+  * **fused compaction** (ISSUE 5): ``ops.rans_encode[_chunked]`` return
+    packed streams straight off the kernel — ``compact_records`` is never
+    called on the kernel path — and the fused outputs are byte-identical
+    to the records reference (records kernel + host compaction) on every
+    table family;
   * cap overflow is flagged, truncated writes are dropped (never wrapped),
-    and the behavior is identical across all three encode paths.
+    and the behavior is identical across all encode paths — records,
+    fused-kernel and pure-JAX — down to caps smaller than the 4-byte state
+    header, with the container writers refusing every flagged stream.
 """
 
 import inspect
@@ -218,6 +226,60 @@ def test_chunked_encode_is_one_pallas_call(perpos_enc_case, monkeypatch):
     assert calls[0][1] == 4                      # chunk grid axis
 
 
+def _records_reference(syms, tbl, cap, chunk_size=None):
+    """The records datapath: records kernel + host-side compact_records —
+    the bytes-moved reference the fused kernel must match byte-for-byte."""
+    if chunk_size is None:
+        b, m, s = rans_encode.rans_encode_records(syms, tbl)
+        return bitstream.compact_records(b[0], m[0], s[0], cap)
+    b, m, s = rans_encode.rans_encode_records(syms, tbl,
+                                              chunk_size=chunk_size)
+    enc = jax.vmap(lambda bb, mm, ss:
+                   bitstream.compact_records(bb, mm, ss, cap))(b, m, s)
+    return coder.ChunkedLanes(enc.buf, enc.start, enc.length, enc.overflow)
+
+
+def test_fused_encode_matches_records_reference(rans_case, perpos_enc_case,
+                                                perlane_enc_case):
+    """The fused in-kernel compaction reproduces the records path (records
+    kernel + ``compact_records``) byte-for-byte on every table family —
+    same buffers, same geometry, same overflow plane (ISSUE 5 tentpole)."""
+    tbl_s, syms_s = rans_case(315, k=64, lanes=8, t=70)
+    syms_s = jnp.asarray(syms_s, jnp.int32)
+    cases = [(tbl_s, syms_s), perpos_enc_case, perlane_enc_case]
+    for tbl, syms in cases:
+        cap = coder.default_cap(syms.shape[1])
+        _assert_streams_equal(ops.rans_encode(syms, tbl, cap=cap),
+                              _records_reference(syms, tbl, cap))
+    # chunked (ragged tail): per-chunk cap, per-cell overflow plane
+    for tbl, syms in (cases[0], cases[1]):
+        cap = coder.default_cap(13)
+        _assert_streams_equal(
+            ops.rans_encode_chunked(syms, tbl, 13, cap=cap),
+            _records_reference(syms, tbl, cap, chunk_size=13))
+
+
+def test_kernel_encode_path_never_calls_compact_records(rans_case,
+                                                        monkeypatch):
+    """``ops.rans_encode[_chunked]`` return packed streams with NO host-side
+    compaction pass: poison ``compact_records`` everywhere and the kernel
+    path must still produce coder-identical streams (the acceptance
+    criterion of the fused datapath)."""
+    def _boom(*a, **k):
+        raise AssertionError(
+            "compact_records called on the fused kernel encode path")
+
+    tbl, syms = rans_case(316, k=32, lanes=4, t=41)
+    syms = jnp.asarray(syms, jnp.int32)
+    want = coder.encode(syms, tbl)
+    want_ch = coder.encode_chunked(syms, tbl, 11)
+    monkeypatch.setattr(bitstream, "compact_records", _boom)
+    monkeypatch.setattr(ops, "compact_records", _boom)
+    monkeypatch.setattr(coder, "compact_records", _boom)
+    _assert_streams_equal(ops.rans_encode(syms, tbl), want)
+    _assert_streams_equal(ops.rans_encode_chunked(syms, tbl, 11), want_ch)
+
+
 def test_parallel_kernel_encode_backend(rans_case):
     """parallel.chunked.encode_chunked(backend="kernel") under shard_map ==
     the coder path, byte for byte (ragged tail included)."""
@@ -305,6 +367,35 @@ def test_overflow_chunked(overflow_case):
     # ample cap: no flags anywhere
     ok = coder.encode_chunked(syms, tbl, 16)
     assert not np.asarray(ok.overflow).any()
+
+
+@pytest.mark.parametrize("cap", [3, 5, 12])
+def test_overflow_parity_tiny_caps_all_paths(overflow_case, cap):
+    """Overflow propagation is identical across the pure-JAX coder, the
+    records reference and the fused kernel, down to caps smaller than the
+    4-byte state header (where even the header is clipped), on both the
+    monolithic and chunked paths — and every flagged stream refuses to
+    pack (ISSUE 5 satellite: no path may under-flag a too-small cap)."""
+    tbl, syms = overflow_case
+    want = coder.encode(syms, tbl, cap=cap)
+    assert np.asarray(want.overflow).any()
+    _assert_streams_equal(coder.encode_records(syms, tbl, cap=cap), want)
+    _assert_streams_equal(ops.rans_encode(syms, tbl, cap=cap), want)
+    _assert_streams_equal(_records_reference(syms, tbl, cap), want)
+    want_ch = coder.encode_chunked(syms, tbl, 16, cap=cap)
+    assert np.asarray(want_ch.overflow).any()
+    fused_ch = ops.rans_encode_chunked(syms, tbl, 16, cap=cap)
+    _assert_streams_equal(fused_ch, want_ch)
+    _assert_streams_equal(
+        _records_reference(syms, tbl, cap, chunk_size=16), want_ch)
+    # truncated-but-flagged streams refuse to pack on every path
+    for enc in (want, ops.rans_encode(syms, tbl, cap=cap)):
+        with pytest.raises(ValueError, match="overflow"):
+            bitstream.pack(*map(np.asarray, enc), n_symbols=syms.shape[1])
+    for ch in (want_ch, fused_ch):
+        with pytest.raises(ValueError, match="overflow"):
+            bitstream.pack_chunked(*map(np.asarray, ch), chunk_size=16,
+                                   n_symbols=syms.shape[1])
 
 
 # ---------------------------------------------------------------------------
