@@ -24,6 +24,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import time
 
 import numpy as np
 import jax
@@ -133,6 +134,58 @@ def run_decode_sweep(lanes: int = 8, t: int = 256, seed: int = 1,
     return points
 
 
+def run_serve_sweep(lanes: int = 4, t: int = 128, seed: int = 2,
+                    topk: int = 4, reps: int = 3) -> list[dict]:
+    """Serve-decode latency: the fused single-program path vs the retained
+    references (DESIGN.md §9).
+
+    One LM-compressed stream, decoded by all three ``lm_decompress``
+    backends — ``kernel`` (the fused program: model step + SPC fast path +
+    per-step Pallas kernel in ONE ``lax.scan``), ``two_pass`` (pure-JAX
+    collect scan + whole-stream kernel replay) and ``coder`` (pure JAX end
+    to end).  Symbols and per-lane probe counters are asserted
+    integer-identical across backends before any latency is reported;
+    best-of-``reps`` wall time per point, warmup excluded.
+    """
+    from repro.configs import get_smoke_config
+    from repro.models import init_model
+    from repro.serve.compress import lm_compress, lm_decompress
+    cfg = get_smoke_config("ras-pimc")
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    toks = jnp.asarray(
+        np.asarray(image_rows(lanes, t, seed=seed)) % cfg.vocab_size,
+        jnp.int32)
+    stats = lm_compress(params, cfg, toks, backend="kernel")
+
+    points, ref_lane = [], None
+    for backend in ("kernel", "two_pass", "coder"):
+        def call():
+            sym, _, lane = lm_decompress(params, cfg, stats.enc, t,
+                                         topk=topk, backend=backend,
+                                         lane_probes=True)
+            jax.block_until_ready(sym)
+            return sym, lane
+
+        sym, lane = call()                      # warmup + differential gate
+        assert np.array_equal(np.asarray(sym), np.asarray(toks)), backend
+        if ref_lane is None:
+            ref_lane = np.asarray(lane)
+        else:
+            assert np.array_equal(ref_lane, np.asarray(lane)), (
+                f"{backend}: probe counters diverge from fused path")
+        times = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            call()
+            times.append(time.perf_counter() - t0)
+        best = min(times)
+        points.append({"backend": backend, "lanes": lanes, "n_symbols": t,
+                       "topk": topk, "best_s": best,
+                       "us_per_symbol": best * 1e6 / (lanes * t),
+                       "backends_agree": True})
+    return points
+
+
 def main(emit):
     pts = {p["name"]: p for p in run(t=1024)}
     base = pts["baseline"]["avg_steps"]
@@ -151,6 +204,12 @@ def main(emit):
     emit("decode_sweep_speculation_probes", spec["avg_probes"],
          f"model-top-4 candidates; no-spec={nospec['avg_probes']:.2f}, "
          f"reduction={1 - spec['avg_probes']/nospec['avg_probes']:.1%}")
+    srv = {p["backend"]: p for p in run_serve_sweep(t=96)}
+    fused, twop = srv["kernel"], srv["two_pass"]
+    emit("serve_decode_us_per_symbol_fused", fused["us_per_symbol"],
+         f"two_pass={twop['us_per_symbol']:.1f}us "
+         f"coder={srv['coder']['us_per_symbol']:.1f}us; fused speedup over "
+         f"two-pass = {twop['best_s']/fused['best_s']:.2f}x")
 
 
 if __name__ == "__main__":
@@ -168,9 +227,17 @@ if __name__ == "__main__":
               f"backends_agree={p['backends_agree']})")
     print(f"wrote {len(pts)} points -> {args.out}")
     dpts = run_decode_sweep()
-    with open(args.decode_out, "w") as f:
-        json.dump(dpts, f, indent=2)
     for p in dpts:
         print(f"{p['layout']} topk={p['topk']}: "
               f"{p['avg_probes']:.3f} probes/symbol")
-    print(f"wrote {len(dpts)} points -> {args.decode_out}")
+    spts = run_serve_sweep()
+    for p in spts:
+        print(f"serve backend={p['backend']}: "
+              f"{p['us_per_symbol']:.1f} us/symbol")
+    fused = next(p for p in spts if p["backend"] == "kernel")
+    twop = next(p for p in spts if p["backend"] == "two_pass")
+    print(f"fused speedup over two-pass: "
+          f"{twop['best_s']/fused['best_s']:.2f}x")
+    with open(args.decode_out, "w") as f:
+        json.dump(dpts + spts, f, indent=2)
+    print(f"wrote {len(dpts) + len(spts)} points -> {args.decode_out}")

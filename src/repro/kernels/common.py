@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import constants as C
 # single-source integer primitives (core/update.py uses numpy-scalar masks,
 # so Pallas kernels see literals, not captured device constants); kept as a
 # re-export for the kernels' historical import path.
@@ -100,6 +101,38 @@ def onehot_gather_rows(buf: jax.Array, row_idx: jax.Array) -> jax.Array:
     hot = iota == row_idx[None, :].astype(jnp.int32)
     vals = jnp.where(hot, buf, jnp.zeros_like(buf))
     return jnp.sum(vals.astype(jnp.int32), axis=0).astype(buf.dtype)
+
+
+def read_state_header(buf: jax.Array, ptr: jax.Array):
+    """Per-lane 4-byte big-endian rANS state header read (decoder init).
+
+    buf: (cap, lanes) uint8; ptr: (lanes,) int32 read cursors.  Returns the
+    reconstructed ``(lanes,)`` uint32 states and the advanced cursors — the
+    in-kernel single source of ``coder.decoder_init``'s header walk, shared
+    by the full decode kernel's per-chunk reset and the fused serve step.
+    """
+    s = jnp.zeros((ptr.shape[0],), jnp.uint32)
+    for _ in range(4):
+        byte = onehot_gather_rows(buf, ptr).astype(jnp.uint32)
+        s = (s << 8) | byte
+        ptr = ptr + 1
+    return s, ptr
+
+
+def masked_refill(buf: jax.Array, s: jax.Array, ptr: jax.Array):
+    """Fixed ``MAX_RENORM_STEPS``-stage masked byte refill (decode renorm).
+
+    buf: (cap, lanes) uint8; s: (lanes,) uint32; ptr: (lanes,) int32.
+    Mirrors the encoder's staged renorm bound: at most two byte reads per
+    symbol, lanes above ``RANS_L`` are masked out (the RTL's clock gating).
+    Shared by the full decode kernel and the fused serve step kernel.
+    """
+    for _ in range(C.MAX_RENORM_STEPS):
+        cond = s < jnp.uint32(C.RANS_L)
+        byte = onehot_gather_rows(buf, ptr).astype(jnp.uint32)
+        s = jnp.where(cond, (s << C.RENORM_SHIFT) | byte, s)
+        ptr = ptr + cond.astype(jnp.int32)
+    return s, ptr
 
 
 def onehot_scatter_rows(buf: jax.Array, row_idx: jax.Array, vals: jax.Array,

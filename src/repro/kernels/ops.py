@@ -16,9 +16,12 @@ kernel (static and adaptive TableSets plus ``(T, lanes, topk)`` model-top-k
 candidate planes; symbols AND per-lane probe counters are bit-identical to
 the pure-JAX coder — both consume ``core.search``).  The chunked decode,
 like the chunked encode, is a single ``pallas_call`` (chunk grid axis with
-in-kernel state/pointer/context reset).  ``spc_quantize`` wraps the
-mass-correction kernel.  All default to ``interpret=True`` (this container
-is CPU-only; on a real TPU pass interpret=False).
+in-kernel state/pointer/context reset).  ``rans_decode_step`` (re-exported
+from ``kernels.rans_decode``) is the fused serve decode's building block:
+ONE symbol pop per lane with caller-threaded coder state, traced inside
+the model scan of ``serve.compress`` (DESIGN.md §9).  ``spc_quantize``
+wraps the mass-correction kernel.  All default to ``interpret=True`` (this
+container is CPU-only; on a real TPU pass interpret=False).
 """
 
 from __future__ import annotations
@@ -38,7 +41,8 @@ from repro.core.coder import (ChunkedLanes, EncodedLanes, default_cap,
                               num_chunks)
 from repro.core.predictors import NeighborAverage
 from repro.core.spc import TableSet, build_tables
-from repro.kernels.rans_decode import rans_decode_lanes
+from repro.kernels.rans_decode import (rans_decode_lanes,
+                                       rans_decode_step)  # noqa: F401
 from repro.kernels.rans_encode import (rans_encode_lanes,  # noqa: F401
                                        rans_encode_records)
 

@@ -66,9 +66,9 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import constants as C
 from repro.core import search
-from repro.kernels.common import (onehot_gather, onehot_gather_lanes,
-                                  onehot_gather_rows, pad_chunk_rows,
-                                  unpad_chunk_rows)
+from repro.kernels.common import (masked_refill, onehot_gather,
+                                  onehot_gather_lanes, pad_chunk_rows,
+                                  read_state_header, unpad_chunk_rows)
 
 _U32 = jnp.uint32
 _I32 = jnp.int32
@@ -92,12 +92,7 @@ def _decode_kernel(buf_ref, start_ref, freq_ref, cdf_ref, *rest,
     def _init():
         # per-chunk re-init: every chunk is a standalone stream — read its
         # 4-byte big-endian state header and reset cursors/probes/context
-        ptr = start_ref[0].astype(_I32)
-        s = jnp.zeros((lanes,), _U32)
-        for _ in range(4):
-            byte = onehot_gather_rows(buf, ptr).astype(_U32)
-            s = (s << 8) | byte
-            ptr = ptr + 1
+        s, ptr = read_state_header(buf, start_ref[0].astype(_I32))
         s_scr[0, :] = s
         ptr_scr[0, :] = ptr
         probes_ref[0, :] = jnp.zeros((lanes,), _I32)
@@ -152,11 +147,7 @@ def _decode_kernel(buf_ref, start_ref, freq_ref, cdf_ref, *rest,
         f = g(freq_t, x)
         start = g(cdf_t[..., :k], x)
         s = f * (s >> prob_bits) + slot - start
-        for _ in range(C.MAX_RENORM_STEPS):
-            cond = s < _U32(C.RANS_L)
-            byte = onehot_gather_rows(buf, ptr).astype(_U32)
-            s = jnp.where(cond, (s << C.RENORM_SHIFT) | byte, s)
-            ptr = ptr + cond.astype(_I32)
+        s, ptr = masked_refill(buf, s, ptr)
         return s, ptr, probes + p, ctx
 
     s, ptr, probes, ctx = jax.lax.fori_loop(
@@ -320,3 +311,101 @@ def rans_decode_lanes(buf: jax.Array,      # (lanes, cap) uint8 forward stream
     )(buf3.swapaxes(1, 2), start2.astype(_I32), freq_in, cdf_in, *extra_in)
     sym = unpad_chunk_rows(sym, t_len, chunk, n_chunks, padded_chunk)
     return sym.T, probes
+
+
+# ---------------------------------------------------------------------------
+# per-step kernel: ONE symbol pop per lane, coder state threaded through the
+# caller.  This is the fused serve decode's building block (DESIGN.md §9):
+# the model is autoregressive over its own decoded tokens, so the serve scan
+# carries (model cache, rANS state, read cursors) and calls this kernel once
+# per position with that step's just-quantized tables and candidate row.  The
+# CDF search, probe accounting, state update and masked refill are the same
+# shared cores the full-stream kernel consumes — bit-exactness vs both the
+# pure coder and the two-pass kernel replay is structural.
+# ---------------------------------------------------------------------------
+
+def _decode_step_kernel(buf_ref, s_ref, ptr_ref, freq_ref, cdf_ref, *rest,
+                        prob_bits: int, k: int, lane_tables: bool,
+                        has_cands: bool):
+    if has_cands:
+        cand_ref = rest[0]
+        s_out, ptr_out, sym_ref, probes_ref = rest[1:]
+    else:
+        s_out, ptr_out, sym_ref, probes_ref = rest
+    s = s_ref[0, :]
+    ptr = ptr_ref[0, :]
+    slot = s & _U32((1 << prob_bits) - 1)
+    if lane_tables:
+        freq_t, cdf_t, g = freq_ref[...], cdf_ref[...], onehot_gather_lanes
+    else:
+        freq_t, cdf_t, g = freq_ref[0], cdf_ref[0], onehot_gather
+    cand = cand_ref[...] if has_cands else None
+    x, p = search.find_symbol(cdf_t, k, slot, candidates=cand, gather=g)
+    f = g(freq_t, x)
+    start = g(cdf_t[..., :k], x)
+    s = f * (s >> prob_bits) + slot - start
+    s, ptr = masked_refill(buf_ref[...], s, ptr)
+    s_out[0, :] = s
+    ptr_out[0, :] = ptr
+    sym_ref[0, :] = x
+    probes_ref[0, :] = p
+
+
+def rans_decode_step(buf: jax.Array,    # (cap, lanes) uint8, lane-minor
+                     s: jax.Array,      # (lanes,) uint32 rANS states
+                     ptr: jax.Array,    # (lanes,) int32 read cursors
+                     freq: jax.Array, cdf: jax.Array,
+                     prob_bits: int = C.PROB_BITS,
+                     candidates: jax.Array | None = None,
+                     interpret: bool = True):
+    """Pop ONE symbol per lane; coder state lives with the caller.
+
+    Tables are this step's rows: ``(K,)`` shared or ``(lanes, K)`` per-lane
+    (``cdf`` with trailing ``K+1``); ``candidates`` an optional
+    ``(lanes, topk)`` row of trial symbols.  Returns
+    ``(s', ptr', symbols (lanes,), probes (lanes,))``.  Designed to be
+    traced inside a ``lax.scan`` (interpret mode inlines the kernel into the
+    surrounding XLA program), with the initial ``(s, ptr)`` coming from
+    ``core.coder.decoder_init`` and ``buf`` transposed once outside the scan.
+    """
+    cap, lanes = buf.shape
+    k = freq.shape[-1]
+    lane_tables = freq.ndim == 2
+    if lane_tables and freq.shape[0] != lanes:
+        raise ValueError(
+            f"per-lane tables must be (lanes, K)=({lanes}, {k}); got "
+            f"{freq.shape}")
+    has_cands = candidates is not None and candidates.shape[-1] > 0
+    extra_in, extra_specs = [], []
+    tbl_block = (lambda sh: pl.BlockSpec(sh, lambda i: (0,) * len(sh)))
+    if has_cands:
+        if candidates.shape[0] != lanes:
+            raise ValueError(
+                f"candidate row must be (lanes, topk)=({lanes}, *); got "
+                f"{candidates.shape}")
+        extra_in.append(candidates.astype(_I32))
+        extra_specs.append(tbl_block(candidates.shape))
+    freq_in = freq if lane_tables else freq.reshape(1, k)
+    cdf_in = cdf if lane_tables else cdf.reshape(1, k + 1)
+    s2, ptr2, sym, probes = pl.pallas_call(
+        functools.partial(_decode_step_kernel, prob_bits=prob_bits, k=k,
+                          lane_tables=lane_tables, has_cands=has_cands),
+        grid=(1,),
+        in_specs=[
+            tbl_block((cap, lanes)),
+            tbl_block((1, lanes)),
+            tbl_block((1, lanes)),
+            tbl_block(freq_in.shape),
+            tbl_block(cdf_in.shape),
+        ] + extra_specs,
+        out_specs=[tbl_block((1, lanes))] * 4,
+        out_shape=[
+            jax.ShapeDtypeStruct((1, lanes), _U32),
+            jax.ShapeDtypeStruct((1, lanes), _I32),
+            jax.ShapeDtypeStruct((1, lanes), _I32),
+            jax.ShapeDtypeStruct((1, lanes), _I32),
+        ],
+        interpret=interpret,
+    )(buf, s.reshape(1, lanes), ptr.astype(_I32).reshape(1, lanes),
+      freq_in, cdf_in, *extra_in)
+    return s2[0], ptr2[0], sym[0], probes[0]

@@ -35,11 +35,14 @@ def main(argv=None):
     ap.add_argument("--symbols", type=int, default=256)
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--topk", type=int, default=4)
-    ap.add_argument("--backend", choices=["coder", "kernel"],
+    ap.add_argument("--backend", choices=["coder", "kernel", "two_pass"],
                     default="coder",
-                    help="rANS datapath: pure-JAX lane coder, or the Pallas "
-                         "kernels (encode + two-pass candidate-speculation "
-                         "decode; interpret mode off-TPU)")
+                    help="rANS datapath: 'coder' = pure-JAX lane coder; "
+                         "'kernel' = Pallas encode + the FUSED serve decode "
+                         "(one program: model step + SPC + per-step decode "
+                         "kernel); 'two_pass' = Pallas encode + the "
+                         "collect-then-replay reference decode "
+                         "(interpret mode off-TPU)")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch)
@@ -64,7 +67,8 @@ def main(argv=None):
                                     (args.lanes, args.symbols), seed=7),
                        jnp.int32)
     t0 = time.time()
-    stats = lm_compress(params, cfg, toks, backend=args.backend)
+    enc_backend = "coder" if args.backend == "coder" else "kernel"
+    stats = lm_compress(params, cfg, toks, backend=enc_backend)
     jax.block_until_ready(stats.enc.buf)
     t_enc = time.time() - t0
     blob = bitstream.pack(*map(np.asarray, stats.enc),

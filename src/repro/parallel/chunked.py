@@ -13,6 +13,11 @@ divisible by the mesh size, both entry points degrade to the plain vmap
 path in ``core.coder`` — bit-exactly the same streams/symbols either way
 (the tier-1 differential test pins shard_map == vmap symbol-for-symbol).
 The ragged tail chunk, when present, is always coded on the default device.
+
+:func:`lane_mesh` is the companion 1-D ``("lanes",)`` mesh for the FUSED
+serve decode (``serve.compress``, ``backend="kernel"``): that program is
+sequential over positions/chunks, so its parallel axis is the lane, not
+the chunk (see the function docstring and DESIGN.md §9).
 """
 
 from __future__ import annotations
@@ -32,6 +37,23 @@ def chunk_mesh(devices=None) -> Mesh:
     """1-D ``("chunks",)`` mesh over ``devices`` (default: all devices)."""
     devices = jax.devices() if devices is None else list(devices)
     return Mesh(np.asarray(devices), ("chunks",))
+
+
+def lane_mesh(devices=None) -> Mesh:
+    """1-D ``("lanes",)`` mesh over ``devices`` (default: all devices).
+
+    The placement axis of the FUSED serve decode (``serve.compress``,
+    ``backend="kernel"``): that program is sequential over positions and
+    chunks — the model is autoregressive over its own decoded tokens — so
+    the chunk axis cannot shard it.  Lanes can: each lane owns a private
+    byte stream, a private rANS state and an independent model batch row,
+    so the fused scan runs per-device on a lane slab with no collectives
+    (the multi-device form of the paper's multi-lane fabric for the decode
+    direction).  Same fallback contract as :func:`chunk_mesh`: indivisible
+    lane counts degrade to the single-device program, bit-exactly.
+    """
+    devices = jax.devices() if devices is None else list(devices)
+    return Mesh(np.asarray(devices), ("lanes",))
 
 
 def _usable(mesh: Mesh | None, n_full: int) -> bool:

@@ -12,11 +12,22 @@ stream is the payload:
                 rANS decoder (prediction-guided: the model's own top-k are
                 the trial symbols, verified with O(1) CDF probes and a safe
                 binary-search fallback) and is fed back into the model.
-                ``backend="kernel"`` adds a second pass: the scan collects
-                the per-step tables and top-k candidate planes, then the
-                Pallas decode kernel replays the whole bitstream in ONE
-                launch with in-kernel candidate speculation (chunked
-                streams ride the kernel's chunk grid axis).
+                Three backends (DESIGN.md §9):
+                  * ``backend="kernel"`` — the FUSED serve path: ONE traced
+                    program (a ``lax.scan`` carrying model cache + rANS
+                    state) where each step runs the model, quantizes its
+                    distribution through the SPC decode fast path, and pops
+                    one symbol per lane with the per-step Pallas kernel.
+                    No pure-JAX reference decode runs on this path;
+                  * ``backend="two_pass"`` — the differential reference:
+                    pass 1 runs the pure-JAX model scan collecting the
+                    per-step tables and top-k candidate planes, pass 2
+                    replays the whole bitstream in ONE Pallas launch with
+                    in-kernel candidate speculation (chunked streams ride
+                    the kernel's chunk grid axis);
+                  * ``backend="coder"`` — pure-JAX end to end.
+                All three are bit-exact on symbols AND integer-identical on
+                the Fig. 4(b) probe counters (single-source search core).
 
 Bit-exactness: both directions run the *identical* decode_step function on
 the identical cache evolution, so the distributions (and therefore tables
@@ -56,24 +67,42 @@ def _step_tables(logits: jax.Array, vocab: int, prob_bits: int):
     return spc.tables_from_probs(spc.store_bf16(probs), prob_bits)
 
 
+def _step_freq_cdf(logits: jax.Array, vocab: int, prob_bits: int):
+    """Model logits (lanes, Vpad) -> ``(freq, cdf)`` — decode-side SPC.
+
+    The identical quantization to :func:`_step_tables` (same f32 softmax,
+    same BF16 storage, same mass correction, same CDF construction) minus
+    the encoder-only Barrett planes — the fused decode's just-in-time table
+    path (``spc.freq_cdf_from_probs`` is pinned bit-equal in tests).
+    """
+    lg = logits[:, :vocab].astype(jnp.float32)
+    probs = jax.nn.softmax(lg, axis=-1)
+    return spc.freq_cdf_from_probs(spc.store_bf16(probs), prob_bits)
+
+
 @functools.partial(jax.jit, static_argnames=("cfg", "prob_bits"))
 def collect_tables(params, cfg: ModelConfig, tokens: jax.Array,
                    prob_bits: int = C.PROB_BITS):
-    """Teacher-forced pass: per-(position, lane) coding tables + xent."""
+    """Teacher-forced pass: per-(position, lane) coding tables + xent.
+
+    Runs on ``serve.engine.teacher_forced_scan`` — the same shared scan that
+    backs ``prefill``/``generate`` — so the cache evolution pricing the
+    bitstream is structurally the serving cache evolution (not a drifting
+    private copy of the loop).
+    """
+    from repro.serve.engine import teacher_forced_scan
     lanes, t_len = tokens.shape
-    cache = init_cache(cfg, lanes, t_len)
     inputs = jnp.concatenate(
         [jnp.full((lanes, 1), BOS, tokens.dtype), tokens[:, :-1]], axis=1)
 
-    def body(carry, t):
-        cache = carry
-        lg, cache = decode_step(params, cache, inputs[:, t][:, None], t, cfg)
+    def per_step(lg, t):
         tbl = _step_tables(lg, cfg.vocab_size, prob_bits)
         lp = jax.nn.log_softmax(lg[:, :cfg.vocab_size].astype(jnp.float32))
         gold = jnp.take_along_axis(lp, tokens[:, t][:, None], -1)[:, 0]
-        return cache, (tbl, -jnp.mean(gold))
+        return tbl, -jnp.mean(gold)
 
-    _, (tables, nll) = jax.lax.scan(body, cache, jnp.arange(t_len))
+    _, (tables, nll) = teacher_forced_scan(params, cfg, inputs, t_len,
+                                           step_fn=per_step)
     xent_bits = jnp.mean(nll) / jnp.log(2.0)
     return tables, xent_bits   # TableSet fields: (T, lanes, K)
 
@@ -142,25 +171,124 @@ def _lm_decompress_scan(params, cfg: ModelConfig, enc: coder.EncodedLanes,
     return ys     # (symbols (T, lanes), probes (T, lanes)[, tables, cands])
 
 
+def _fused_scan(params, cfg: ModelConfig, enc: coder.EncodedLanes,
+                cache, tok, t0, n: int, prob_bits: int, topk: int,
+                interpret: bool):
+    """The fused serve decode core (DESIGN.md §9): ONE traced program.
+
+    A ``lax.scan`` over positions ``[t0, t0+n)`` carrying BOTH the model
+    cache and the rANS coder state ``(s, ptr)``.  Each step runs the model
+    ``decode_step``, quantizes its distribution through the SPC decode fast
+    path (:func:`_step_freq_cdf` — no Barrett planes, no ``(T, lanes, K)``
+    plane stacking), ranks its top-k trial symbols, and pops one symbol per
+    lane with the per-step Pallas kernel
+    (``kernels.rans_decode.rans_decode_step``; interpret mode inlines the
+    kernel into this very program).  The decoded symbol feeds straight back
+    into the model — no pure-JAX reference decode runs anywhere on this
+    path, and no table plane ever round-trips through HBM.
+    """
+    from repro.kernels.rans_decode import rans_decode_step
+    dec0 = coder.decoder_init(enc)
+    buf_t = enc.buf.T      # (cap, lanes): transposed ONCE, outside the scan
+
+    def body(carry, t):
+        cache, s, ptr, tok = carry
+        lg, cache = decode_step(params, cache, tok, t, cfg)
+        freq, cdf = _step_freq_cdf(lg, cfg.vocab_size, prob_bits)
+        cands = model_topk_candidates(lg[:, :cfg.vocab_size], topk)
+        s, ptr, sym, probes = rans_decode_step(
+            buf_t, s, ptr, freq, cdf, prob_bits=prob_bits,
+            candidates=cands, interpret=interpret)
+        return (cache, s, ptr, sym[:, None].astype(jnp.int32)), (sym, probes)
+
+    (cache, _, _, tok), (sym, probes) = jax.lax.scan(
+        body, (cache, dec0.s, dec0.ptr, tok), t0 + jnp.arange(n))
+    return cache, tok, sym.T, probes   # sym (lanes, n), probes (n, lanes)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "n_symbols", "prob_bits", "topk",
+                                    "interpret"))
+def _lm_decompress_fused(params, cfg: ModelConfig, enc: coder.EncodedLanes,
+                         n_symbols: int, prob_bits: int, topk: int,
+                         interpret: bool = True):
+    """Monolithic fused decode: whole stream in one traced program."""
+    lanes = enc.buf.shape[0]
+    cache = init_cache(cfg, lanes, n_symbols)
+    tok = jnp.full((lanes, 1), BOS, jnp.int32)
+    _, _, sym, probes = _fused_scan(params, cfg, enc, cache, tok,
+                                    jnp.int32(0), n_symbols, prob_bits,
+                                    topk, interpret)
+    return sym, probes
+
+
+def _lane_mesh_check(mesh, lanes: int) -> bool:
+    """Validate/route a mesh for the fused path (lanes are its parallel
+    axis — decode is sequential over positions).  True = place on mesh;
+    False = degrade to the single-device program (divisibility fallback,
+    same contract as ``parallel.chunked``); wrong-axis meshes raise."""
+    if mesh is None:
+        return False
+    if "lanes" not in mesh.axis_names:
+        raise ValueError(
+            "backend='kernel' (fused) parallelizes over the lane axis: "
+            'pass a ("lanes",) mesh (parallel.chunked.lane_mesh).  Chunk '
+            "meshes place the two-pass kernel replay — use "
+            "backend='two_pass' with a ('chunks',) mesh instead")
+    return lanes > 0 and lanes % mesh.shape["lanes"] == 0
+
+
+def _fused_on_lane_mesh(params, enc, mesh, local_fn):
+    """Shard the fused program over a ``("lanes",)`` mesh.
+
+    Lanes are independent end to end (the model treats lanes as batch, the
+    coder state and byte streams are per-lane), so each device runs the
+    whole fused scan over its local lane slab with zero collectives;
+    ``local_fn(params, enc_local) -> (sym (lanes_loc, T), probes)`` is the
+    single-device program.  Bit-exact vs the unsharded path.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    lane_axis = 0 if enc.buf.ndim == 2 else 1   # EncodedLanes|ChunkedLanes
+    espec = jax.tree.map(lambda _: P(*([None] * lane_axis + ["lanes"])), enc)
+    pspec = jax.tree.map(lambda _: P(), params)
+    probes_spec = P("lanes") if enc.buf.ndim == 3 else P(None, "lanes")
+    return shard_map(local_fn, mesh=mesh, in_specs=(pspec, espec),
+                     out_specs=(P("lanes"), probes_spec),
+                     check_rep=False)(params, enc)
+
+
 def lm_decompress(params, cfg: ModelConfig, enc: coder.EncodedLanes,
                   n_symbols: int, prob_bits: int = C.PROB_BITS,
                   topk: int = 4, backend: str = "coder",
+                  mesh=None,
                   interpret: bool = True, lane_probes: bool = False):
     """Bitstream -> tokens, decoding with model-top-k speculation (T3).
 
     ``backend="coder"`` pops every symbol inside the sequential model scan
-    (the pure-JAX path).  ``backend="kernel"`` is the two-pass serve decode:
-    pass 1 runs the same scan (it must — the model is autoregressive over
-    its own decoded tokens) but *collects* the per-step ``(T, lanes, K)``
-    tables and ``(T, lanes, topk)`` model-top-k candidate planes; pass 2
-    re-decodes the untouched bitstream in ONE Pallas launch with in-kernel
-    candidate speculation.  Both passes consume ``core.search``, so pass 2's
-    symbols and per-lane probe counters are integer-identical to pass 1's —
-    the returned values come from the kernel, making the round-trip against
-    ``lm_compress(backend="kernel")`` a true kernel-datapath round-trip.
+    (the pure-JAX path).  ``backend="kernel"`` is the FUSED serve decode:
+    one traced program (``lax.scan`` carrying model cache + rANS state)
+    whose every step runs the model, the SPC decode fast path, and the
+    per-step Pallas decode kernel — the pure-JAX per-symbol reference scan
+    never executes on this path.  ``backend="two_pass"`` is the retained
+    differential reference: pass 1 runs the pure-JAX scan collecting the
+    per-step ``(T, lanes, K)`` tables and ``(T, lanes, topk)`` candidate
+    planes; pass 2 re-decodes the untouched bitstream in ONE Pallas launch
+    (its reported counters come from the kernel pass ONLY).  All three
+    consume ``core.search``, so symbols and per-lane probe counters are
+    integer-identical across backends.
+
+    ``mesh``: optional ``("lanes",)`` mesh (``parallel.chunked.lane_mesh``)
+    placing the fused program's independent lane axis across devices
+    (``backend="kernel"`` only).
 
     Returns ``(tokens (lanes, T), avg_probes[, per-lane probes])``.
     """
+    if mesh is not None and backend != "kernel":
+        raise ValueError(
+            "mesh= requires backend='kernel': only the fused program has "
+            "an independent (lane) axis to place — the coder and two-pass "
+            "reference paths are single-device")
     if backend == "coder":
         symbols, probes = _lm_decompress_scan(params, cfg, enc, n_symbols,
                                               prob_bits, topk)
@@ -168,7 +296,20 @@ def lm_decompress(params, cfg: ModelConfig, enc: coder.EncodedLanes,
         if lane_probes:
             out = out + (jnp.sum(probes, axis=0),)
         return out
-    if backend != "kernel":
+    if backend == "kernel":
+        if _lane_mesh_check(mesh, enc.buf.shape[0]):
+            def local(params_l, enc_l):
+                return _lm_decompress_fused(params_l, cfg, enc_l, n_symbols,
+                                            prob_bits, topk, interpret)
+            sym, probes = _fused_on_lane_mesh(params, enc, mesh, local)
+        else:
+            sym, probes = _lm_decompress_fused(params, cfg, enc, n_symbols,
+                                               prob_bits, topk, interpret)
+        out = (sym, jnp.mean(probes.astype(jnp.float32)))
+        if lane_probes:
+            out = out + (jnp.sum(probes, axis=0),)
+        return out
+    if backend != "two_pass":
         raise ValueError(f"unknown decode backend {backend!r}")
     from repro.kernels.ops import rans_decode
     _, _, tables, cands = _lm_decompress_scan(params, cfg, enc, n_symbols,
@@ -260,6 +401,42 @@ def _lm_decompress_chunk(params, cfg: ModelConfig, enc: coder.EncodedLanes,
     return out
 
 
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "n", "prob_bits", "topk",
+                                    "interpret"))
+def _lm_decompress_fused_chunk(params, cfg: ModelConfig,
+                               enc: coder.EncodedLanes, cache, tok, t0,
+                               n: int, prob_bits: int, topk: int,
+                               interpret: bool = True):
+    """Fused decode of one chunk (positions [t0, t0+n)), carried cache."""
+    return _fused_scan(params, cfg, enc, cache, tok, t0, n, prob_bits,
+                       topk, interpret)
+
+
+def _fused_chunked_local(params, cfg: ModelConfig, chunks: coder.ChunkedLanes,
+                         n_symbols: int, chunk_size: int, prob_bits: int,
+                         topk: int, interpret: bool):
+    """Fused chunked decode over (this device's slab of) the lane axis.
+
+    The rANS state re-initializes per chunk (standalone streams); the model
+    cache and fed-back token carry across chunk boundaries, exactly like the
+    coder path — one fused program per chunk, only that chunk's byte buffer
+    live at a time.  Returns ``(symbols (lanes, T), lane probe sums)``.
+    """
+    lanes = chunks.buf.shape[1]
+    cache = init_cache(cfg, lanes, n_symbols)
+    tok = jnp.full((lanes, 1), BOS, jnp.int32)
+    outs, lane_sum = [], jnp.zeros((lanes,), jnp.int32)
+    for c, n in enumerate(coder.chunk_lengths(n_symbols, chunk_size)):
+        enc = coder.chunk_encoded(chunks, c)
+        cache, tok, sym, probes = _lm_decompress_fused_chunk(
+            params, cfg, enc, cache, tok, jnp.int32(c * chunk_size), n=n,
+            prob_bits=prob_bits, topk=topk, interpret=interpret)
+        outs.append(sym)
+        lane_sum = lane_sum + jnp.sum(probes, axis=0)
+    return jnp.concatenate(outs, axis=1), lane_sum
+
+
 def lm_decompress_chunked(params, cfg: ModelConfig,
                           chunks: coder.ChunkedLanes, n_symbols: int,
                           chunk_size: int, prob_bits: int = C.PROB_BITS,
@@ -275,38 +452,64 @@ def lm_decompress_chunked(params, cfg: ModelConfig,
     ``backend="coder"`` only one chunk's byte buffer is live at a time —
     the streaming-decode shape.
 
-    ``backend="kernel"`` is the chunked two-pass serve decode: pass 1 walks
-    the chunks sequentially as above (the model must see its own decoded
-    tokens) while collecting every chunk's tables and model-top-k candidate
-    planes; pass 2 re-decodes the *entire* chunked stream in ONE Pallas
-    launch — the kernel's chunk grid axis replays every (chunk, lane) cell
-    with in-kernel state reset and candidate speculation.  Returned symbols
-    and probe counters come from the kernel and are integer-identical to
-    pass 1's (both consume ``core.search``).
+    ``backend="kernel"`` is the FUSED chunked serve decode: one fused
+    program per chunk (model step + SPC decode fast path + per-step Pallas
+    kernel, the ``lax.scan`` carrying model cache AND rANS state), cache
+    and token carried across chunk boundaries — the pure-JAX per-symbol
+    reference scan never executes, and it keeps the streaming shape (one
+    chunk's byte buffer live at a time).
 
-    ``mesh`` (kernel backend only): place pass 2 on a ``("chunks",)``
-    device mesh via ``repro.parallel.chunked.decode_chunked`` — the
-    collected candidate planes are cut chunk-major and sharded with the
-    chunk slab, one kernel launch per device.  Per-lane probe counters are
-    not aggregated across devices, so ``lane_probes`` requires
-    ``mesh=None``.
+    ``backend="two_pass"`` is the retained differential reference: pass 1
+    walks the chunks sequentially through the pure-JAX scan (the model must
+    see its own decoded tokens) while collecting every chunk's tables and
+    model-top-k candidate planes; pass 2 re-decodes the *entire* chunked
+    stream in ONE Pallas launch — the kernel's chunk grid axis replays
+    every (chunk, lane) cell with in-kernel state reset and candidate
+    speculation.  Returned symbols and probe counters come from the kernel
+    pass ONLY (pass 1's counters are never accumulated), integer-identical
+    to the other backends (all consume ``core.search``).
+
+    ``mesh``: for ``backend="kernel"`` a ``("lanes",)`` mesh
+    (``parallel.chunked.lane_mesh``) shards the fused program's independent
+    lane axis — decode is sequential over chunks, so the chunk axis cannot
+    shard the fused path.  For ``backend="two_pass"`` a ``("chunks",)``
+    mesh places pass 2 via ``repro.parallel.chunked.decode_chunked`` (the
+    collected candidate planes shard chunk-major with the stream slab);
+    per-lane counters are not aggregated across chunk shards, so
+    ``lane_probes`` there requires ``mesh=None``.
 
     Returns ``(tokens (lanes, T), avg_probes[, per-lane probes])``.
     """
-    if backend not in ("coder", "kernel"):
+    if backend not in ("coder", "kernel", "two_pass"):
         raise ValueError(f"unknown decode backend {backend!r}")
-    if mesh is not None and backend != "kernel":
+    if mesh is not None and backend == "coder":
         raise ValueError(
-            "mesh= requires backend='kernel': the coder backend decodes "
-            "inside the sequential model scan (pass 1 IS the decode), so "
-            "there is no pass 2 to place on a device mesh")
+            "mesh= requires backend='kernel' or 'two_pass': the coder "
+            "backend decodes inside the sequential model scan, so there is "
+            "neither a fused program nor a pass 2 to place on a mesh")
     lanes = chunks.buf.shape[1]
     n_total = coder.num_chunks(n_symbols, chunk_size)
     if chunks.buf.shape[0] != n_total:
         raise ValueError(
             f"stream has {chunks.buf.shape[0]} chunks but n_symbols="
             f"{n_symbols} at chunk_size={chunk_size} implies {n_total}")
-    collect = backend == "kernel"
+    if backend == "kernel":
+        if _lane_mesh_check(mesh, lanes):
+            def local(params_l, chunks_l):
+                return _fused_chunked_local(params_l, cfg, chunks_l,
+                                            n_symbols, chunk_size,
+                                            prob_bits, topk, interpret)
+            sym, lane_sum = _fused_on_lane_mesh(params, chunks, mesh, local)
+        else:
+            sym, lane_sum = _fused_chunked_local(
+                params, cfg, chunks, n_symbols, chunk_size, prob_bits,
+                topk, interpret)
+        out = (sym, jnp.sum(lane_sum.astype(jnp.float32))
+               / (lanes * n_symbols))
+        if lane_probes:
+            out = out + (lane_sum,)
+        return out
+    collect = backend == "two_pass"
     cache = init_cache(cfg, lanes, n_symbols)
     tok = jnp.full((lanes, 1), BOS, jnp.int32)
     outs, lane_sum, planes = [], jnp.zeros((lanes,), jnp.int32), []
@@ -316,10 +519,14 @@ def lm_decompress_chunked(params, cfg: ModelConfig,
             params, cfg, enc, cache, tok, jnp.int32(c * chunk_size), n=n,
             prob_bits=prob_bits, topk=topk, collect_planes=collect)
         cache, tok, sym, probes = res[:4]
-        outs.append(sym)
-        lane_sum = lane_sum + probes
         if collect:
+            # two-pass probe purity: pass-1 counters are NEVER accumulated —
+            # the reported Fig. 4(b) accounting comes from the kernel pass
+            # only (and pass-1 symbols are likewise discarded)
             planes.append(res[4:])
+        else:
+            outs.append(sym)
+            lane_sum = lane_sum + probes
     if collect:
         tables = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0),
                               *[p[0] for p in planes])

@@ -25,13 +25,18 @@ def make_serve_step(cfg: ModelConfig):
     return serve_step
 
 
-def prefill(params, cfg: ModelConfig, tokens: jax.Array,
-            max_len: int, memory: jax.Array | None = None):
-    """Teacher-forced scan of decode_step over the prompt.
+def teacher_forced_scan(params, cfg: ModelConfig, tokens: jax.Array,
+                        max_len: int, memory: jax.Array | None = None,
+                        step_fn=None):
+    """Scan ``decode_step`` over ``tokens`` (B, S), teacher-forced.
 
-    Returns (cache, last_logits).  Using the decode path for prefill keeps
-    serving numerics identical to stepwise decode — the property LM-driven
-    lossless compression depends on (serve/compress.py).
+    The single shared teacher-forced core of the serve layer: ``prefill``
+    consumes it for generation, and ``serve.compress.collect_tables``
+    consumes it to drive the SPC (so the cache evolution that prices the
+    bitstream is the *same code* that serves the model — the determinism
+    contract of LM-driven lossless compression).  ``step_fn(logits, t)``
+    optionally maps each step's logits before stacking; default stacks the
+    raw logits.  Returns ``(cache, stacked outputs)``.
     """
     b, s = tokens.shape
     cache = init_cache(cfg, b, max_len)
@@ -40,16 +45,34 @@ def prefill(params, cfg: ModelConfig, tokens: jax.Array,
         cache = carry
         lg, cache = decode_step(params, cache, tokens[:, t][:, None],
                                 t, cfg, memory=memory)
-        return cache, lg
+        return cache, (lg if step_fn is None else step_fn(lg, t))
 
-    cache, all_logits = jax.lax.scan(body, cache, jnp.arange(s))
+    return jax.lax.scan(body, cache, jnp.arange(s))
+
+
+def prefill(params, cfg: ModelConfig, tokens: jax.Array,
+            max_len: int, memory: jax.Array | None = None):
+    """Teacher-forced scan of decode_step over the prompt.
+
+    Returns (cache, last_logits).  Using the decode path for prefill keeps
+    serving numerics identical to stepwise decode — the property LM-driven
+    lossless compression depends on (serve/compress.py).
+    """
+    cache, all_logits = teacher_forced_scan(params, cfg, tokens, max_len,
+                                            memory)
     return cache, all_logits[-1]
 
 
 def generate(params, cfg: ModelConfig, prompt: jax.Array, n_new: int,
              max_len: int, memory: jax.Array | None = None,
-             temperature: float = 0.0, key: jax.Array | None = None):
-    """Greedy (or sampled) generation; returns (B, n_new) new tokens."""
+             temperature: float = 0.0, key: jax.Array | None = None,
+             return_logits: bool = False):
+    """Greedy (or sampled) generation; returns (B, n_new) new tokens.
+
+    ``return_logits``: also return the per-step logits ``(B, n_new, Vpad)``
+    that produced each token — the testable position contract (a cache
+    off-by-one perturbs logits long before it flips an argmax).
+    """
     b, s = prompt.shape
     cache, last = prefill(params, cfg, prompt, max_len, memory)
 
@@ -65,10 +88,17 @@ def generate(params, cfg: ModelConfig, prompt: jax.Array, n_new: int,
         lg, cache = decode_step(params, cache, tok[:, None], s + i, cfg,
                                 memory=memory)
         nxt = pick(lg, sub)
-        return (cache, nxt, k), nxt
+        return (cache, nxt, k), (nxt, lg)
 
     k0 = key if key is not None else jax.random.PRNGKey(0)
     first = pick(last, k0)
-    (_, _, _), rest = jax.lax.scan(
-        body, (cache, first, k0), jnp.arange(1, n_new))
-    return jnp.concatenate([first[:, None], rest.T], axis=1)
+    # prefill consumed positions [0, s), so the first generated token is
+    # consumed at position s: scan i = 0..n_new-2 (NOT 1..n_new-1, which
+    # would skip cache slot s and attend over a never-written row)
+    (_, _, _), (rest, lgs) = jax.lax.scan(
+        body, (cache, first, k0), jnp.arange(n_new - 1))
+    out = jnp.concatenate([first[:, None], rest.T], axis=1)
+    if return_logits:
+        logits = jnp.concatenate([last[:, None], lgs.swapaxes(0, 1)], axis=1)
+        return out, logits
+    return out

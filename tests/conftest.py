@@ -37,6 +37,22 @@ import jax.numpy as jnp  # noqa: E402  (after backend pinning)
 from repro.core import spc  # noqa: E402
 
 
+@pytest.fixture(autouse=True, scope="module")
+def _release_jax_executables_per_module():
+    """Drop in-process jit caches at module teardown.
+
+    The suite compiles hundreds of executables (the fused serve-decode
+    scans are large); keeping every one mapped for the whole session can
+    exhaust process code-mapping resources and segfault XLA's compiler
+    late in the run on small CI hosts.  Compiled artifacts persist in the
+    on-disk cache above, so cross-module re-compiles stay cheap — this
+    only bounds *live* executables, trading a little cache-lookup time
+    for a flat memory-map profile.
+    """
+    yield
+    jax.clear_caches()
+
+
 def _build_case(seed, k, lanes, t, conc):
     rng = np.random.default_rng(seed)
     tbl = spc.tables_from_probs(

@@ -256,6 +256,7 @@ def test_shard_map_kernel_backend_matches_coder(case):
         pchunked.decode_chunked(ch, T, tbl, 17, backend="nope")
 
 
+@pytest.mark.slow
 def test_shard_map_candidate_planes_parity(case):
     """Model-top-k candidate planes shard with the chunk slab (ISSUE 5
     satellite): ``parallel.decode_chunked(candidates=...)`` matches

@@ -65,11 +65,12 @@ def test_lm_compress_chunked_kernel_backend_bit_exact(params):
 
 
 def test_lm_decompress_kernel_backend_bit_exact(params):
-    """The two-pass serve kernel decode: lm_decompress(backend="kernel")
+    """The FUSED serve decode: lm_decompress(backend="kernel") — one traced
+    program of model step + SPC decode fast path + per-step Pallas kernel —
     round-trips lm_compress(backend="kernel") bit-exactly, with per-lane
-    probe counters integer-identical to backend="coder" (both passes and
-    both backends consume core.search, so the model-top-k candidate planes
-    charge the canonical Fig. 4(b) accounting in-kernel)."""
+    probe counters integer-identical to backend="coder" (all backends
+    consume core.search, so the model-top-k candidate planes charge the
+    canonical Fig. 4(b) accounting in-kernel)."""
     from repro.serve.compress import lm_decompress
     toks = jnp.asarray(token_stream(CFG.vocab_size, (4, 40), seed=15),
                        jnp.int32)
@@ -90,9 +91,10 @@ def test_lm_decompress_kernel_backend_bit_exact(params):
 
 
 def test_lm_decompress_chunked_kernel_backend_bit_exact(params):
-    """Chunked two-pass serve decode: pass 2 replays ALL chunks in one
-    kernel launch (chunk grid axis) and must match the sequential coder
-    pass symbol-for-symbol and probe-for-probe, ragged tail included."""
+    """Chunked FUSED serve decode: one fused program per chunk with the
+    model cache and token carried across chunk boundaries — must match the
+    sequential coder path symbol-for-symbol and probe-for-probe, ragged
+    tail included."""
     from repro.serve.compress import (lm_compress_chunked,
                                       lm_decompress_chunked)
     toks = jnp.asarray(token_stream(CFG.vocab_size, (2, 40), seed=16),
@@ -112,12 +114,14 @@ def test_lm_decompress_chunked_kernel_backend_bit_exact(params):
                               backend="nope")
 
 
+@pytest.mark.slow
 def test_lm_decompress_chunked_on_mesh(params):
-    """mesh= places pass 2 on the ("chunks",) mesh via
-    parallel.chunked.decode_chunked — the collected candidate planes shard
-    with the chunk slab; symbols and probe averages match the no-mesh
-    kernel path (ISSUE 5 satellite: candidates through the sharded path)."""
-    from repro.parallel.chunked import chunk_mesh
+    """Mesh placement of both kernel decode flavours: backend="two_pass"
+    puts pass 2 on the ("chunks",) mesh via parallel.chunked.decode_chunked
+    (candidate planes shard with the chunk slab); backend="kernel" (fused)
+    shards its independent lane axis on a ("lanes",) mesh.  Symbols and
+    probe averages match the no-mesh paths; mis-matched mesh kinds raise."""
+    from repro.parallel.chunked import chunk_mesh, lane_mesh
     from repro.serve.compress import (lm_compress_chunked,
                                       lm_decompress_chunked)
     toks = jnp.asarray(token_stream(CFG.vocab_size, (2, 32), seed=17),
@@ -125,19 +129,88 @@ def test_lm_decompress_chunked_on_mesh(params):
     st = lm_compress_chunked(params, CFG, toks, chunk_size=16,
                              backend="kernel")   # 2 aligned chunks
     d0, a0 = lm_decompress_chunked(params, CFG, st.chunks, 32, 16,
-                                   backend="kernel")
+                                   backend="two_pass")
     dm, am = lm_decompress_chunked(params, CFG, st.chunks, 32, 16,
-                                   backend="kernel", mesh=chunk_mesh())
+                                   backend="two_pass", mesh=chunk_mesh())
     np.testing.assert_array_equal(np.asarray(dm), np.asarray(toks))
     np.testing.assert_array_equal(np.asarray(d0), np.asarray(dm))
     assert abs(float(a0) - float(am)) < 1e-5
+    df, af = lm_decompress_chunked(params, CFG, st.chunks, 32, 16,
+                                   backend="kernel", mesh=lane_mesh())
+    np.testing.assert_array_equal(np.asarray(df), np.asarray(toks))
+    assert abs(float(a0) - float(af)) < 1e-5
     with pytest.raises(ValueError, match="lane_probes"):
         lm_decompress_chunked(params, CFG, st.chunks, 32, 16,
-                              backend="kernel", mesh=chunk_mesh(),
+                              backend="two_pass", mesh=chunk_mesh(),
                               lane_probes=True)
+    with pytest.raises(ValueError, match="lanes"):
+        lm_decompress_chunked(params, CFG, st.chunks, 32, 16,
+                              backend="kernel", mesh=chunk_mesh())
     with pytest.raises(ValueError, match="mesh"):
         lm_decompress_chunked(params, CFG, st.chunks, 32, 16,
                               backend="coder", mesh=chunk_mesh())
+
+
+def _teacher_tables_cands(params, cfg, toks, topk):
+    """Independent reference: teacher-forced tables + top-k candidate planes
+    rebuilt outside serve.compress's decode paths."""
+    from repro.core import constants as C
+    from repro.core.predictors import model_topk_candidates
+    from repro.serve.compress import BOS, _step_tables
+    from repro.serve.engine import teacher_forced_scan
+    lanes, t = toks.shape
+    inputs = jnp.concatenate(
+        [jnp.full((lanes, 1), BOS, jnp.int32), toks[:, :-1]], axis=1)
+
+    def per_step(lg, _):
+        return (_step_tables(lg, cfg.vocab_size, C.PROB_BITS),
+                model_topk_candidates(lg[:, :cfg.vocab_size], topk))
+
+    _, (tables, cands) = teacher_forced_scan(params, cfg, inputs, t,
+                                             step_fn=per_step)
+    return tables, cands
+
+
+def test_two_pass_lane_probes_are_kernel_pure(params):
+    """Regression: backend="two_pass" lane_probes must come from the kernel
+    replay ONLY — integer-identical to coder.decode(candidates=...) on the
+    same tables/planes.  The historical bug accumulated pass-1 (pure-scan)
+    counters into the reported telemetry, double-charging Fig. 4(b)."""
+    from repro.core import coder
+    toks = jnp.asarray(token_stream(CFG.vocab_size, (4, 40), seed=19),
+                       jnp.int32)
+    stats = lm_compress(params, CFG, toks)
+    tables, cands = _teacher_tables_cands(params, CFG, toks, topk=4)
+    rs, ra, rl = coder.decode(stats.enc, 40, tables, candidates=cands,
+                              lane_probes=True)
+    sym, avg, lane = lm_decompress(params, CFG, stats.enc, 40,
+                                   backend="two_pass", lane_probes=True)
+    np.testing.assert_array_equal(np.asarray(sym), np.asarray(toks))
+    np.testing.assert_array_equal(np.asarray(rs), np.asarray(sym))
+    np.testing.assert_array_equal(np.asarray(rl), np.asarray(lane))
+    assert abs(float(ra) - float(avg)) < 1e-6
+
+
+def test_two_pass_chunked_lane_probes_are_kernel_pure(params):
+    """Chunked analogue: pass 1 walks every chunk through the pure scan, so
+    a purity bug there inflates counters chunk by chunk; the reported
+    per-lane counters must equal coder.decode_chunked(candidates=...)."""
+    from repro.core import coder
+    from repro.serve.compress import (lm_compress_chunked,
+                                      lm_decompress_chunked)
+    toks = jnp.asarray(token_stream(CFG.vocab_size, (2, 40), seed=20),
+                       jnp.int32)
+    st = lm_compress_chunked(params, CFG, toks, chunk_size=16)  # ragged 8
+    tables, cands = _teacher_tables_cands(params, CFG, toks, topk=4)
+    rs, ra, rl = coder.decode_chunked(st.chunks, 40, tables, 16,
+                                      candidates=cands, lane_probes=True)
+    sym, avg, lane = lm_decompress_chunked(params, CFG, st.chunks, 40, 16,
+                                           backend="two_pass",
+                                           lane_probes=True)
+    np.testing.assert_array_equal(np.asarray(sym), np.asarray(toks))
+    np.testing.assert_array_equal(np.asarray(rs), np.asarray(sym))
+    np.testing.assert_array_equal(np.asarray(rl), np.asarray(lane))
+    assert abs(float(ra) - float(avg)) < 1e-6
 
 
 def test_lm_compress_chunked_overflow_parity(params):

@@ -1,0 +1,125 @@
+"""Serve engine (prefill / generate) regression tests.
+
+The engine drove the model zoo since the seed but was only shape/determinism
+tested, so a position off-by-one in ``generate`` rotted silently: prefill
+consumes prompt positions ``[0, s)``, yet the generation scan consumed the
+first sampled token at position ``s + 1`` — cache slot ``s`` was never
+written and every subsequent step attended over a zero row.  The manual
+per-step rollout below pins the position contract exactly; the round-trip
+test pins the engine into the compression stack (one shared cache
+evolution — ``serve.engine.teacher_forced_scan`` backs both).
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.data.pipeline import token_stream
+from repro.models import init_model
+from repro.models.transformer import decode_step, init_cache
+from repro.serve.engine import generate, prefill, teacher_forced_scan
+
+jax.config.update("jax_platforms", "cpu")
+
+CFG = get_smoke_config("ras-pimc")
+KEY = jax.random.PRNGKey(2)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_model(CFG, KEY)
+
+
+def _manual_greedy(params, cfg, prompt, n_new, max_len):
+    """Explicit per-step greedy rollout: the position-contract reference.
+
+    Returns (tokens (B, n_new), logits (B, n_new, Vpad)) — the logits that
+    produced each token, computed with an unrolled python loop where every
+    ``decode_step`` position is written out literally.
+    """
+    b, s = prompt.shape
+    cache = init_cache(cfg, b, max_len)
+    lg = None
+    for t in range(s):
+        lg, cache = decode_step(params, cache, prompt[:, t][:, None], t, cfg)
+    out, lgs = [], []
+    for i in range(n_new):
+        lgs.append(lg)
+        nxt = jnp.argmax(lg[:, :cfg.vocab_size], -1).astype(jnp.int32)
+        out.append(nxt)
+        if i + 1 < n_new:
+            lg, cache = decode_step(params, cache, nxt[:, None], s + i, cfg)
+    return jnp.stack(out, axis=1), jnp.stack(lgs, axis=1)
+
+
+def test_generate_matches_manual_rollout(params):
+    """generate == the explicit rollout, token for token AND logit for logit.
+
+    This is the regression the old shape-only tests missed: the first
+    generated token must be consumed at position ``s`` (the slot right
+    after the prompt), not ``s + 1``.  The logits assertion is the teeth —
+    on a smoke-sized model the off-by-one perturbs every post-first-step
+    logit by ~3e-2 (slot ``s`` left as an attended-over zero row) without
+    necessarily flipping any argmax, so token equality alone would pass on
+    the broken code.
+    """
+    prompt = jnp.asarray(token_stream(CFG.vocab_size, (2, 12), seed=5),
+                         jnp.int32)
+    out, lgs = generate(params, CFG, prompt, 8, max_len=32,
+                        return_logits=True)
+    ref, ref_lgs = _manual_greedy(params, CFG, prompt, 8, 32)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    np.testing.assert_allclose(np.asarray(lgs), np.asarray(ref_lgs),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.slow
+def test_generate_matches_manual_rollout_windowed():
+    """Same contract on a ring-buffered (windowed/recurrent) cache, where a
+    skipped slot additionally corrupts the ring arithmetic."""
+    cfg = get_smoke_config("recurrentgemma-2b")
+    params = init_model(cfg, KEY)
+    prompt = jnp.asarray(token_stream(cfg.vocab_size, (2, 10), seed=6),
+                         jnp.int32)
+    out, lgs = generate(params, cfg, prompt, 6, max_len=24,
+                        return_logits=True)
+    ref, ref_lgs = _manual_greedy(params, cfg, prompt, 6, 24)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    np.testing.assert_allclose(np.asarray(lgs), np.asarray(ref_lgs),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_teacher_forced_scan_backs_prefill(params):
+    """prefill is the shared teacher-forced scan's last step, and the
+    step_fn hook maps per-step logits without disturbing the cache."""
+    toks = jnp.asarray(token_stream(CFG.vocab_size, (3, 9), seed=7),
+                       jnp.int32)
+    cache_a, last = prefill(params, CFG, toks, max_len=16)
+    cache_b, all_lg = teacher_forced_scan(params, CFG, toks, 16)
+    np.testing.assert_array_equal(np.asarray(last), np.asarray(all_lg[-1]))
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), cache_a, cache_b)
+    _, picked = teacher_forced_scan(
+        params, CFG, toks, 16,
+        step_fn=lambda lg, t: jnp.argmax(lg[:, :CFG.vocab_size], -1))
+    np.testing.assert_array_equal(
+        np.asarray(picked[-1]),
+        np.asarray(jnp.argmax(last[:, :CFG.vocab_size], -1)))
+
+
+def test_generate_then_fused_compress_roundtrip(params):
+    """Engine output round-trips through the serve compression stack: the
+    tokens generate produced compress and fused-decode bit-exactly (the
+    engine and compressor share one cache evolution via
+    teacher_forced_scan, so this is a true end-to-end serving loop)."""
+    from repro.serve.compress import lm_compress, lm_decompress
+    prompt = jnp.asarray(token_stream(CFG.vocab_size, (2, 8), seed=8),
+                         jnp.int32)
+    out = generate(params, CFG, prompt, 8, max_len=16)
+    toks = jnp.concatenate([prompt, out], axis=1)
+    stats = lm_compress(params, CFG, toks)
+    dec, _ = lm_decompress(params, CFG, stats.enc, toks.shape[1],
+                           backend="kernel")
+    np.testing.assert_array_equal(np.asarray(dec), np.asarray(toks))
