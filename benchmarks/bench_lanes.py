@@ -1,39 +1,123 @@
 """Multi-lane scaling (paper Sec. III: 'a simple multi-lane fabric ...
-scales throughput'): encode+decode throughput vs lane count."""
+scales throughput'): encode+decode throughput vs lane count, on BOTH
+coder backends and through the v2 container round trip.
+
+    PYTHONPATH=src python -m benchmarks.bench_lanes [--out BENCH_lanes.json]
+
+Per lane count the sweep encodes one chunked stream with the pure-JAX lane
+coder and the fused Pallas kernel (asserted byte-identical), packs it into
+the v2 container, and decodes it back two ways — the coder backend from the
+host-unpacked dense slab and the kernel backend ZERO-COPY from the packed
+payload (``from_container``) — asserting symbol identity throughout.
+Kernel timings run the Pallas *interpreter* on CPU (see bench_speed), so
+the scaling curve that matters for the paper claim is the coder one; the
+kernel columns are the tracked bit-exactness seal + shape baseline.
+"""
 
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import coder, spc
+from repro.core import bitstream, coder, spc
 from repro.data.pipeline import image_rows
 
 
-def run(t: int = 1024, lane_counts=(8, 32, 128, 512), seed: int = 0):
+def _timed(fn, *args):
+    out = fn(*args)
+    jax.block_until_ready(jax.tree.leaves(out)[0])
+    t0 = time.perf_counter()
+    out = fn(*args)
+    jax.block_until_ready(jax.tree.leaves(out)[0])
+    return time.perf_counter() - t0, out
+
+
+def run(t: int = 1024, lane_counts=(8, 32, 128), chunk_size: int = 256,
+        seed: int = 0, kernel: bool = True) -> list[dict]:
     counts = np.bincount(image_rows(8, 4096, seed=seed).ravel(),
                          minlength=256)
     tbl = jax.tree.map(jnp.asarray, spc.tables_from_counts_np(counts))
-    out = {}
+    points = []
     for lanes in lane_counts:
-        rows = jnp.asarray(image_rows(lanes, t, seed=seed), jnp.int32)
-        enc_fn = jax.jit(lambda s: coder.encode(s, tbl))
-        enc = enc_fn(rows)
-        jax.block_until_ready(enc.buf)
-        t0 = time.perf_counter()
-        enc = enc_fn(rows)
-        jax.block_until_ready(enc.buf)
-        dt = time.perf_counter() - t0
-        out[lanes] = lanes * t / dt / 1e6  # Msym/s
-    return out
+        rows = image_rows(lanes, t, seed=seed)
+        syms = jnp.asarray(rows, jnp.int32)
+
+        enc_dt, ch = _timed(
+            jax.jit(lambda s: coder.encode_chunked(s, tbl, chunk_size)),
+            syms)
+        dec_dt, (dec, _) = _timed(
+            jax.jit(lambda c: coder.decode_chunked(c, t, tbl, chunk_size)),
+            ch)
+        assert np.array_equal(np.asarray(dec), rows)
+
+        point = {
+            "lanes": int(lanes), "n_symbols": t, "chunk_size": chunk_size,
+            "coder_encode_Msym_s": lanes * t / enc_dt / 1e6,
+            "coder_decode_Msym_s": lanes * t / dec_dt / 1e6,
+            "kernel_encode_Msym_s": None,
+            "kernel_decode_zero_copy_Msym_s": None,
+            "container_bytes": None,
+            "backends_byte_identical": None,
+        }
+
+        if kernel:
+            from repro.kernels import ops
+            kenc_dt, kch = _timed(
+                lambda s: ops.rans_encode_chunked(s, tbl, chunk_size), syms)
+            for a, b in zip(ch, kch):
+                assert np.array_equal(np.asarray(a), np.asarray(b)), (
+                    f"lanes={lanes}: kernel/coder streams diverge")
+            blob = bitstream.pack_chunked(
+                np.asarray(kch.buf), np.asarray(kch.start),
+                np.asarray(kch.length), np.asarray(kch.overflow),
+                chunk_size=chunk_size, n_symbols=t)
+            cs = bitstream.parse_chunked(blob)
+            kdec_dt, (kdec, _) = _timed(
+                lambda c: ops.rans_decode_chunked(
+                    n_symbols=t, tbl=tbl, chunk_size=chunk_size,
+                    from_container=c), cs)
+            assert np.array_equal(np.asarray(kdec), rows), (
+                f"lanes={lanes}: zero-copy container decode diverges")
+            point.update({
+                "kernel_encode_Msym_s": lanes * t / kenc_dt / 1e6,
+                "kernel_decode_zero_copy_Msym_s": lanes * t / kdec_dt / 1e6,
+                "container_bytes": len(blob),
+                "backends_byte_identical": True,
+            })
+        points.append(point)
+    return points
 
 
 def main(emit):
-    r = run()
-    base = r[min(r)]
-    for lanes, msps in sorted(r.items()):
-        emit(f"lanes_{lanes}_throughput_Msym_s", msps,
-             f"scaling x{msps/base:.1f} vs {min(r)} lanes")
+    pts = run()
+    base = pts[0]
+    for p in pts:
+        emit(f"lanes_{p['lanes']}_encode_Msym_s", p["coder_encode_Msym_s"],
+             f"scaling x{p['coder_encode_Msym_s']/base['coder_encode_Msym_s']:.1f} "
+             f"vs {base['lanes']} lanes")
+        emit(f"lanes_{p['lanes']}_decode_Msym_s", p["coder_decode_Msym_s"],
+             f"zero-copy kernel decode byte-identical="
+             f"{p['backends_byte_identical']}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_lanes.json")
+    args = ap.parse_args()
+    pts = run()
+    with open(args.out, "w") as f:
+        json.dump(pts, f, indent=2)
+    for p in pts:
+        print(f"lanes={p['lanes']}: coder enc "
+              f"{p['coder_encode_Msym_s']:.2f} / dec "
+              f"{p['coder_decode_Msym_s']:.2f} Msym/s, kernel enc "
+              f"{p['kernel_encode_Msym_s']:.2f} / zero-copy dec "
+              f"{p['kernel_decode_zero_copy_Msym_s']:.2f} Msym/s "
+              f"(container {p['container_bytes']} B, "
+              f"byte-identical={p['backends_byte_identical']})")
+    print(f"wrote {len(pts)} points -> {args.out}")

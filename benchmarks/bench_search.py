@@ -73,6 +73,26 @@ def run(lanes: int = 64, t: int = 2048, seed: int = 0,
     return points
 
 
+def _decode_stream_hbm_bytes(n_chunks: int, lanes: int, cap: int,
+                             payload_bytes: int, index_bytes: int) -> dict:
+    """Analytic decode-side HBM stream traffic: host-gather vs zero-copy.
+
+    Host-gather reference (``bitstream.unpack_chunked``): the packed payload
+    is read once on the host, right-aligned into a dense
+    ``(n_chunks, lanes, cap)`` stream slab that is then written to device
+    and read back by the kernel — every encoded byte crosses memory ~3x
+    and every *pad* byte of the dense slab crosses twice.  Zero-copy
+    (``from_container``): the slab ships once as-is plus the small
+    (offset, length) index planes; the kernel DMAs each window straight
+    out of it (DESIGN.md §10).
+    """
+    dense = n_chunks * lanes * cap
+    return {
+        "hostgather_stream_hbm_bytes": payload_bytes + 2 * dense,
+        "zerocopy_stream_hbm_bytes": payload_bytes + index_bytes,
+    }
+
+
 def run_decode_sweep(lanes: int = 8, t: int = 256, seed: int = 1,
                      chunk_size: int = 48, topks=(0, 4),
                      hit_rate: float = 0.8) -> list[dict]:
@@ -82,7 +102,15 @@ def run_decode_sweep(lanes: int = 8, t: int = 256, seed: int = 1,
     byte-identical symbols + integer-identical per-lane probe counters;
     the emitted rows carry one mean-probe number per point (they are the
     same counters on both backends by construction).
+
+    Chunked points additionally round-trip the stream through the v2
+    container and decode it a third time ZERO-COPY from the packed slab
+    (``from_container``), asserting symbol/probe identity with the dense
+    kernel decode, and report the decode-side bytes-moved ledger
+    (``{hostgather,zerocopy}_stream_hbm_bytes`` — the PR 5 encode ledger's
+    decode mirror, DESIGN.md §10).
     """
+    from repro.core import bitstream
     rng = np.random.default_rng(seed)
     k = 256
     rows = image_rows(lanes, t, seed=seed)
@@ -125,11 +153,38 @@ def run_decode_sweep(lanes: int = 8, t: int = 256, seed: int = 1,
             assert np.array_equal(np.asarray(csym), rows)
             assert np.array_equal(np.asarray(cl), np.asarray(kl)), (
                 f"{layout} topk={topk}: probe counters diverge")
+            ledger = {"hostgather_stream_hbm_bytes": None,
+                      "zerocopy_stream_hbm_bytes": None,
+                      "stream_hbm_bytes_saved": None,
+                      "container_zero_copy_identical": None}
+            if chunked:
+                blob = bitstream.pack_chunked(
+                    np.asarray(stream.buf), np.asarray(stream.start),
+                    np.asarray(stream.length), np.asarray(stream.overflow),
+                    chunk_size=chunk_size, n_symbols=t)
+                cs = bitstream.parse_chunked(blob)
+                zsym, zavg, zl = ops.rans_decode_chunked(
+                    n_symbols=t, tbl=tbl, chunk_size=chunk_size,
+                    candidates=cands, lane_probes=True, from_container=cs)
+                assert np.array_equal(np.asarray(zsym), np.asarray(ksym)), (
+                    f"{layout} topk={topk}: zero-copy symbols diverge")
+                assert np.array_equal(np.asarray(zl), np.asarray(kl)), (
+                    f"{layout} topk={topk}: zero-copy probes diverge")
+                n_chunks, cap = stream.buf.shape[0], stream.buf.shape[2]
+                payload = int(np.asarray(stream.length).sum())
+                index = cs.offset.size * 12      # (offset u64, length u32)
+                ledger.update(_decode_stream_hbm_bytes(
+                    n_chunks, lanes, cap, payload, index))
+                ledger["stream_hbm_bytes_saved"] = (
+                    ledger["hostgather_stream_hbm_bytes"]
+                    - ledger["zerocopy_stream_hbm_bytes"])
+                ledger["container_zero_copy_identical"] = True
             points.append({
                 "layout": layout, "topk": topk, "lanes": lanes,
                 "n_symbols": t, "hit_rate": hit_rate if topk else None,
                 "avg_probes": float(np.asarray(cl).sum()) / (lanes * t),
                 "backends_agree": True,
+                **ledger,
             })
     return points
 

@@ -1,8 +1,19 @@
 """SPC conversion cost (Sec. IV-A: single-pass BF16->fixed-point off the
-critical path): batched quantization throughput + table-build latency."""
+critical path): batched quantization throughput + table-build latency,
+pure-JAX vs the Pallas SPC kernel.
+
+    PYTHONPATH=src python -m benchmarks.bench_spc [--out BENCH_spc.json]
+
+Both sides build full TableSets from the same probability batch; the
+frequency planes are asserted integer-identical before any latency is
+reported (the kernel runs the Pallas interpreter on CPU — its wall-clock
+here tracks the interpreter, the identity seal is the point).
+"""
 
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import numpy as np
@@ -12,22 +23,60 @@ import jax.numpy as jnp
 from repro.core import spc
 
 
-def run(batch: int = 256, k: int = 256, seed: int = 0):
+def _timed(fn, arg):
+    out = fn(arg)
+    jax.block_until_ready(jax.tree.leaves(out)[0])
+    t0 = time.perf_counter()
+    out = fn(arg)
+    jax.block_until_ready(jax.tree.leaves(out)[0])
+    return time.perf_counter() - t0, out
+
+
+def run(batch: int = 256, k: int = 256, seed: int = 0,
+        kernel: bool = True) -> dict:
     rng = np.random.default_rng(seed)
     probs = jnp.asarray(rng.dirichlet(np.full(k, 0.5), size=batch),
                         jnp.float32)
-    fn = jax.jit(lambda p: spc.tables_from_probs(p))
-    tbl = fn(probs)
-    jax.block_until_ready(tbl.freq)
-    t0 = time.perf_counter()
-    tbl = fn(probs)
-    jax.block_until_ready(tbl.freq)
-    dt = time.perf_counter() - t0
-    return {"us_per_table": dt / batch * 1e6,
-            "tables_per_s": batch / dt}
+
+    dt, tbl = _timed(jax.jit(lambda p: spc.tables_from_probs(p)), probs)
+    out = {
+        "batch": batch, "k": k,
+        "us_per_table": dt / batch * 1e6,
+        "tables_per_s": batch / dt,
+        "kernel_us_per_table": None,
+        "kernel_freq_identical": None,
+    }
+    if kernel:
+        from repro.kernels import ops
+        kdt, ktbl = _timed(lambda p: ops.spc_quantize_tables(p), probs)
+        assert np.array_equal(np.asarray(tbl.freq), np.asarray(ktbl.freq)), (
+            "kernel SPC frequency planes diverge from the pure-JAX SPC")
+        out.update({
+            "kernel_us_per_table": kdt / batch * 1e6,
+            "kernel_freq_identical": True,
+        })
+    return out
 
 
 def main(emit):
     r = run()
     emit("spc_convert_us_per_table", r["us_per_table"],
-         f"{r['tables_per_s']:.0f} tables/s (K=256, incl. mass correction)")
+         f"{r['tables_per_s']:.0f} tables/s (K={r['k']}, incl. mass "
+         f"correction)")
+    emit("spc_convert_kernel_us_per_table", r["kernel_us_per_table"],
+         f"Pallas SPC kernel (INTERPRET; freq planes "
+         f"identical={r['kernel_freq_identical']})")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_spc.json")
+    args = ap.parse_args()
+    r = run()
+    print(f"pure-JAX: {r['us_per_table']:.1f} us/table "
+          f"({r['tables_per_s']:.0f} tables/s); kernel: "
+          f"{r['kernel_us_per_table']:.1f} us/table, "
+          f"freq-identical={r['kernel_freq_identical']}")
+    with open(args.out, "w") as f:
+        json.dump(r, f, indent=2)
+    print(f"wrote -> {args.out}")

@@ -135,9 +135,18 @@ def run_encode_backends(seed: int = 0) -> list[dict]:
     *interpreter* on CPU (see module docstring).  Each point asserts
     byte-identity between all backends before reporting wall-clock and the
     bytes-moved ledger.
+
+    The fused kernel is timed on BOTH scatter datapaths (DESIGN.md §10):
+    the banked byte-ring (production default — per-byte scatter cost
+    O(ring) with the autotuned ``t_block``) and the one-hot row scatter it
+    replaced (per-byte cost O(cap)).  Each point reports the measured
+    wall-clocks plus the analytic selects-per-byte of both
+    (``scatter_selects_per_byte_{ring,onehot}`` and their ratio
+    ``scatter_cost_reduction`` = cap / ring).
     """
     from repro.core import bitstream
     from repro.kernels import ops
+    from repro.kernels.autotune import ring_size, select_encode_t_block
     from repro.kernels.rans_encode import rans_encode_records
     rng = np.random.default_rng(seed)
 
@@ -171,6 +180,8 @@ def run_encode_backends(seed: int = 0) -> list[dict]:
         if chunk is None:
             coder_fn = jax.jit(lambda s, tb=tbl: coder.encode(s, tb))
             kern_fn = lambda s, tb=tbl: ops.rans_encode(s, tb)  # noqa: E731
+            onehot_fn = (lambda s, tb=tbl:
+                         ops.rans_encode(s, tb, scatter="onehot"))
 
             def rec_fn(s, tb=tbl, cp=cap):
                 b, m, st = rans_encode_records(s, tb)
@@ -180,6 +191,8 @@ def run_encode_backends(seed: int = 0) -> list[dict]:
                         coder.encode_chunked(s, tb, c))
             kern_fn = (lambda s, tb=tbl, c=chunk:
                        ops.rans_encode_chunked(s, tb, c))
+            onehot_fn = (lambda s, tb=tbl, c=chunk:
+                         ops.rans_encode_chunked(s, tb, c, scatter="onehot"))
 
             def rec_fn(s, tb=tbl, c=chunk, cp=cap):
                 b, m, st = rans_encode_records(s, tb, chunk_size=c)
@@ -188,14 +201,24 @@ def run_encode_backends(seed: int = 0) -> list[dict]:
                     bitstream.compact_records(bb, mm, ss, cp))(b, m, st)
         c_us, c_out = _timed_encode(coder_fn, syms)
         k_us, k_out = _timed_encode(kern_fn, syms)
+        o_us, o_out = _timed_encode(onehot_fn, syms)
         r_us, r_out = _timed_encode(rec_fn, syms)
         for a, b in zip(c_out, k_out):
             assert np.array_equal(np.asarray(a), np.asarray(b)), (
                 f"{name}: fused kernel streams diverge from the coder")
+        for a, b in zip(o_out, k_out):
+            assert np.array_equal(np.asarray(a), np.asarray(b)), (
+                f"{name}: one-hot scatter streams diverge from the ring")
         for a, b in zip(r_out, k_out):
             assert np.array_equal(np.asarray(a), np.asarray(b)), (
                 f"{name}: records-path streams diverge from the fused path")
         moved = _encode_stream_hbm_bytes(lanes, t, chunk, cap)
+        # the autotuned blocking the default ring path actually ran with
+        layout = {1: "static", 2: "perpos", 3: "lane"}[tbl.freq.ndim]
+        eff_chunk = t if chunk is None else min(chunk, t)
+        ring_tb = select_encode_t_block(eff_chunk, cap, min(lanes, 128),
+                                        int(tbl.freq.shape[-1]), layout)
+        ring = ring_size(ring_tb)
         points.append({
             "name": name, "lanes": lanes,
             "n_symbols": t,
@@ -203,9 +226,17 @@ def run_encode_backends(seed: int = 0) -> list[dict]:
             "cap": cap,
             "coder_us_per_symbol": c_us * 1e6,
             # the fused (production) kernel datapath — field name kept from
-            # the PR 3 sweep so dashboards diff across PRs
+            # the PR 3 sweep so dashboards diff across PRs; since the
+            # banked-ring PR this is the ring-scatter path
             "kernel_interpret_us_per_symbol": k_us * 1e6,
+            "kernel_onehot_us_per_symbol": o_us * 1e6,
             "kernel_records_us_per_symbol": r_us * 1e6,
+            "ring_t_block": ring_tb,
+            "ring_size": ring,
+            "scatter_selects_per_byte_ring": ring,
+            "scatter_selects_per_byte_onehot": cap,
+            "scatter_cost_reduction": cap / ring,
+            "ring_vs_onehot_speedup": o_us / k_us,
             **moved,
             "stream_hbm_bytes_saved": (moved["records_stream_hbm_bytes"]
                                        - moved["fused_stream_hbm_bytes"]),
@@ -235,6 +266,12 @@ def main(emit):
         emit(f"encode_backend_{p['name']}_kernel_records",
              p["kernel_records_us_per_symbol"],
              "us/symbol, records kernel + host compact_records (reference)")
+        emit(f"encode_backend_{p['name']}_ring_speedup",
+             p["ring_vs_onehot_speedup"],
+             f"banked-ring vs one-hot scatter (selects/byte "
+             f"{p['scatter_selects_per_byte_onehot']} -> "
+             f"{p['scatter_selects_per_byte_ring']}, "
+             f"t_block={p['ring_t_block']})")
         emit(f"encode_backend_{p['name']}_hbm_saved",
              p["stream_hbm_bytes_saved"],
              f"stream HBM bytes saved by fused compaction "
@@ -251,9 +288,13 @@ if __name__ == "__main__":
         json.dump(pts, f, indent=2)
     for p in pts:
         print(f"{p['name']}: coder {p['coder_us_per_symbol']:.3f} us/sym, "
-              f"kernel-fused {p['kernel_interpret_us_per_symbol']:.3f} "
-              f"us/sym, kernel-records "
+              f"kernel-ring {p['kernel_interpret_us_per_symbol']:.3f} "
+              f"us/sym (tb={p['ring_t_block']}, "
+              f"{p['ring_vs_onehot_speedup']:.2f}x vs one-hot "
+              f"{p['kernel_onehot_us_per_symbol']:.3f}), kernel-records "
               f"{p['kernel_records_us_per_symbol']:.3f} us/sym, "
+              f"selects/byte {p['scatter_selects_per_byte_onehot']} -> "
+              f"{p['scatter_selects_per_byte_ring']}, "
               f"stream HBM {p['records_stream_hbm_bytes']} -> "
               f"{p['fused_stream_hbm_bytes']} B "
               f"({p['stream_hbm_bytes_saved']} saved), "

@@ -1,0 +1,110 @@
+"""Ledger sanity gate for the BENCH_*.json artifacts.
+
+    PYTHONPATH=src python -m benchmarks.check_artifacts [paths...]
+
+CI runs this after the bench sweeps so a refactor that silently drops a
+ledger column (or flips an identity seal to False) fails the build instead
+of shipping a hole in the perf trajectory.  With no arguments it checks
+every known artifact present in the working directory; naming paths makes
+missing files an error.
+
+Checked invariants:
+
+* BENCH_encode.json — every point carries the encode bytes-moved ledger
+  (``records_stream_hbm_bytes`` > ``fused_stream_hbm_bytes``, ``saved`` is
+  their difference) and the scatter-cost model
+  (``scatter_selects_per_byte_{onehot,ring}``, pow2 ``ring_size``,
+  consistent ``scatter_cost_reduction``); at least one point must show a
+  measured reduction > 1 and all must seal ``backends_byte_identical``.
+* BENCH_decode.json — at least one chunked point carries the decode mirror
+  ledger (``hostgather_stream_hbm_bytes`` > ``zerocopy_stream_hbm_bytes``,
+  ``stream_hbm_bytes_saved`` consistent) and seals
+  ``container_zero_copy_identical``.
+* BENCH_chunked.json — non-empty sweep with throughput fields on every
+  point.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+
+def _fail(path: str, msg: str) -> None:
+    raise SystemExit(f"{path}: {msg}")
+
+
+def _points(path: str) -> list[dict]:
+    with open(path) as f:
+        pts = json.load(f)
+    if not isinstance(pts, list) or not pts:
+        _fail(path, "expected a non-empty list of point records")
+    return pts
+
+
+def check_encode(path: str) -> str:
+    pts = _points(path)
+    for p in pts:
+        rec, fus = p["records_stream_hbm_bytes"], p["fused_stream_hbm_bytes"]
+        if not (rec > fus and p["stream_hbm_bytes_saved"] == rec - fus):
+            _fail(path, f"{p['name']}: encode bytes-moved ledger inconsistent")
+        ring, cap = p["scatter_selects_per_byte_ring"], \
+            p["scatter_selects_per_byte_onehot"]
+        if ring != p["ring_size"] or ring & (ring - 1):
+            _fail(path, f"{p['name']}: ring_size {ring} not a power of two")
+        if abs(p["scatter_cost_reduction"] - cap / ring) > 1e-9:
+            _fail(path, f"{p['name']}: scatter_cost_reduction != cap/ring")
+        if p["backends_byte_identical"] is not True:
+            _fail(path, f"{p['name']}: byte-identity seal missing")
+    if not any(p["scatter_cost_reduction"] > 1 for p in pts):
+        _fail(path, "no point shows a per-byte scatter-cost reduction > 1")
+    return f"{len(pts)} points, scatter + bytes-moved ledgers consistent"
+
+
+def check_decode(path: str) -> str:
+    pts = _points(path)
+    chunked = [p for p in pts
+               if p.get("hostgather_stream_hbm_bytes") is not None]
+    if not chunked:
+        _fail(path, "no chunked point carries the decode stream ledger")
+    for p in chunked:
+        host, zero = p["hostgather_stream_hbm_bytes"], \
+            p["zerocopy_stream_hbm_bytes"]
+        if not (host > zero
+                and p["stream_hbm_bytes_saved"] == host - zero):
+            _fail(path, f"{p['name']}: decode bytes-moved ledger inconsistent")
+        if p["container_zero_copy_identical"] is not True:
+            _fail(path, f"{p['name']}: zero-copy identity seal missing")
+    return (f"{len(chunked)}/{len(pts)} points carry the zero-copy ledger, "
+            f"all sealed identical")
+
+
+def check_chunked(path: str) -> str:
+    pts = _points(path)
+    for p in pts:
+        if not (p["encode_Msym_s"] > 0 and p["decode_Msym_s"] > 0):
+            _fail(path, f"{p['name']}: non-positive throughput")
+    return f"{len(pts)} sweep points"
+
+
+CHECKS = {
+    "BENCH_encode.json": check_encode,
+    "BENCH_decode.json": check_decode,
+    "BENCH_chunked.json": check_chunked,
+}
+
+
+def main(argv: list[str]) -> None:
+    paths = argv or [p for p in CHECKS if os.path.exists(p)]
+    if not paths:
+        _fail("check_artifacts", "no artifacts found and none named")
+    for path in paths:
+        check = CHECKS.get(path.rsplit("/", 1)[-1])
+        if check is None:
+            _fail(path, f"no checker registered (known: {sorted(CHECKS)})")
+        print(f"{path}: OK — {check(path)}")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

@@ -28,6 +28,10 @@ from repro.models.config import ModelConfig
 PEAK_FLOPS = 197e12      # bf16 / chip
 HBM_BW = 819e9           # bytes/s
 LINK_BW = 50e9           # bytes/s per ICI link
+# per-core VMEM: single-sourced from the kernel autotuner so the roofline
+# machine model and the kernels' block-size selection can never disagree
+# (tests pin the re-export; kernels/autotune.py owns the number)
+from repro.kernels.autotune import VMEM_BYTES  # noqa: E402,F401
 
 
 @dataclass

@@ -63,6 +63,7 @@ both versions (a v1 blob is presented as a single-chunk stream).
 from __future__ import annotations
 
 import functools
+import os
 import struct
 import zlib
 from typing import NamedTuple
@@ -192,6 +193,32 @@ class ChunkedContainer(NamedTuple):
     n_chunks: int
 
 
+class ContainerSlab(NamedTuple):
+    """Zero-copy container handle: the raw payload slab + index planes.
+
+    Produced by :func:`parse_chunked` — the *validation-only* half of
+    :func:`unpack_chunked`.  No payload byte is copied or re-aligned: cell
+    (c, l)'s stream is ``slab[offset[c, l] : offset[c, l] + length[c, l]]``
+    exactly as it sits in the blob.  This is the decode-side memory format
+    the zero-copy kernel path consumes (the index planes ride the grid as
+    scalar-prefetch inputs, DESIGN.md §10); the dense right-aligned
+    :class:`ChunkedLanes` form survives as the differential reference via
+    :func:`unpack_chunked` / :func:`slab_to_chunked`.
+
+    Every named :class:`ValueError` of :func:`unpack_chunked` (truncated
+    header / index / payload span, overlapping or inflated spans, CRC
+    mismatch at a specific (chunk, lane)) has already been raised by the
+    time a ``ContainerSlab`` exists, so downstream consumers never see a
+    hostile index.
+    """
+
+    slab: np.ndarray    # (S,) uint8 raw payload bytes (a view of the blob)
+    offset: np.ndarray  # (n_chunks, lanes) int64 payload byte offsets
+    length: np.ndarray  # (n_chunks, lanes) int64 span byte lengths
+    cap: int            # max cell length (the dense form's row stride)
+    meta: ChunkedContainer
+
+
 def _check_no_overflow(overflow) -> None:
     if overflow is not None and np.asarray(overflow).any():
         bad = np.argwhere(np.asarray(overflow)).tolist()
@@ -224,16 +251,13 @@ def pack(enc_buf: np.ndarray, start: np.ndarray, length: np.ndarray,
     return bytes(out)
 
 
-def unpack(blob: bytes) -> tuple[np.ndarray, np.ndarray, Container]:
-    """Container v1 bytes -> ((lanes, cap) uint8 padded buf, start, meta).
+def _parse_v1(blob: bytes) -> tuple[np.ndarray, np.ndarray, np.ndarray,
+                                    Container]:
+    """Validation-only v1 parse -> (payload view, offsets, length, meta).
 
-    The returned buffer is forward-readable from ``start`` per lane, i.e.
-    directly consumable by ``coder.decoder_init``.  v2 blobs are chunked —
-    read them with :func:`unpack_chunked`.
-
-    Corrupt input raises :class:`ValueError` naming the damaged region
-    (truncated header / length table / per-lane payload) — never a raw
-    struct/numpy error and never a silently short buffer.
+    v1 payloads are lane-major and contiguous, so the per-lane offsets are
+    just the length prefix sums — the blob's payload region IS the slab and
+    no byte needs to move to index it.
     """
     if blob[:4] == MAGIC_V2:
         raise ValueError("chunked container v2: use bitstream.unpack_chunked")
@@ -260,15 +284,28 @@ def unpack(blob: bytes) -> tuple[np.ndarray, np.ndarray, Container]:
             f"truncated payload at lane {bad}: lane lengths claim "
             f"{int(length.sum())} payload bytes but blob has "
             f"{len(blob) - off}")
-    cap = int(length.max()) if lanes else 0
-    buf = np.zeros((lanes, cap), np.uint8)
-    start = (cap - length).astype(np.int32)
-    for i in range(lanes):
-        n = int(length[i])
-        buf[i, cap - n:] = np.frombuffer(blob, np.uint8, n, off)
-        off += n
+    payload = np.frombuffer(blob, np.uint8, int(length.sum()), off)
+    offsets = np.cumsum(length) - length
     meta = Container(payload=b"", prob_bits=prob_bits, lanes=lanes,
                      n_symbols=n_symbols)
+    return payload, offsets, length, meta
+
+
+def unpack(blob: bytes) -> tuple[np.ndarray, np.ndarray, Container]:
+    """Container v1 bytes -> ((lanes, cap) uint8 padded buf, start, meta).
+
+    The returned buffer is forward-readable from ``start`` per lane, i.e.
+    directly consumable by ``coder.decoder_init``.  v2 blobs are chunked —
+    read them with :func:`unpack_chunked`.
+
+    Corrupt input raises :class:`ValueError` naming the damaged region
+    (truncated header / length table / per-lane payload) — never a raw
+    struct/numpy error and never a silently short buffer.
+    """
+    payload, offsets, length, meta = _parse_v1(blob)
+    cap = int(length.max()) if meta.lanes else 0
+    start = (cap - length).astype(np.int32)
+    buf = _right_align_cells(payload, offsets[None], length[None], cap)[0]
     return buf, start, meta
 
 
@@ -288,6 +325,54 @@ def _span_indices(start: np.ndarray, length: np.ndarray,
     within = np.arange(total, dtype=np.int64) - np.repeat(excl, length)
     rows = np.repeat(np.arange(length.size, dtype=np.int64), length)
     return rows * row_stride + np.repeat(start, length) + within
+
+
+def _right_align_cells_loop(payload: np.ndarray, offsets: np.ndarray,
+                            length: np.ndarray, cap: int) -> np.ndarray:
+    """Per-cell Python-loop reference for :func:`_right_align_cells`.
+
+    Kept only as the micro-assert oracle (``RAS_BITSTREAM_SELFTEST``) and
+    for tests — production unpack is always the one-gather vectorized path.
+    """
+    shape = length.shape
+    buf = np.zeros(shape + (cap,), np.uint8)
+    flat = buf.reshape(-1, cap) if cap else buf.reshape(-1, 0)
+    off_f = offsets.reshape(-1)
+    len_f = length.reshape(-1)
+    for cell in range(len_f.size):
+        o, n = int(off_f[cell]), int(len_f[cell])
+        flat[cell, cap - n:] = payload[o:o + n]
+    return buf
+
+
+def _right_align_cells(payload: np.ndarray, offsets: np.ndarray,
+                       length: np.ndarray, cap: int) -> np.ndarray:
+    """Right-align every cell's payload span into a dense ``(..., cap)``
+    uint8 buffer — ONE vectorized gather via :func:`_span_indices` on every
+    code path (v1 and v2 unpack both land here).
+
+    This host-side copy is the *differential reference* for the zero-copy
+    kernel decode path (DESIGN.md §10): ``ops.rans_decode_chunked(
+    from_container=...)`` reads the slab directly and must produce
+    byte-identical symbols; tests poison this function to pin that the
+    copy never runs on the kernel hot path.
+
+    With ``RAS_BITSTREAM_SELFTEST=1`` the per-cell loop reference is run
+    alongside and asserted buffer-identical (the satellite micro-assert).
+    """
+    offsets = np.asarray(offsets, np.int64)
+    length = np.asarray(length, np.int64)
+    buf = np.zeros(length.shape + (cap,), np.uint8)
+    flat_len = length.reshape(-1)
+    dest = _span_indices(cap - flat_len, flat_len, cap)
+    src = _span_indices(offsets.reshape(-1), flat_len, 0)
+    buf.reshape(-1)[dest] = payload[src]
+    if os.environ.get("RAS_BITSTREAM_SELFTEST"):
+        ref = _right_align_cells_loop(payload, offsets, length, cap)
+        assert np.array_equal(buf, ref), (
+            "bitstream selftest: vectorized right-align diverges from the "
+            "per-cell loop reference")
+    return buf
 
 
 def pack_chunked(buf: np.ndarray, start: np.ndarray, length: np.ndarray,
@@ -338,28 +423,32 @@ def pack_chunked(buf: np.ndarray, start: np.ndarray, length: np.ndarray,
     return bytes(out)
 
 
-def unpack_chunked(blob: bytes) -> tuple[np.ndarray, np.ndarray,
-                                         ChunkedContainer]:
-    """Container bytes (v2 or v1) -> ((n_chunks, lanes, cap) buf, start, meta).
+def parse_chunked(blob: bytes) -> ContainerSlab:
+    """Validation-only container parse (v2 or v1) -> :class:`ContainerSlab`.
 
-    Streams are right-aligned per cell (``start = cap - length``) so each
-    chunk slice is directly consumable by ``coder.decoder_init``.  v1 blobs
-    are presented as a single chunk of ``n_symbols`` symbols — the
-    back-compat path for pre-chunking archives.
+    Runs every structural check :func:`unpack_chunked` runs — same named
+    :class:`ValueError`\\ s, same order (truncated header / index / payload
+    span, offset wrap, overlapping or inflated spans, CRC mismatch at a
+    specific (chunk, lane)) — but moves **no payload byte**: the returned
+    slab is a read-only view of the blob's payload region and the per-cell
+    ``(offset, length)`` planes index into it.  This is the zero-copy
+    decode entry point; :func:`unpack_chunked` is this plus the dense
+    right-align gather.
 
-    Corrupt input raises :class:`ValueError` naming the damaged cell or
-    region (truncated header / index / payload span, CRC mismatch at a
-    specific (chunk, lane)) — never a raw struct/numpy error and never a
-    silently short stream.
+    v1 blobs are presented as a single chunk of ``n_symbols`` symbols —
+    their lane-major payload is already one contiguous slab.
     """
     magic = blob[:4]
     if magic == MAGIC:
-        buf, start, meta = unpack(blob)
-        return (buf[None], start[None].astype(np.int32),
-                ChunkedContainer(prob_bits=meta.prob_bits, lanes=meta.lanes,
-                                 n_symbols=meta.n_symbols,
-                                 chunk_size=max(meta.n_symbols, 1),
-                                 n_chunks=1))
+        payload, offsets, length, meta = _parse_v1(blob)
+        cap = int(length.max()) if meta.lanes else 0
+        return ContainerSlab(
+            slab=payload, offset=offsets[None], length=length[None],
+            cap=cap,
+            meta=ChunkedContainer(prob_bits=meta.prob_bits, lanes=meta.lanes,
+                                  n_symbols=meta.n_symbols,
+                                  chunk_size=max(meta.n_symbols, 1),
+                                  n_chunks=1))
     if magic != MAGIC_V2:
         raise ValueError("not a RAS container")
     if len(blob) < _HEADER_V2.size:
@@ -401,30 +490,110 @@ def unpack_chunked(blob: bytes) -> tuple[np.ndarray, np.ndarray,
             f"corrupt chunk index: cells claim {int(length.sum())} total "
             f"payload bytes but the payload holds {payload_len} — "
             "overlapping or inflated spans")
-    cap = int(length.max()) if cells else 0
-    buf = np.zeros((n_chunks, lanes, cap), np.uint8)
-    start = (cap - length.reshape(n_chunks, lanes)).astype(np.int32)
-    # right-align every cell's span with one vectorized gather through the
-    # index's per-cell offsets (writers may order/pad payloads freely)
     payload = np.frombuffer(blob, np.uint8, payload_len, base)
-    if has_crc:
-        for cell in range(cells):
-            o, n = int(offsets[cell]), int(length[cell])
-            got = zlib.crc32(payload[o:o + n])
-            want = int(index["crc"][cell])
-            if got != want:
-                c, lane = divmod(cell, lanes)
-                raise ValueError(
-                    f"container v2 checksum mismatch at chunk {c}, lane "
-                    f"{lane}: stored CRC32 0x{want:08x}, computed "
-                    f"0x{got:08x} — chunk payload corrupt")
-    dest = _span_indices(cap - length, length, cap)
-    src = _span_indices(offsets, length, 0)
-    buf.reshape(-1)[dest] = payload[src]
+    if has_crc and cells:
+        # one vectorized CRC comparison over all cells (zlib.crc32 takes
+        # buffer views directly — no per-cell payload copies)
+        got = np.fromiter(
+            (zlib.crc32(payload[o:o + n])
+             for o, n in zip(offsets, length)),
+            dtype=np.uint32, count=cells)
+        bad_crc = got != index["crc"]
+        if bad_crc.any():
+            bad = int(np.argmax(bad_crc))
+            c, lane = divmod(bad, lanes)
+            raise ValueError(
+                f"container v2 checksum mismatch at chunk {c}, lane "
+                f"{lane}: stored CRC32 0x{int(index['crc'][bad]):08x}, "
+                f"computed 0x{int(got[bad]):08x} — chunk payload corrupt")
+    cap = int(length.max()) if cells else 0
     meta = ChunkedContainer(prob_bits=prob_bits, lanes=lanes,
                             n_symbols=n_symbols, chunk_size=chunk_size,
                             n_chunks=n_chunks)
-    return buf, start, meta
+    return ContainerSlab(slab=payload,
+                         offset=offsets.reshape(n_chunks, lanes),
+                         length=length.reshape(n_chunks, lanes),
+                         cap=cap, meta=meta)
+
+
+def unpack_chunked(blob: bytes) -> tuple[np.ndarray, np.ndarray,
+                                         ChunkedContainer]:
+    """Container bytes (v2 or v1) -> ((n_chunks, lanes, cap) buf, start, meta).
+
+    Streams are right-aligned per cell (``start = cap - length``) so each
+    chunk slice is directly consumable by ``coder.decoder_init``.  v1 blobs
+    are presented as a single chunk of ``n_symbols`` symbols — the
+    back-compat path for pre-chunking archives.
+
+    This is :func:`parse_chunked` plus the dense right-align gather
+    (:func:`_right_align_cells` — writers may order/pad payloads freely, so
+    the gather goes through the index's per-cell offsets).  The zero-copy
+    kernel decode path skips the gather entirely and consumes the
+    :class:`ContainerSlab` directly.
+
+    Corrupt input raises :class:`ValueError` naming the damaged cell or
+    region (truncated header / index / payload span, CRC mismatch at a
+    specific (chunk, lane)) — never a raw struct/numpy error and never a
+    silently short stream.
+    """
+    cs = parse_chunked(blob)
+    buf = _right_align_cells(cs.slab, cs.offset, cs.length, cs.cap)
+    start = (cs.cap - cs.length).astype(np.int32)
+    return buf, start, cs.meta
+
+
+def slab_to_chunked(cs: ContainerSlab) -> ChunkedLanes:
+    """Device-side ``ContainerSlab`` -> dense :class:`ChunkedLanes`.
+
+    One jnp gather on-device (clip + mask, exactly the kernel's span-bounds
+    clamp semantics: bytes outside a cell's span read 0) — used where a
+    consumer needs the dense right-aligned form from a slab without ever
+    touching host memory (the coder-backend differential paths).  The
+    host-side analogue is :func:`_right_align_cells`.
+    """
+    slab, off, ln = _slab_i32(cs)
+    n_chunks, lanes = cs.meta.n_chunks, cs.meta.lanes
+    cap = cs.cap
+    start = cap - ln
+    if cap == 0 or slab.shape[0] == 0:
+        buf = jnp.zeros((n_chunks, lanes, cap), _U8J)
+        return ChunkedLanes(buf=buf, start=start, length=ln)
+    col = jnp.arange(cap, dtype=_I32J)
+    src = off[..., None] + (col - start[..., None])
+    valid = col >= start[..., None]
+    buf = jnp.where(valid, slab[jnp.clip(src, 0, slab.shape[0] - 1)],
+                    _U8J(0))
+    return ChunkedLanes(buf=buf, start=start, length=ln)
+
+
+def chunk_encoded_from_slab(cs: ContainerSlab, c: int) -> EncodedLanes:
+    """Device-side right-align of ONE chunk's cells -> :class:`EncodedLanes`.
+
+    The serve loops consume chunks one at a time; this gathers chunk ``c``'s
+    spans straight from the slab on-device (no host copy, no dense
+    (n_chunks, lanes, cap) intermediate).
+    """
+    one = ContainerSlab(slab=cs.slab, offset=cs.offset[c:c + 1],
+                        length=cs.length[c:c + 1], cap=cs.cap,
+                        meta=cs.meta._replace(n_chunks=1))
+    ch = slab_to_chunked(one)
+    return EncodedLanes(buf=ch.buf[0], start=ch.start[0], length=ch.length[0])
+
+
+def _slab_i32(cs: ContainerSlab) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """ContainerSlab planes as device arrays with int32-safe indices.
+
+    The kernels (and jnp's default x64-off mode) index with int32, so a
+    payload must fit in 2**31-1 bytes to take a device slab path; the
+    validated spans guarantee every offset is <= payload length.
+    """
+    if cs.slab.shape[0] >= 2 ** 31:
+        raise ValueError(
+            f"container payload of {cs.slab.shape[0]} bytes exceeds the "
+            "int32 index range of the device slab paths")
+    return (jnp.asarray(cs.slab, _U8J),
+            jnp.asarray(cs.offset.astype(np.int32)),
+            jnp.asarray(cs.length.astype(np.int32)))
 
 
 def compressed_size(length: np.ndarray) -> int:

@@ -1,0 +1,150 @@
+"""VMEM-occupancy autotuner for the RAS kernels (DESIGN.md §10).
+
+The kernels expose two block knobs — ``lane_block`` (lanes per grid step)
+and ``t_block`` (symbol rows per grid step) — plus, on the banked-ring
+encode path, the ring size derived from ``t_block``.  This module owns the
+selection policy:
+
+  * **occupancy model**: :func:`encode_vmem_bytes` / :func:`decode_vmem_bytes`
+    mirror the per-grid-step VMEM math in the kernel docstrings
+    (``kernels/rans_encode.py`` / ``kernels/rans_decode.py``) exactly —
+    symbols + stream block + table planes + candidates + scratch.  The
+    budget is :data:`VMEM_BYTES` (the v5e per-core VMEM the roofline model
+    in ``analysis/roofline.py`` re-exports; tests pin the two constants
+    identical) with a 2x headroom factor for Pallas double-buffering.
+  * **encode work model**: the banked ring makes per-byte scatter cost
+    O(ring) instead of O(cap), but every grid step pays one O(cap) drain
+    and a fixed step overhead, so the best ``t_block`` balances
+    ``bytes x ring(t_block)`` against ``steps x (cap + overhead)``
+    (:func:`select_encode_t_block`).  Measured interpret-mode wall-clock
+    tracks this model (BENCH_encode.json's ring-vs-onehot points).
+  * **decode**: no ring; fewer grid steps is strictly better, so
+    :func:`select_decode_t_block` returns the whole chunk unless the
+    adaptive table slab would blow the VMEM budget, then halves.
+
+Everything here is host-side integer math on static shapes — safe to call
+from inside jit'd wrappers (the knobs are static argnames).
+"""
+
+from __future__ import annotations
+
+from repro.core import constants as C
+from repro.kernels.common import next_pow2
+
+# TPU v5e: ~16 MB of VMEM per core (the pallas guide's planning number);
+# analysis/roofline.py re-exports this so the roofline and the autotuner
+# can never disagree about the machine model.
+VMEM_BYTES = 16 * 2 ** 20
+# leave half for Pallas pipelining/double-buffering of the blocked inputs
+VMEM_BUDGET = VMEM_BYTES // 2
+# per-grid-step fixed cost in row-equivalents (kernel dispatch, scratch
+# turnover); calibrated against the interpret-mode ring sweep in
+# benchmarks/bench_speed.py — large enough that tiny chunks stay unblocked
+STEP_OVERHEAD_ROWS = 3072
+
+
+def ring_size(t_block: int) -> int:
+    """Bank rows for one encode grid step's worst case: ``t_block`` symbols
+    emit at most ``MAX_RENORM_STEPS`` bytes each, plus the 4-byte state
+    header at the chunk's last step; rounded to a power of two so the
+    cursor wrap is one integer mask (DESIGN.md §10)."""
+    return next_pow2(C.MAX_RENORM_STEPS * t_block + 4)
+
+
+def select_lane_block(lanes: int, lane_block: int = 128) -> int:
+    """Lane grid blocking: full VREG-width groups when the lane count
+    tiles them, else one collapsed group (correctness over occupancy —
+    the serve/parallel paths run narrow lane counts)."""
+    return lane_block if lane_block and lanes % lane_block == 0 else lanes
+
+
+def _table_plane_bytes(t_block: int, lane_block: int, k: int,
+                       layout: str, n_planes: int) -> int:
+    """u32 table-plane bytes per grid step for one of the three layouts."""
+    if layout == "lane":
+        return n_planes * t_block * lane_block * k * 4
+    if layout == "perpos":
+        return n_planes * t_block * k * 4
+    return n_planes * k * 4                     # static: T-invariant
+
+
+def encode_vmem_bytes(t_block: int, lane_block: int, k: int, layout: str,
+                      cap: int, ring: int | None = None) -> int:
+    """Fused-encode VMEM occupancy per grid step (kernel docstring math):
+    symbol block + resident stream block + five encode planes + geometry
+    outputs + state/cursor scratch [+ the byte-ring bank]."""
+    syms = t_block * lane_block * 4
+    stream = cap * lane_block
+    planes = _table_plane_bytes(t_block, lane_block, k, layout, n_planes=5)
+    geometry = 3 * lane_block * 4               # start/length/overflow
+    scratch = 2 * lane_block * 4                # states + cursors
+    bank = (ring or 0) * lane_block
+    return syms + stream + planes + geometry + scratch + bank
+
+
+def decode_vmem_bytes(t_block: int, lane_block: int, k: int, layout: str,
+                      cap: int, topk: int = 0, ctx_w: int = 0,
+                      slab: bool = False) -> int:
+    """Decode VMEM occupancy per grid step (kernel docstring math):
+    stream block (dense input block, or the slab path's DMA'd window
+    scratch — same footprint) + freq/cdf planes + candidate block + symbol
+    output + state/cursor/context scratch."""
+    stream = cap * lane_block
+    freq = _table_plane_bytes(t_block, lane_block, k, layout, n_planes=1)
+    cdf = _table_plane_bytes(t_block, lane_block, k + 1, layout, n_planes=1)
+    cands = t_block * lane_block * topk * 4
+    syms = t_block * lane_block * 4
+    probes = lane_block * 4
+    scratch = 2 * lane_block * 4 + lane_block * max(1, ctx_w) * 4
+    return stream + freq + cdf + cands + syms + probes + scratch
+
+
+def _t_block_candidates(chunk: int) -> list[int]:
+    """The whole chunk plus power-of-two blockings down to 8 rows."""
+    cands = [chunk]
+    tb = 8
+    while tb < chunk:
+        cands.append(tb)
+        tb *= 2
+    return cands
+
+
+def select_encode_t_block(chunk: int, cap: int, lane_block: int, k: int,
+                          layout: str) -> int:
+    """Pick the banked-ring encode's ``t_block`` by the analytic work
+    model, VMEM-validated.
+
+    Per chunk the ring path costs about
+    ``MAX_RENORM_STEPS * chunk * ring(tb)`` scatter selects plus
+    ``ceil(chunk / tb) * (cap + STEP_OVERHEAD_ROWS)`` drain/step rows;
+    the one-hot path it replaces cost ``MAX_RENORM_STEPS * chunk * cap``.
+    Candidates whose occupancy exceeds :data:`VMEM_BUDGET` are dropped
+    (falling back to the smallest candidate if none fit).
+    """
+    best_tb, best_cost = None, None
+    for tb in _t_block_candidates(chunk):
+        r = ring_size(tb)
+        cost = (C.MAX_RENORM_STEPS * chunk * r
+                + -(-chunk // tb) * (cap + STEP_OVERHEAD_ROWS))
+        if encode_vmem_bytes(tb, lane_block, k, layout, cap,
+                             ring=r) > VMEM_BUDGET:
+            continue
+        if best_cost is None or cost < best_cost:
+            best_tb, best_cost = tb, cost
+    if best_tb is None:                 # nothing fits: smallest candidate
+        best_tb = min(_t_block_candidates(chunk))
+    return best_tb
+
+
+def select_decode_t_block(chunk: int, cap: int, lane_block: int, k: int,
+                          layout: str, topk: int = 0,
+                          ctx_w: int = 0) -> int:
+    """Pick the decode ``t_block``: the whole chunk (fewest grid steps)
+    unless the adaptive table slab would exceed :data:`VMEM_BUDGET`, then
+    the largest power-of-two blocking that fits (at least 8 rows)."""
+    tb = chunk
+    while tb > 8 and decode_vmem_bytes(tb, lane_block, k, layout, cap,
+                                       topk=topk,
+                                       ctx_w=ctx_w) > VMEM_BUDGET:
+        tb = next_pow2(tb) // 2     # halve (rounding non-pow2 down to pow2)
+    return max(tb, 1)

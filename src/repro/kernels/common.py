@@ -103,36 +103,50 @@ def onehot_gather_rows(buf: jax.Array, row_idx: jax.Array) -> jax.Array:
     return jnp.sum(vals.astype(jnp.int32), axis=0).astype(buf.dtype)
 
 
-def read_state_header(buf: jax.Array, ptr: jax.Array):
+def read_state_header(buf: jax.Array, ptr: jax.Array,
+                      gather=onehot_gather_rows):
     """Per-lane 4-byte big-endian rANS state header read (decoder init).
 
     buf: (cap, lanes) uint8; ptr: (lanes,) int32 read cursors.  Returns the
     reconstructed ``(lanes,)`` uint32 states and the advanced cursors — the
     in-kernel single source of ``coder.decoder_init``'s header walk, shared
     by the full decode kernel's per-chunk reset and the fused serve step.
+
+    ``gather`` selects the per-lane byte access: the default reads the
+    dense right-aligned ``(cap, lanes)`` layout; the zero-copy slab decode
+    passes :func:`onehot_gather_lanes` with a lane-major ``(lanes, cap)``
+    VMEM window (DESIGN.md §10).
     """
     s = jnp.zeros((ptr.shape[0],), jnp.uint32)
     for _ in range(4):
-        byte = onehot_gather_rows(buf, ptr).astype(jnp.uint32)
+        byte = gather(buf, ptr).astype(jnp.uint32)
         s = (s << 8) | byte
         ptr = ptr + 1
     return s, ptr
 
 
-def masked_refill(buf: jax.Array, s: jax.Array, ptr: jax.Array):
+def masked_refill(buf: jax.Array, s: jax.Array, ptr: jax.Array,
+                  gather=onehot_gather_rows):
     """Fixed ``MAX_RENORM_STEPS``-stage masked byte refill (decode renorm).
 
     buf: (cap, lanes) uint8; s: (lanes,) uint32; ptr: (lanes,) int32.
     Mirrors the encoder's staged renorm bound: at most two byte reads per
     symbol, lanes above ``RANS_L`` are masked out (the RTL's clock gating).
     Shared by the full decode kernel and the fused serve step kernel.
+    ``gather`` follows :func:`read_state_header`'s layout contract.
     """
     for _ in range(C.MAX_RENORM_STEPS):
         cond = s < jnp.uint32(C.RANS_L)
-        byte = onehot_gather_rows(buf, ptr).astype(jnp.uint32)
+        byte = gather(buf, ptr).astype(jnp.uint32)
         s = jnp.where(cond, (s << C.RENORM_SHIFT) | byte, s)
         ptr = ptr + cond.astype(jnp.int32)
     return s, ptr
+
+
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= ``n`` (>= 1): ring/bank sizes are pow2 so
+    the banked cursor's ``& (ring - 1)`` wrap is one integer mask."""
+    return 1 << max(int(n) - 1, 0).bit_length()
 
 
 def onehot_scatter_rows(buf: jax.Array, row_idx: jax.Array, vals: jax.Array,

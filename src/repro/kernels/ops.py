@@ -37,14 +37,17 @@ from repro.core import constants as C
 # *reference* path (rans_encode_records), which the fused path is
 # differential-tested and benchmarked against.
 from repro.core.bitstream import compact_records  # noqa: F401
+from repro.core.bitstream import ContainerSlab
 from repro.core.coder import (ChunkedLanes, EncodedLanes, default_cap,
                               num_chunks)
 from repro.core.predictors import NeighborAverage
 from repro.core.spc import TableSet, build_tables
-from repro.kernels.rans_decode import (rans_decode_lanes,
+from repro.kernels.rans_decode import (rans_decode_lanes, rans_decode_slab,
                                        rans_decode_step)  # noqa: F401
 from repro.kernels.rans_encode import (rans_encode_lanes,  # noqa: F401
                                        rans_encode_records)
+
+import numpy as np
 
 
 def rans_encode(symbols: jax.Array, tbl: TableSet,
@@ -52,6 +55,7 @@ def rans_encode(symbols: jax.Array, tbl: TableSet,
                 prob_bits: int = C.PROB_BITS,
                 lane_block: int = 128,
                 t_block: int | None = None,
+                scatter: str = "ring",
                 interpret: bool = True) -> EncodedLanes:
     """Kernel-backed multi-lane encode (bit-exact vs. core/golden).
 
@@ -69,7 +73,7 @@ def rans_encode(symbols: jax.Array, tbl: TableSet,
     cap = default_cap(t_len) if cap is None else cap
     buf, start, length, overflow = rans_encode_lanes(
         symbols, tbl, cap=cap, prob_bits=prob_bits, lane_block=lane_block,
-        t_block=t_block, interpret=interpret)
+        t_block=t_block, scatter=scatter, interpret=interpret)
     return EncodedLanes(buf=buf[0], start=start[0], length=length[0],
                         overflow=overflow[0])
 
@@ -79,6 +83,7 @@ def rans_encode_chunked(symbols: jax.Array, tbl: TableSet, chunk_size: int,
                         prob_bits: int = C.PROB_BITS,
                         lane_block: int = 128,
                         t_block: int | None = None,
+                        scatter: str = "ring",
                         interpret: bool = True) -> ChunkedLanes:
     """Kernel-backed chunked encode (bit-exact vs. coder.encode_chunked).
 
@@ -97,7 +102,8 @@ def rans_encode_chunked(symbols: jax.Array, tbl: TableSet, chunk_size: int,
     cap = default_cap(min(chunk_size, t_len)) if cap is None else cap
     buf, start, length, overflow = rans_encode_lanes(
         symbols, tbl, cap=cap, chunk_size=chunk_size, prob_bits=prob_bits,
-        lane_block=lane_block, t_block=t_block, interpret=interpret)
+        lane_block=lane_block, t_block=t_block, scatter=scatter,
+        interpret=interpret)
     return ChunkedLanes(buf=buf, start=start, length=length,
                         overflow=overflow)
 
@@ -141,8 +147,10 @@ def rans_decode(enc: EncodedLanes, n_symbols: int, tbl: TableSet,
     return sym, avg
 
 
-def rans_decode_chunked(chunks: ChunkedLanes, n_symbols: int, tbl: TableSet,
-                        chunk_size: int,
+def rans_decode_chunked(chunks: ChunkedLanes | None = None,
+                        n_symbols: int | None = None,
+                        tbl: TableSet | None = None,
+                        chunk_size: int | None = None,
                         prob_bits: int = C.PROB_BITS,
                         predictor=None,
                         candidates: jax.Array | None = None,
@@ -150,7 +158,8 @@ def rans_decode_chunked(chunks: ChunkedLanes, n_symbols: int, tbl: TableSet,
                         t_block: int | None = None,
                         interpret: bool = True,
                         lane_probes: bool = False,
-                        chunk_probes: bool = False):
+                        chunk_probes: bool = False,
+                        from_container: ContainerSlab | None = None):
     """Kernel-backed chunked decode (mirrors :func:`rans_encode_chunked`).
 
     ONE ``pallas_call`` for the whole stream: the chunk axis is a grid
@@ -164,21 +173,68 @@ def rans_decode_chunked(chunks: ChunkedLanes, n_symbols: int, tbl: TableSet,
     Probe accounting matches the pure-JAX path per lane and per chunk (both
     consume ``core.search``).  Returns ``(symbols (lanes, T), avg_probes
     [, per-lane probes][, per-(chunk, lane) probes])``.
+
+    **Zero-copy entry point**: pass ``from_container=`` a validated
+    :class:`~repro.core.bitstream.ContainerSlab` (from
+    ``bitstream.parse_chunked``) instead of ``chunks`` and the kernel reads
+    straight off the packed payload slab — no host-side right-align copy
+    anywhere on the path (DESIGN.md §10).  ``n_symbols``/``chunk_size``
+    default to the container's header values.  Symbols and probes are
+    bit-identical to the dense ``ChunkedLanes`` path.
     """
+    if from_container is not None:
+        if chunks is not None:
+            raise ValueError(
+                "pass either a dense ChunkedLanes stream or "
+                "from_container=<ContainerSlab>, not both")
+        cs = from_container
+        if n_symbols is None:
+            n_symbols = cs.meta.n_symbols
+        if chunk_size is None:
+            chunk_size = cs.meta.chunk_size
+        n_chunks, lanes = cs.offset.shape
+    else:
+        if chunks is None:
+            raise ValueError("a ChunkedLanes stream or from_container=... "
+                             "is required")
+        n_chunks, lanes = chunks.buf.shape[:2]
     n_total = num_chunks(n_symbols, chunk_size)
-    if chunks.buf.shape[0] != n_total:
+    if n_chunks != n_total:
         raise ValueError(
-            f"stream has {chunks.buf.shape[0]} chunks but n_symbols="
+            f"stream has {n_chunks} chunks but n_symbols="
             f"{n_symbols} at chunk_size={chunk_size} implies {n_total}; "
             "decode with the chunk_size the stream was encoded with")
-    lanes = chunks.buf.shape[1]
     if lanes % lane_block:
         lane_block = lanes
-    sym, cprobes = rans_decode_lanes(
-        chunks.buf, chunks.start, tbl.freq, tbl.cdf, t_len=n_symbols,
-        chunk_size=chunk_size, prob_bits=prob_bits, predictor=predictor,
-        candidates=candidates, lane_block=lane_block, t_block=t_block,
-        interpret=interpret)
+    if from_container is not None:
+        if cs.slab.shape[0] >= 2 ** 31:
+            raise ValueError(
+                f"container payload of {cs.slab.shape[0]} bytes exceeds "
+                "the int32 index range of the device slab paths")
+        # window size: >= 4 so the state-header read always has rows even
+        # for degenerate (hostile but validated) all-empty indexes
+        cap = max(cs.cap, 4)
+        slab = np.asarray(cs.slab, np.uint8)
+        if slab.shape[0] < cap:        # tiny payload: pad so base=0 works
+            slab = np.concatenate(
+                [slab, np.zeros(cap - slab.shape[0], np.uint8)])
+        # host-clipped DMA bases: the in-kernel copy can never leave the
+        # slab; wstart re-bases each cell's offset into its window
+        base = np.clip(cs.offset, 0, slab.shape[0] - cap).astype(np.int32)
+        wstart = (cs.offset - base).astype(np.int32)
+        wlen = cs.length.astype(np.int32)
+        sym, cprobes = rans_decode_slab(
+            jnp.asarray(slab), jnp.asarray(base), jnp.asarray(wstart),
+            jnp.asarray(wlen), tbl.freq, tbl.cdf, cap=cap,
+            t_len=n_symbols, chunk_size=chunk_size, prob_bits=prob_bits,
+            predictor=predictor, candidates=candidates,
+            lane_block=lane_block, t_block=t_block, interpret=interpret)
+    else:
+        sym, cprobes = rans_decode_lanes(
+            chunks.buf, chunks.start, tbl.freq, tbl.cdf, t_len=n_symbols,
+            chunk_size=chunk_size, prob_bits=prob_bits, predictor=predictor,
+            candidates=candidates, lane_block=lane_block, t_block=t_block,
+            interpret=interpret)
     avg_probes = (jnp.sum(cprobes.astype(jnp.float32))
                   / (lanes * n_symbols))
     out = (sym, avg_probes)

@@ -72,32 +72,75 @@ from repro.kernels.common import (masked_refill, onehot_gather,
 
 _U32 = jnp.uint32
 _I32 = jnp.int32
+_U8 = jnp.uint8
 
 
-def _decode_kernel(buf_ref, start_ref, freq_ref, cdf_ref, *rest,
+def _decode_kernel(*refs,
                    t_len: int, chunk_size: int, t_block: int, n_tb: int,
                    prob_bits: int, k: int, layout: str, predictor,
-                   ctx_w: int, has_cands: bool):
+                   ctx_w: int, has_cands: bool, slab: bool = False,
+                   cap: int = 0):
+    if slab:
+        # zero-copy source (DESIGN.md §10): the packed container payload
+        # stays one (S,) slab in HBM (memory_space=ANY); per-(chunk, lane)
+        # DMA starts ride the grid as a scalar-prefetch plane and each
+        # chunk's byte windows are DMA'd into a lane-major VMEM scratch.
+        base_ref, slab_ref, wstart_ref, wlen_ref, freq_ref, cdf_ref, \
+            *rest = refs
+    else:
+        buf_ref, start_ref, freq_ref, cdf_ref, *rest = refs
     if has_cands:
-        cand_ref, sym_ref, probes_ref, s_scr, ptr_scr, ctx_scr = rest
+        cand_ref, *rest = rest
+    if slab:
+        sym_ref, probes_ref, s_scr, ptr_scr, ctx_scr, win_scr, sem = rest
     else:
         sym_ref, probes_ref, s_scr, ptr_scr, ctx_scr = rest
     lanes = sym_ref.shape[1]
     mask = _U32((1 << prob_bits) - 1)
-    buf = buf_ref[0]          # (cap, lanes): this chunk's streams in VMEM
+    i = pl.program_id(0)      # lane-block index
     c = pl.program_id(1)      # chunk index
     j = pl.program_id(2)      # T-block index (innermost grid axis)
+    # per-lane byte access: dense layout is (cap, lanes) row gathers, the
+    # slab window is lane-major (lanes, cap) — same OOB-reads-0 contract
+    byte_gather = onehot_gather_lanes if slab else None
 
     @pl.when(j == 0)
     def _init():
         # per-chunk re-init: every chunk is a standalone stream — read its
         # 4-byte big-endian state header and reset cursors/probes/context
-        s, ptr = read_state_header(buf, start_ref[0].astype(_I32))
+        if slab:
+            def dma(lane, _):
+                b = base_ref[c, i * lanes + lane]
+                cp = pltpu.make_async_copy(slab_ref.at[pl.ds(b, cap)],
+                                           win_scr.at[lane], sem)
+                cp.start()
+                cp.wait()
+                return 0
+            jax.lax.fori_loop(0, lanes, dma, 0)
+            ws = wstart_ref[0].astype(_I32)
+            wl = wlen_ref[0].astype(_I32)
+            # in-kernel span-bounds clamp: bytes outside this cell's
+            # validated [wstart, wstart+length) span read as 0 — identical
+            # to the dense path's out-of-stream reads, and a hostile index
+            # can never surface another cell's bytes (the DMA base is
+            # host-clipped to [0, S-cap], so the copy itself is in-block)
+            col = jax.lax.broadcasted_iota(_I32, (lanes, cap), 1)
+            win = win_scr[...]
+            live = (col >= ws[:, None]) & (col < (ws + wl)[:, None])
+            win_scr[...] = jnp.where(live, win, _U8(0))
+            s, ptr = read_state_header(win_scr[...], ws,
+                                       gather=byte_gather)
+        else:
+            s, ptr = read_state_header(buf_ref[0],
+                                       start_ref[0].astype(_I32))
         s_scr[0, :] = s
         ptr_scr[0, :] = ptr
         probes_ref[0, :] = jnp.zeros((lanes,), _I32)
         if predictor is not None and ctx_w:
             ctx_scr[...] = predictor.init(lanes)
+
+    # this chunk's byte source, resident in VMEM across its T blocks
+    buf = win_scr[...] if slab else buf_ref[0]
 
     if layout == "static":
         freq_all = freq_ref[0]        # (K,)
@@ -147,7 +190,10 @@ def _decode_kernel(buf_ref, start_ref, freq_ref, cdf_ref, *rest,
         f = g(freq_t, x)
         start = g(cdf_t[..., :k], x)
         s = f * (s >> prob_bits) + slot - start
-        s, ptr = masked_refill(buf, s, ptr)
+        if slab:
+            s, ptr = masked_refill(buf, s, ptr, gather=byte_gather)
+        else:
+            s, ptr = masked_refill(buf, s, ptr)
         return s, ptr, probes + p, ctx
 
     s, ptr, probes, ctx = jax.lax.fori_loop(
@@ -309,6 +355,149 @@ def rans_decode_lanes(buf: jax.Array,      # (lanes, cap) uint8 forward stream
         ],
         interpret=interpret,
     )(buf3.swapaxes(1, 2), start2.astype(_I32), freq_in, cdf_in, *extra_in)
+    sym = unpad_chunk_rows(sym, t_len, chunk, n_chunks, padded_chunk)
+    return sym.T, probes
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cap", "t_len", "chunk_size",
+                                    "prob_bits", "predictor", "lane_block",
+                                    "t_block", "interpret"))
+def rans_decode_slab(slab: jax.Array,      # (S,) uint8 packed payload slab
+                     base: jax.Array,      # (n_chunks, lanes) int32 DMA start
+                     wstart: jax.Array,    # (n_chunks, lanes) int32 in-window
+                     wlen: jax.Array,      # (n_chunks, lanes) int32 span len
+                     freq: jax.Array, cdf: jax.Array, *,
+                     cap: int,
+                     t_len: int,
+                     chunk_size: int,
+                     prob_bits: int = C.PROB_BITS,
+                     predictor=None,
+                     candidates: jax.Array | None = None,
+                     lane_block: int = 128,
+                     t_block: int | None = None,
+                     interpret: bool = True):
+    """Zero-copy chunked decode: ONE ``pallas_call`` straight off the
+    packed container slab (DESIGN.md §10).
+
+    The per-(chunk, lane) index walk that ``bitstream.unpack_chunked`` used
+    to run host-side moves into the kernel: ``base`` rides the grid as a
+    scalar-prefetch plane (SMEM), the slab stays unblocked in HBM
+    (``memory_space=ANY``), and at each chunk's first grid step the kernel
+    DMAs every lane's ``cap``-byte window ``slab[base : base + cap]`` into
+    a lane-major VMEM scratch, then clamps bytes outside the cell's
+    validated ``[wstart, wstart + wlen)`` span to 0 before reading the
+    state header.  ``base`` must be host-clipped to ``[0, S - cap]`` (so
+    the DMA can never leave the slab) with ``wstart = offset - base`` —
+    :func:`repro.kernels.ops.rans_decode_chunked` derives all three planes
+    from a validated :class:`~repro.core.bitstream.ContainerSlab`.
+
+    Symbols and probe counters are bit-identical to
+    :func:`rans_decode_lanes` over the dense right-aligned form: the byte
+    sequence each lane reads is identical (span bytes then zeros), and the
+    table/candidate/search plumbing is shared.
+    """
+    n_chunks, lanes = base.shape
+    chunk = min(chunk_size, t_len)
+    if n_chunks != -(-t_len // chunk):
+        raise ValueError(
+            f"stream has {n_chunks} chunks but t_len={t_len} at chunk_size="
+            f"{chunk} implies {-(-t_len // chunk)}")
+    if lanes % lane_block:
+        raise ValueError(f"lanes={lanes} not a multiple of {lane_block}")
+    k = freq.shape[-1]
+    tb = chunk if t_block is None else max(1, min(t_block, chunk))
+    n_tb = -(-chunk // tb)
+    padded_chunk = n_tb * tb
+    total_rows = n_chunks * padded_chunk
+
+    # index maps take the scalar-prefetch refs as trailing args (*_)
+    if freq.ndim == 1:
+        layout = "static"
+        freq_in, cdf_in = freq.reshape(1, k), cdf.reshape(1, k + 1)
+        freq_spec = pl.BlockSpec((1, k), lambda i, c, j, *_: (0, 0))
+        cdf_spec = pl.BlockSpec((1, k + 1), lambda i, c, j, *_: (0, 0))
+    elif freq.ndim == 2:
+        if freq.shape[0] != t_len:
+            raise ValueError(
+                f"per-position tables carry T={freq.shape[0]} rows but "
+                f"t_len={t_len}")
+        layout = "perpos"
+        freq_in = pad_chunk_rows(freq, t_len, chunk, n_chunks, padded_chunk)
+        cdf_in = pad_chunk_rows(cdf, t_len, chunk, n_chunks, padded_chunk)
+        freq_spec = pl.BlockSpec((tb, k),
+                                 lambda i, c, j, *_: (c * n_tb + j, 0))
+        cdf_spec = pl.BlockSpec((tb, k + 1),
+                                lambda i, c, j, *_: (c * n_tb + j, 0))
+    elif freq.ndim == 3:
+        if freq.shape[0] != t_len or freq.shape[1] != lanes:
+            raise ValueError(
+                f"per-lane tables must be (T, lanes, K)=({t_len}, {lanes}, "
+                f"{k}); got {freq.shape}")
+        layout = "lane"
+        freq_in = pad_chunk_rows(freq, t_len, chunk, n_chunks, padded_chunk)
+        cdf_in = pad_chunk_rows(cdf, t_len, chunk, n_chunks, padded_chunk)
+        freq_spec = pl.BlockSpec((tb, lane_block, k),
+                                 lambda i, c, j, *_: (c * n_tb + j, i, 0))
+        cdf_spec = pl.BlockSpec((tb, lane_block, k + 1),
+                                lambda i, c, j, *_: (c * n_tb + j, i, 0))
+    else:
+        raise ValueError(f"unsupported table rank {freq.ndim}")
+
+    has_cands = candidates is not None and candidates.shape[-1] > 0
+    extra_in, extra_specs = [], []
+    if has_cands:
+        if candidates.shape[:2] != (t_len, lanes):
+            raise ValueError(
+                f"candidate planes must be (T, lanes, topk)=({t_len}, "
+                f"{lanes}, *); got {candidates.shape}")
+        topk = candidates.shape[-1]
+        extra_in.append(pad_chunk_rows(candidates.astype(_I32), t_len,
+                                       chunk, n_chunks, padded_chunk))
+        extra_specs.append(pl.BlockSpec(
+            (tb, lane_block, topk),
+            lambda i, c, j, *_: (c * n_tb + j, i, 0)))
+
+    ctx_w = (int(predictor.init(lane_block).shape[-1])
+             if predictor is not None else 0)
+    grid = (lanes // lane_block, n_chunks, n_tb)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.ANY),           # the raw slab
+            pl.BlockSpec((1, lane_block), lambda i, c, j, *_: (c, i)),
+            pl.BlockSpec((1, lane_block), lambda i, c, j, *_: (c, i)),
+            freq_spec,
+            cdf_spec,
+        ] + extra_specs,
+        out_specs=[
+            pl.BlockSpec((tb, lane_block),
+                         lambda i, c, j, *_: (c * n_tb + j, i)),
+            pl.BlockSpec((1, lane_block), lambda i, c, j, *_: (c, i)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, lane_block), _U32),              # rANS states
+            pltpu.VMEM((1, lane_block), _I32),              # read cursors
+            pltpu.VMEM((lane_block, max(1, ctx_w)), _I32),  # predictor ctx
+            pltpu.VMEM((lane_block, cap), _U8),             # byte windows
+            pltpu.SemaphoreType.DMA,                        # window copies
+        ],
+    )
+    sym, probes = pl.pallas_call(
+        functools.partial(_decode_kernel, t_len=t_len, chunk_size=chunk,
+                          t_block=tb, n_tb=n_tb, prob_bits=prob_bits, k=k,
+                          layout=layout, predictor=predictor, ctx_w=ctx_w,
+                          has_cands=has_cands, slab=True, cap=cap),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((total_rows, lanes), _I32),
+            jax.ShapeDtypeStruct((n_chunks, lanes), _I32),
+        ],
+        interpret=interpret,
+    )(base.astype(_I32), slab, wstart.astype(_I32), wlen.astype(_I32),
+      freq_in, cdf_in, *extra_in)
     sym = unpad_chunk_rows(sym, t_len, chunk, n_chunks, padded_chunk)
     return sym.T, probes
 

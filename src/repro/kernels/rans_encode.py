@@ -70,6 +70,7 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core import constants as C
 from repro.core import update
 from repro.core.spc import TableSet
+from repro.kernels.autotune import ring_size, select_encode_t_block
 from repro.kernels.common import (onehot_gather, onehot_gather_lanes,
                                   onehot_scatter_rows, pad_chunk_rows)
 
@@ -243,32 +244,52 @@ def _encode_kernel(sym_ref, rcp_ref, rshift_ref, bias_ref, cmpl_ref,
 
 def _encode_fused_kernel(sym_ref, rcp_ref, rshift_ref, bias_ref, cmpl_ref,
                          xmax_ref, buf_ref, start_ref, len_ref, ovf_ref,
-                         s_scr, ptr_scr,
-                         *, t_len: int, chunk_size: int, t_block: int,
-                         n_tb: int, layout: str, cap: int):
+                         s_scr, ptr_scr, *scr,
+                         t_len: int, chunk_size: int, t_block: int,
+                         n_tb: int, layout: str, cap: int,
+                         ring: int | None = None):
     """Fused kernel: renorm bytes scatter straight into the per-lane output
     streams (DESIGN.md §8) — no record planes, no host-side compaction.
 
     The per-lane byte cursor ``ptr`` starts at ``cap`` and decrements per
-    emitted byte; each write lands at ``ptr - 1`` via a one-hot row scatter
-    into the chunk's ``(cap, lanes)`` stream block, which stays resident in
-    VMEM across the chunk's T blocks (the output index map ignores the
-    T-block grid axis).  The LIFO block walk emits bytes in exactly the
-    order the wire format stores them reversed, so cursor semantics are
-    identical to ``coder._emit_backward``: an overflowed cursor goes
-    negative, its writes drop (never wrap), and ``cap - ptr`` still reports
-    the true byte need.  At the chunk's last grid step the 4-byte
-    big-endian state header is flushed (low byte first — backward writes
-    make it big-endian forward) and start/length/overflow are published.
+    emitted byte.  Two scatter datapaths share the cursor semantics of
+    ``coder._emit_backward`` (an overflowed cursor goes negative, its
+    writes drop — never wrap — and ``cap - ptr`` still reports the true
+    byte need):
+
+    * ``ring=None`` (one-hot): each write lands at ``ptr - 1`` via a
+      one-hot row select over the chunk's full ``(cap, lanes)`` stream
+      block — O(cap x lanes) VPU work per renorm byte;
+    * ``ring=<pow2>`` (banked byte ring, DESIGN.md §10): each write lands
+      at ``(ptr - 1) & (ring - 1)`` in a ``(ring, lanes)`` VMEM bank —
+      O(ring x lanes) per byte.  Because the write row is the *global*
+      cursor mod ring, bank row ``r`` always holds target stream row
+      ``r (mod ring)``: the per-grid-step drain needs NO rotation, just a
+      vertical tile of the bank to ``cap`` rows masked to the rows this
+      step's cursor actually crossed (``[ptr_final, ptr_start)`` — a
+      contiguous descending LIFO run of at most ``2*t_block + 4 <= ring``
+      bytes, so positions are distinct mod ring and stale bank rows are
+      never selected).  One roll/flush per grid step; with an unblocked T
+      axis that is literally one per chunk.  Negative cursor rows fall
+      outside the clipped drain window, preserving overflow/drop parity
+      bit-for-bit (including ``cap < 4`` header clipping).
+
+    At the chunk's last grid step the 4-byte big-endian state header is
+    flushed through the same scatter path (low byte first — backward
+    writes make it big-endian forward) and start/length/overflow are
+    published.
     """
     lanes = sym_ref.shape[1]
+    bank_scr = scr[0] if ring is not None else None
     c = pl.program_id(1)      # chunk index
     j = pl.program_id(2)      # T-block step (innermost; blocks walk backward)
 
     @pl.when(j == 0)
     def _reset():
         # per-chunk reset: fresh state, cursor at the buffer tail, zeroed
-        # stream block (bytes outside the final span stay 0 on the wire)
+        # stream block (bytes outside the final span stay 0 on the wire).
+        # The ring bank needs no zeroing: the drain mask only selects rows
+        # the cursor crossed this step, which are always freshly written.
         s_scr[0, :] = jnp.full((lanes,), C.RANS_L, _U32)
         ptr_scr[0, :] = jnp.full((lanes,), cap, _I32)
         buf_ref[...] = jnp.zeros(buf_ref.shape, _U8)
@@ -283,6 +304,12 @@ def _encode_fused_kernel(sym_ref, rcp_ref, rshift_ref, bias_ref, cmpl_ref,
     else:
         planes_static = None
 
+    def scatter(buf, ptr, byte, cond):
+        if ring is None:
+            return onehot_scatter_rows(buf, ptr - 1, byte, cond)
+        return onehot_scatter_rows(buf, (ptr - 1) & _I32(ring - 1), byte,
+                                   cond)
+
     def body(i, carry):
         s, ptr, buf = carry
         t = n_t - 1 - i       # rANS is LIFO: walk rows in reverse
@@ -292,33 +319,72 @@ def _encode_fused_kernel(sym_ref, rcp_ref, rshift_ref, bias_ref, cmpl_ref,
         e = update.gather_encode_entry(planes, x, gather=g)
         s, recs = update.encode_step(s, e)
         for byte, cond in recs:
-            buf = onehot_scatter_rows(buf, ptr - 1, byte, cond)
+            buf = scatter(buf, ptr, byte, cond)
             ptr = ptr - cond.astype(_I32)
         return s, ptr, buf
 
+    ptr0 = ptr_scr[0, :]      # cursor at this grid step's start (drain hi)
     s, ptr, buf = jax.lax.fori_loop(
-        0, n_t, body, (s_scr[0, :], ptr_scr[0, :], buf_ref[0]))
-    buf_ref[0] = buf
+        0, n_t, body,
+        (s_scr[0, :], ptr0, bank_scr[...] if ring is not None
+         else buf_ref[0]))
+
+    if ring is None:
+        buf_ref[0] = buf
+        s_scr[0, :] = s
+        ptr_scr[0, :] = ptr
+
+        @pl.when(j == n_tb - 1)
+        def _flush():
+            # chunk's last (backward) block ends at t=0: flush the 4-byte
+            # big-endian state header (low byte first — backward writes
+            # make it big-endian forward) and publish the stream geometry.
+            # A negative cursor means the stream outgrew `cap` — its writes
+            # dropped in the scatter, so the stream is truncated-but-
+            # flagged, never wrapped.
+            s = s_scr[0, :]
+            ptr = ptr_scr[0, :]
+            buf = buf_ref[0]
+            emit = jnp.ones((lanes,), jnp.bool_)
+            for shift in (0, 8, 16, 24):
+                byte = ((s >> shift) & _M8).astype(_U8)
+                buf = onehot_scatter_rows(buf, ptr - 1, byte, emit)
+                ptr = ptr - 1
+            buf_ref[0] = buf
+            ptr_scr[0, :] = ptr
+            start_ref[0, :] = jnp.maximum(ptr, 0)
+            len_ref[0, :] = jnp.full((lanes,), cap, _I32) - ptr
+            ovf_ref[0, :] = (ptr < 0).astype(_I32)
+        return
+
+    # ---- banked-ring drain (one roll/flush per grid step) ----
+    # fold the header through the same banked path at the chunk's last step
+    last = j == n_tb - 1
+    hptr, hbank = ptr, buf
+    emit = jnp.ones((lanes,), jnp.bool_)
+    for shift in (0, 8, 16, 24):
+        byte = ((s >> shift) & _M8).astype(_U8)
+        hbank = scatter(hbank, hptr, byte, emit)
+        hptr = hptr - 1
+    bank = jnp.where(last, hbank, buf)
+    ptr_f = jnp.where(last, hptr, ptr)
+    bank_scr[...] = bank
+    # bank row r holds target stream row r (mod ring): tile vertically to
+    # cap rows and keep only the rows this step's cursor crossed
+    reps = -(-cap // ring)
+    tiled = (jnp.concatenate([bank] * reps, axis=0)[:cap] if reps > 1
+             else bank[:cap])
+    row = jax.lax.broadcasted_iota(_I32, (cap, lanes), 0)
+    lo = jnp.clip(ptr_f, 0, cap)[None, :]
+    hi = jnp.clip(ptr0, 0, cap)[None, :]
+    drained = (row >= lo) & (row < hi)
+    buf_ref[0] = jnp.where(drained, tiled, buf_ref[0])
     s_scr[0, :] = s
-    ptr_scr[0, :] = ptr
+    ptr_scr[0, :] = ptr_f
 
     @pl.when(j == n_tb - 1)
-    def _flush():
-        # chunk's last (backward) block ends at t=0: flush the 4-byte
-        # big-endian state header (low byte first — backward writes make it
-        # big-endian forward) and publish the stream geometry.  A negative
-        # cursor means the stream outgrew `cap` — its writes dropped in the
-        # scatter, so the stream is truncated-but-flagged, never wrapped.
-        s = s_scr[0, :]
+    def _publish():
         ptr = ptr_scr[0, :]
-        buf = buf_ref[0]
-        emit = jnp.ones((lanes,), jnp.bool_)
-        for shift in (0, 8, 16, 24):
-            byte = ((s >> shift) & _M8).astype(_U8)
-            buf = onehot_scatter_rows(buf, ptr - 1, byte, emit)
-            ptr = ptr - 1
-        buf_ref[0] = buf
-        ptr_scr[0, :] = ptr
         start_ref[0, :] = jnp.maximum(ptr, 0)
         len_ref[0, :] = jnp.full((lanes,), cap, _I32) - ptr
         ovf_ref[0, :] = (ptr < 0).astype(_I32)
@@ -398,7 +464,8 @@ def rans_encode_records(symbols: jax.Array,   # (lanes, T) int32
 
 @functools.partial(jax.jit,
                    static_argnames=("cap", "chunk_size", "prob_bits",
-                                    "lane_block", "t_block", "interpret"))
+                                    "lane_block", "t_block", "interpret",
+                                    "scatter"))
 def rans_encode_lanes(symbols: jax.Array,   # (lanes, T) int32
                       tbl: TableSet,
                       cap: int,
@@ -406,7 +473,8 @@ def rans_encode_lanes(symbols: jax.Array,   # (lanes, T) int32
                       prob_bits: int = C.PROB_BITS,
                       lane_block: int = 128,
                       t_block: int | None = None,
-                      interpret: bool = True):
+                      interpret: bool = True,
+                      scatter: str = "ring"):
     """Fused-compaction encode — ONE ``pallas_call``, packed streams out.
 
     The production encode datapath (DESIGN.md §8): renorm bytes scatter
@@ -414,6 +482,20 @@ def rans_encode_lanes(symbols: jax.Array,   # (lanes, T) int32
     cursor in VMEM scratch), so the kernel emits finished wire-format
     streams — byte-identical to ``coder.encode[_chunked]`` and to the
     records path + ``compact_records``, with no host-side compaction pass.
+
+    ``scatter`` selects the in-kernel byte datapath (byte-identical by
+    construction, differential-tested):
+
+    * ``"ring"`` (default, DESIGN.md §10): bytes land in a power-of-two
+      ``(ring, lane_block)`` VMEM bank at the cursor mod ring — O(ring)
+      selects per byte plus one roll/flush per grid step.  The ring is
+      sized from ``t_block`` (:func:`ring_size`), so blocking the T axis
+      is what makes it small; with ``t_block=None`` the ring spans the
+      whole chunk's worst case.
+    * ``"onehot"``: the PR-5 path — every byte is a one-hot select over
+      the full ``(cap, lane_block)`` stream block, O(cap) per byte.  Kept
+      as the differential reference and for the measured scatter-cost
+      reduction in ``BENCH_encode.json``.
 
     Table layouts and ``chunk_size``/``t_block`` semantics are those of
     :func:`rans_encode_records`.  ``cap`` is the per-(chunk, lane) byte
@@ -431,12 +513,34 @@ def rans_encode_lanes(symbols: jax.Array,   # (lanes, T) int32
         lane_block = lanes
     if cap <= 0:
         raise ValueError(f"cap must be positive, got {cap}")
+    if scatter not in ("ring", "onehot"):
+        raise ValueError(f"scatter must be 'ring' or 'onehot', got "
+                         f"{scatter!r}")
+    if scatter == "ring" and t_block is None:
+        # autotuned T blocking: the ring is sized from t_block, so an
+        # unblocked T axis would make it span the whole chunk's worst case
+        # (>= cap — no cheaper than one-hot).  The analytic work model
+        # picks the blocking that minimizes scatter + drain + step cost
+        # within the VMEM budget (kernels/autotune.py).
+        _, t_len = symbols.shape
+        chunk = t_len if chunk_size is None else min(chunk_size, t_len)
+        layout = {1: "static", 2: "perpos", 3: "lane"}.get(tbl.freq.ndim)
+        if layout is not None and chunk > 0:
+            t_block = select_encode_t_block(chunk, cap, lane_block,
+                                            tbl.freq.shape[-1], layout)
     p = _encode_plan(symbols, tbl, chunk_size, lane_block, t_block)
+    ring = ring_size(p.tb) if scatter == "ring" else None
+    scratch = [
+        pltpu.VMEM((1, lane_block), _U32),   # encoder states across T
+        pltpu.VMEM((1, lane_block), _I32),   # byte cursors across T
+    ]
+    if ring is not None:
+        scratch.append(pltpu.VMEM((ring, lane_block), _U8))  # byte ring bank
 
     buf, start, length, ovf = pl.pallas_call(
         functools.partial(_encode_fused_kernel, t_len=p.t_len,
                           chunk_size=p.chunk, t_block=p.tb, n_tb=p.n_tb,
-                          layout=p.layout, cap=cap),
+                          layout=p.layout, cap=cap, ring=ring),
         grid=p.grid,
         in_specs=[p.sym_spec] + p.tbl_specs,
         out_specs=[
@@ -451,10 +555,7 @@ def rans_encode_lanes(symbols: jax.Array,   # (lanes, T) int32
             jax.ShapeDtypeStruct((p.n_chunks, lanes), _I32),
             jax.ShapeDtypeStruct((p.n_chunks, lanes), _I32),
         ],
-        scratch_shapes=[
-            pltpu.VMEM((1, lane_block), _U32),   # encoder states across T
-            pltpu.VMEM((1, lane_block), _I32),   # byte cursors across T
-        ],
+        scratch_shapes=scratch,
         interpret=interpret,
     )(p.sym_in, *p.planes_in)
     # (n_chunks, cap, lanes) -> the ChunkedLanes (n_chunks, lanes, cap)

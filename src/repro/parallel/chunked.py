@@ -28,7 +28,8 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
-from repro.core import coder, constants as C
+from repro.core import bitstream, coder, constants as C
+from repro.core.bitstream import ContainerSlab
 from repro.core.coder import ChunkedLanes, EncodedLanes
 from repro.core.spc import TableSet
 
@@ -160,7 +161,8 @@ def encode_chunked(symbols: jax.Array, tbl: TableSet, chunk_size: int,
     return enc
 
 
-def decode_chunked(chunks: ChunkedLanes, n_symbols: int, tbl: TableSet,
+def decode_chunked(chunks: ChunkedLanes | ContainerSlab, n_symbols: int,
+                   tbl: TableSet,
                    chunk_size: int, mesh: Mesh | None = None,
                    prob_bits: int = C.PROB_BITS, use_lut: bool = False,
                    predictor=None, backend: str = "coder",
@@ -181,21 +183,33 @@ def decode_chunked(chunks: ChunkedLanes, n_symbols: int, tbl: TableSet,
     ragged tail's rows ride the tail decode — probe accounting is
     identical to ``coder.decode_chunked(candidates=...)`` on every backend
     and mesh shape (topk == 0 disables speculation).
+
+    ``chunks`` may also be a :class:`~repro.core.bitstream.ContainerSlab`
+    (``bitstream.parse_chunked`` of a serialized container): the
+    single-device kernel path then decodes ZERO-COPY straight from the
+    packed payload slab (per-window DMA inside the kernel — no host- or
+    device-side right-align materialization at all), while the mesh and
+    coder paths rebuild the dense ``(n_chunks, lanes, cap)`` slab with one
+    device-side gather (``bitstream.slab_to_chunked``) — still never the
+    host copy.  Symbols and probe counts are bit-identical to passing the
+    equivalent ``ChunkedLanes`` on every path.
     """
     if backend == "kernel":
         from repro.kernels import ops as kops
     elif backend != "coder":
         raise ValueError(f"unknown decode backend {backend!r}")
+    slab_in = isinstance(chunks, ContainerSlab)
+    n_have = chunks.offset.shape[0] if slab_in else chunks.buf.shape[0]
     n_total = coder.num_chunks(n_symbols, chunk_size)
-    if chunks.buf.shape[0] != n_total:
+    if n_have != n_total:
         raise ValueError(
-            f"stream has {chunks.buf.shape[0]} chunks but n_symbols="
+            f"stream has {n_have} chunks but n_symbols="
             f"{n_symbols} at chunk_size={chunk_size} implies {n_total}")
     n_full, tail_len = divmod(n_symbols, chunk_size)
     if candidates is not None and candidates.shape[-1] == 0:
         candidates = None
     if candidates is not None:
-        lanes = chunks.buf.shape[1]
+        lanes = chunks.offset.shape[1] if slab_in else chunks.buf.shape[1]
         if candidates.shape[:2] != (n_symbols, lanes):
             raise ValueError(
                 f"candidate planes must be (T, lanes, topk)=({n_symbols}, "
@@ -203,14 +217,29 @@ def decode_chunked(chunks: ChunkedLanes, n_symbols: int, tbl: TableSet,
         candidates = candidates.astype(jnp.int32)
     if not _usable(mesh, n_full):
         if backend == "kernel":
+            if slab_in:
+                # zero-copy: the kernel DMAs each (chunk, lane) window out
+                # of the packed slab itself — no dense stream rebuild
+                return kops.rans_decode_chunked(
+                    n_symbols=n_symbols, tbl=tbl, chunk_size=chunk_size,
+                    prob_bits=prob_bits, predictor=predictor,
+                    candidates=candidates, interpret=interpret,
+                    from_container=chunks)
             return kops.rans_decode_chunked(
                 chunks, n_symbols, tbl, chunk_size, prob_bits=prob_bits,
                 predictor=predictor, candidates=candidates,
                 interpret=interpret)
+        if slab_in:
+            chunks = bitstream.slab_to_chunked(chunks)
         return coder.decode_chunked(chunks, n_symbols, tbl, chunk_size,
                                     prob_bits=prob_bits, use_lut=use_lut,
                                     predictor=predictor,
                                     candidates=candidates)
+    if slab_in:
+        # sharded path: rebuild the dense chunk slab with one device-side
+        # gather so the shard_map below sees the usual (n_chunks, lanes,
+        # cap) layout (host right-align copy still never runs)
+        chunks = bitstream.slab_to_chunked(chunks)
 
     per_position = coder.is_per_position(tbl, n_symbols)
     sub = jax.tree.map(lambda a: a[:n_full], chunks)

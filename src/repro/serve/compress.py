@@ -45,7 +45,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import coder, constants as C, spc
+from repro.core import bitstream, coder, constants as C, spc
 from repro.core.predictors import model_topk_candidates
 from repro.models.config import ModelConfig
 from repro.models.transformer import decode_step, init_cache
@@ -413,7 +413,8 @@ def _lm_decompress_fused_chunk(params, cfg: ModelConfig,
                        topk, interpret)
 
 
-def _fused_chunked_local(params, cfg: ModelConfig, chunks: coder.ChunkedLanes,
+def _fused_chunked_local(params, cfg: ModelConfig,
+                         chunks: "coder.ChunkedLanes | bitstream.ContainerSlab",
                          n_symbols: int, chunk_size: int, prob_bits: int,
                          topk: int, interpret: bool):
     """Fused chunked decode over (this device's slab of) the lane axis.
@@ -422,13 +423,21 @@ def _fused_chunked_local(params, cfg: ModelConfig, chunks: coder.ChunkedLanes,
     cache and fed-back token carry across chunk boundaries, exactly like the
     coder path — one fused program per chunk, only that chunk's byte buffer
     live at a time.  Returns ``(symbols (lanes, T), lane probe sums)``.
+
+    ``chunks`` may be a :class:`~repro.core.bitstream.ContainerSlab`: each
+    chunk's window then comes straight off the packed payload with one
+    device-side gather per chunk (``bitstream.chunk_encoded_from_slab``) —
+    the host right-align copy never runs and only one chunk's bytes are
+    ever materialized at a time (the streaming-decode shape, kept).
     """
-    lanes = chunks.buf.shape[1]
+    slab_in = isinstance(chunks, bitstream.ContainerSlab)
+    lanes = chunks.offset.shape[1] if slab_in else chunks.buf.shape[1]
     cache = init_cache(cfg, lanes, n_symbols)
     tok = jnp.full((lanes, 1), BOS, jnp.int32)
     outs, lane_sum = [], jnp.zeros((lanes,), jnp.int32)
     for c, n in enumerate(coder.chunk_lengths(n_symbols, chunk_size)):
-        enc = coder.chunk_encoded(chunks, c)
+        enc = (bitstream.chunk_encoded_from_slab(chunks, c) if slab_in
+               else coder.chunk_encoded(chunks, c))
         cache, tok, sym, probes = _lm_decompress_fused_chunk(
             params, cfg, enc, cache, tok, jnp.int32(c * chunk_size), n=n,
             prob_bits=prob_bits, topk=topk, interpret=interpret)
@@ -438,7 +447,8 @@ def _fused_chunked_local(params, cfg: ModelConfig, chunks: coder.ChunkedLanes,
 
 
 def lm_decompress_chunked(params, cfg: ModelConfig,
-                          chunks: coder.ChunkedLanes, n_symbols: int,
+                          chunks: "coder.ChunkedLanes | bitstream.ContainerSlab",
+                          n_symbols: int,
                           chunk_size: int, prob_bits: int = C.PROB_BITS,
                           topk: int = 4, backend: str = "coder",
                           mesh=None,
@@ -478,6 +488,16 @@ def lm_decompress_chunked(params, cfg: ModelConfig,
     per-lane counters are not aggregated across chunk shards, so
     ``lane_probes`` there requires ``mesh=None``.
 
+    ``chunks`` may also be a :class:`~repro.core.bitstream.ContainerSlab`
+    (``bitstream.parse_chunked`` of a serialized container) on every
+    backend: the two_pass kernel replay then decodes ZERO-COPY straight
+    from the packed payload slab (the in-kernel DMA window path), while
+    the sequential fused/coder scans pull each chunk's window with one
+    device-side gather per chunk (``bitstream.chunk_encoded_from_slab``)
+    — the host right-align copy never runs on any serve path.  Symbols
+    and probe counters are bit-identical to passing the equivalent
+    ``ChunkedLanes``.
+
     Returns ``(tokens (lanes, T), avg_probes[, per-lane probes])``.
     """
     if backend not in ("coder", "kernel", "two_pass"):
@@ -487,14 +507,22 @@ def lm_decompress_chunked(params, cfg: ModelConfig,
             "mesh= requires backend='kernel' or 'two_pass': the coder "
             "backend decodes inside the sequential model scan, so there is "
             "neither a fused program nor a pass 2 to place on a mesh")
-    lanes = chunks.buf.shape[1]
+    slab_in = isinstance(chunks, bitstream.ContainerSlab)
+    n_have = chunks.offset.shape[0] if slab_in else chunks.buf.shape[0]
+    lanes = chunks.offset.shape[1] if slab_in else chunks.buf.shape[1]
     n_total = coder.num_chunks(n_symbols, chunk_size)
-    if chunks.buf.shape[0] != n_total:
+    if n_have != n_total:
         raise ValueError(
-            f"stream has {chunks.buf.shape[0]} chunks but n_symbols="
+            f"stream has {n_have} chunks but n_symbols="
             f"{n_symbols} at chunk_size={chunk_size} implies {n_total}")
     if backend == "kernel":
         if _lane_mesh_check(mesh, lanes):
+            if slab_in:
+                # the lane mesh shards dense (…, lanes, cap) arrays; one
+                # device-side gather rebuilds them (host copy still never
+                # runs) — the unsharded fused path stays per-chunk windows
+                chunks = bitstream.slab_to_chunked(chunks)
+
             def local(params_l, chunks_l):
                 return _fused_chunked_local(params_l, cfg, chunks_l,
                                             n_symbols, chunk_size,
@@ -514,7 +542,8 @@ def lm_decompress_chunked(params, cfg: ModelConfig,
     tok = jnp.full((lanes, 1), BOS, jnp.int32)
     outs, lane_sum, planes = [], jnp.zeros((lanes,), jnp.int32), []
     for c, n in enumerate(coder.chunk_lengths(n_symbols, chunk_size)):
-        enc = coder.chunk_encoded(chunks, c)
+        enc = (bitstream.chunk_encoded_from_slab(chunks, c) if slab_in
+               else coder.chunk_encoded(chunks, c))
         res = _lm_decompress_chunk(
             params, cfg, enc, cache, tok, jnp.int32(c * chunk_size), n=n,
             prob_bits=prob_bits, topk=topk, collect_planes=collect)
@@ -541,9 +570,17 @@ def lm_decompress_chunked(params, cfg: ModelConfig,
                            prob_bits=prob_bits, backend="kernel",
                            candidates=cands, interpret=interpret)
         from repro.kernels.ops import rans_decode_chunked
-        sym, avg, per_lane = rans_decode_chunked(
-            chunks, n_symbols, tables, chunk_size, prob_bits=prob_bits,
-            candidates=cands, interpret=interpret, lane_probes=True)
+        if slab_in:
+            # pass 2 zero-copy: the kernel DMAs each (chunk, lane) window
+            # out of the packed slab — no dense stream rebuild at all
+            sym, avg, per_lane = rans_decode_chunked(
+                n_symbols=n_symbols, tbl=tables, chunk_size=chunk_size,
+                prob_bits=prob_bits, candidates=cands, interpret=interpret,
+                lane_probes=True, from_container=chunks)
+        else:
+            sym, avg, per_lane = rans_decode_chunked(
+                chunks, n_symbols, tables, chunk_size, prob_bits=prob_bits,
+                candidates=cands, interpret=interpret, lane_probes=True)
         if lane_probes:
             return sym, avg, per_lane
         return sym, avg

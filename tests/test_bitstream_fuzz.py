@@ -32,7 +32,7 @@ jax.config.update("jax_platforms", "cpu")
 pytestmark = pytest.mark.fuzz
 
 
-def _make_blobs():
+def _make_corpus():
     rng = np.random.default_rng(90)
     k, lanes, t, chunk = 32, 4, 48, 13
     tbl = spc.tables_from_probs(
@@ -45,12 +45,18 @@ def _make_blobs():
                                  n_symbols=t, checksums=True)
     v2n = bitstream.pack_chunked(*map(np.asarray, ch), chunk_size=chunk,
                                  n_symbols=t, checksums=False)
-    return {"v1": v1, "v2_crc": v2c, "v2_nocrc": v2n}
+    return {"blobs": {"v1": v1, "v2_crc": v2c, "v2_nocrc": v2n},
+            "tbl": tbl, "syms": syms, "t": t, "chunk": chunk}
 
 
 @pytest.fixture(scope="module")
-def blobs():
-    return _make_blobs()
+def corpus():
+    return _make_corpus()
+
+
+@pytest.fixture(scope="module")
+def blobs(corpus):
+    return corpus["blobs"]
 
 
 def _reader(name):
@@ -204,3 +210,86 @@ def test_index_length_inflation_is_bounded(blobs):
         mut[off:off + 4] = (0xFFFFFFF0).to_bytes(4, "little")
         with pytest.raises(ValueError, match=r"chunk \d+, lane \d+"):
             bitstream.unpack_chunked(bytes(mut))
+
+
+# ---------------------------------------------------------------------------
+# kernel-backend column: the zero-copy decode front door
+# (``parse_chunked`` -> ``from_container``) under the same corruptions —
+# mutated blobs surface the SAME named ValueErrors as the host reader, and
+# a hostile index can never make the kernel read out of the slab
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["v1", "v2_crc", "v2_nocrc"])
+def test_kernel_front_door_truncation_fuzz(blobs, name):
+    """Every truncation the host reader rejects, ``parse_chunked`` rejects
+    with the identical named error (shared validation, one source)."""
+    blob, read = blobs[name], _reader(name)
+    cuts = {0, 1, 3, 4, 7, len(blob) - 1}
+    for rng in sweep(95, 25):
+        cuts.add(int(ints(rng, 0, len(blob) - 1)))
+    for cut in sorted(cuts):
+        host = _must_only_value_error(read, blob[:cut])
+        kern = _must_only_value_error(bitstream.parse_chunked, blob[:cut])
+        assert host is not None and kern is not None, cut
+        assert str(host) == str(kern), cut
+
+
+@pytest.mark.parametrize("name", ["v1", "v2_crc", "v2_nocrc"])
+def test_kernel_front_door_flip_fuzz(corpus, name):
+    """One-byte flips: ``parse_chunked`` accepts/rejects exactly when the
+    host reader does, raising the identical named ValueError on reject; on
+    every accepted mutant the kernel decode from the packed slab returns
+    the same symbols as the coder decode of the host-unpacked dense stream
+    — garbage in equals garbage out, NEVER an out-of-bounds read."""
+    from repro.kernels import ops
+    blob, read = corpus["blobs"][name], _reader(name)
+    tbl, t, chunk = corpus["tbl"], corpus["t"], corpus["chunk"]
+    checked = 0
+    for rng in sweep(96, 80):
+        pos = int(ints(rng, 0, len(blob) - 1))
+        bit = int(ints(rng, 0, 7))
+        mut = bytearray(blob)
+        mut[pos] ^= 1 << bit
+        mut = bytes(mut)
+        host = _must_only_value_error(read, mut)
+        kern = _must_only_value_error(bitstream.parse_chunked, mut)
+        assert (host is None) == (kern is None), (pos, bit)
+        if host is not None:
+            assert str(host) == str(kern), (pos, bit)
+        elif checked < 4 and name != "v1":
+            cs = bitstream.parse_chunked(mut)
+            dense = bitstream.slab_to_chunked(cs)
+            csym, _ = coder.decode_chunked(dense, t, tbl, chunk)
+            ksym, _ = ops.rans_decode_chunked(
+                n_symbols=t, tbl=tbl, chunk_size=chunk, from_container=cs)
+            assert np.array_equal(np.asarray(csym), np.asarray(ksym)), (
+                pos, bit)
+            checked += 1
+    if name != "v1":
+        assert checked > 0, "sweep produced no accepted mutants to decode"
+
+
+def test_kernel_span_clamp_never_reads_out_of_slab(corpus):
+    """Defense in depth behind ``parse_chunked``: a ContainerSlab whose
+    index was poisoned AFTER validation (offsets past the payload end,
+    lengths past the window) must still decode without any exception —
+    the host-side base clip plus the in-kernel span clamp turn every
+    hostile (offset, length) into in-bounds reads of zero-padded windows,
+    never an OOB access (which interpret mode would raise on)."""
+    from repro.kernels import ops
+    cs = bitstream.parse_chunked(corpus["blobs"]["v2_nocrc"])
+    tbl, t, chunk = corpus["tbl"], corpus["t"], corpus["chunk"]
+    s = cs.slab.shape[0]
+    poisons = {
+        "offset_past_end": cs._replace(
+            offset=np.full_like(cs.offset, s + 1000)),
+        "length_past_window": cs._replace(
+            length=np.full_like(cs.length, cs.cap + 7)),
+        "both_hostile": cs._replace(
+            offset=np.full_like(cs.offset, s - 1),
+            length=np.full_like(cs.length, cs.cap + 3)),
+    }
+    for name, bad in poisons.items():
+        sym, _ = ops.rans_decode_chunked(
+            n_symbols=t, tbl=tbl, chunk_size=chunk, from_container=bad)
+        assert np.asarray(sym).shape == corpus["syms"].shape, name

@@ -69,3 +69,43 @@ def test_spc_kernel_compiled_matches_ref():
     got = np.asarray(ops.spc_quantize_tables(probs, interpret=False).freq)
     want = np.asarray(spc.quantize_probs(probs))
     np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("chunk", [None, 80])
+def test_ring_scatter_compiled_matches_onehot(chunk):
+    """The banked byte-ring encode datapath compiled for real hardware is
+    byte-identical to the one-hot row scatter it replaced (both compiled —
+    the cross-scatter contract must survive the Mosaic lowering, not just
+    the interpreter)."""
+    tbl, syms = _case(404, k=256, lanes=128, t=256)
+    if chunk is None:
+        ring = ops.rans_encode(syms, tbl, interpret=False)
+        onehot = ops.rans_encode(syms, tbl, scatter="onehot",
+                                 interpret=False)
+    else:
+        ring = ops.rans_encode_chunked(syms, tbl, chunk, interpret=False)
+        onehot = ops.rans_encode_chunked(syms, tbl, chunk, scatter="onehot",
+                                         interpret=False)
+    for g, w in zip(ring, onehot):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+def test_zero_copy_slab_decode_compiled_roundtrip():
+    """The zero-copy container decode (scalar-prefetch index planes +
+    in-kernel window DMA) compiled for real hardware round-trips the
+    packed v2 container bit-exactly against the dense-slab kernel."""
+    from repro.core import bitstream
+    tbl, syms = _case(405, k=256, lanes=128, t=256)
+    ch = ops.rans_encode_chunked(syms, tbl, 80, interpret=False)
+    blob = bitstream.pack_chunked(*map(np.asarray, ch), chunk_size=80,
+                                  n_symbols=256)
+    cs = bitstream.parse_chunked(blob)
+    dense, _, lp_d = ops.rans_decode_chunked(ch, 256, tbl, 80,
+                                             lane_probes=True,
+                                             interpret=False)
+    slab, _, lp_s = ops.rans_decode_chunked(
+        n_symbols=256, tbl=tbl, chunk_size=80, lane_probes=True,
+        interpret=False, from_container=cs)
+    np.testing.assert_array_equal(np.asarray(slab), np.asarray(syms))
+    np.testing.assert_array_equal(np.asarray(slab), np.asarray(dense))
+    np.testing.assert_array_equal(np.asarray(lp_s), np.asarray(lp_d))
