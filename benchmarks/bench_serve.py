@@ -1,0 +1,152 @@
+"""Batched serving engine vs. a serial one-request-at-a-time loop.
+
+    PYTHONPATH=src python -m benchmarks.bench_serve [--out BENCH_serve.json]
+
+Drives the same seeded Poisson compress workload through two servers:
+
+* **serial** — the pre-engine deployment: requests queue FIFO and each one
+  runs ``lm_compress_chunked`` + container pack start-to-finish before the
+  next begins (arrivals respected: the loop sleeps until a request exists).
+* **engine** — :class:`repro.serve.engine.BatchEngine` with wall-clock
+  admission: requests are continuously batched into slots of one traced
+  step program and ride the prefill fast path when eligible.
+
+Both paths use the paper's full ``ras-pimc`` probability model (the
+serving regime the engine exists for — per-symbol model cost dominating,
+few rANS lanes per request), and every engine blob is asserted
+byte-identical to the serial path's before any number is reported
+(``byte_identical`` seals the record).  Latency is completion minus
+arrival, so serial queueing delay is charged honestly.  Standalone runs
+emit ``BENCH_serve.json``; ``main(emit)`` plugs into benchmarks.run.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import get_config
+from repro.core import bitstream
+from repro.data.pipeline import token_stream
+from repro.models import init_model
+from repro.serve.compress import lm_compress_chunked
+from repro.serve.engine import BatchEngine
+
+
+def _serial_blob(params, cfg, toks, chunk_size, n_symbols):
+    stats = lm_compress_chunked(params, cfg, jnp.asarray(toks),
+                                chunk_size=chunk_size)
+    enc = jax.tree.map(np.asarray, stats.chunks)
+    return bitstream.pack_chunked(enc.buf, enc.start, enc.length,
+                                  enc.overflow, chunk_size=chunk_size,
+                                  n_symbols=n_symbols)
+
+
+def _serial_run(params, cfg, streams, arrivals, chunk_size, n_symbols):
+    """One-at-a-time server: FIFO by arrival, blobs + per-request latency."""
+    blobs, lat = [], []
+    t0 = time.perf_counter()
+    for toks, arr in zip(streams, arrivals):
+        gap = arr - (time.perf_counter() - t0)
+        if gap > 0:                       # server idle until the request exists
+            time.sleep(gap)
+        blobs.append(_serial_blob(params, cfg, toks, chunk_size, n_symbols))
+        lat.append((time.perf_counter() - t0) - arr)
+    return blobs, np.asarray(lat), time.perf_counter() - t0
+
+
+def _engine_run(params, cfg, streams, arrivals, *, slots, lanes, chunk_size,
+                n_symbols, prefill="auto"):
+    eng = BatchEngine(params, cfg, slots=slots, lanes=lanes,
+                      chunk_size=chunk_size, max_len=n_symbols,
+                      prefill=prefill)
+    rids = [eng.submit_compress(s, arrival=float(a))
+            for s, a in zip(streams, arrivals)]
+    t0 = time.perf_counter()
+    res = eng.run(clock="wall")
+    wall = time.perf_counter() - t0
+    blobs, lat = [], []
+    for rid, arr in zip(rids, arrivals):
+        r = res[rid]
+        assert r.ok, r.error
+        blobs.append(r.blob)
+        lat.append(r.completed_at - arr)
+    return blobs, np.asarray(lat), wall, eng.prefill_cycles
+
+
+def run(streams: int = 16, slots: int = 4, lanes: int = 2,
+        n_symbols: int = 64, chunk_size: int = 16,
+        arrival_rate_hz: float = 200.0, seed: int = 0) -> list[dict]:
+    cfg = get_config("ras-pimc")
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / arrival_rate_hz,
+                                         size=streams))
+    data = [np.asarray(token_stream(cfg.vocab_size, (lanes, n_symbols),
+                                    seed=100 + i), np.int32)
+            for i in range(streams)]
+
+    # warm both servers (compile), then time a clean pass of each.
+    _serial_run(params, cfg, data, np.zeros(streams), chunk_size, n_symbols)
+    _engine_run(params, cfg, data, np.zeros(streams), slots=slots,
+                lanes=lanes, chunk_size=chunk_size, n_symbols=n_symbols)
+
+    s_blobs, s_lat, s_wall = _serial_run(params, cfg, data, arrivals,
+                                         chunk_size, n_symbols)
+    e_blobs, e_lat, e_wall, pf = _engine_run(
+        params, cfg, data, arrivals, slots=slots, lanes=lanes,
+        chunk_size=chunk_size, n_symbols=n_symbols)
+    identical = all(e == s for e, s in zip(e_blobs, s_blobs))
+    assert identical, "engine blob diverged from the single-request path"
+
+    return [{
+        "name": f"serve_s{streams}_sl{slots}_l{lanes}_t{n_symbols}"
+                f"_c{chunk_size}",
+        "arch": cfg.name,
+        "streams": streams,
+        "slots": slots,
+        "lanes": lanes,
+        "n_symbols": n_symbols,
+        "chunk_size": chunk_size,
+        "arrival_rate_hz": arrival_rate_hz,
+        "seed": seed,
+        "serial_streams_per_s": streams / s_wall,
+        "engine_streams_per_s": streams / e_wall,
+        "speedup": s_wall / e_wall,
+        "serial_p50_s": float(np.percentile(s_lat, 50)),
+        "serial_p99_s": float(np.percentile(s_lat, 99)),
+        "engine_p50_s": float(np.percentile(e_lat, 50)),
+        "engine_p99_s": float(np.percentile(e_lat, 99)),
+        "prefill_cycles": pf,
+        "byte_identical": identical,
+    }]
+
+
+def main(emit):
+    for p in run():
+        emit(f"{p['name']}_speedup", p["speedup"],
+             f"engine {p['engine_streams_per_s']:.1f} vs serial "
+             f"{p['serial_streams_per_s']:.1f} streams/s, p99 "
+             f"{p['engine_p99_s']:.2f}s vs {p['serial_p99_s']:.2f}s, "
+             f"{p['prefill_cycles']} prefill cycles, byte-identical")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_serve.json")
+    args = ap.parse_args()
+    pts = run()
+    with open(args.out, "w") as f:
+        json.dump(pts, f, indent=2)
+    for p in pts:
+        print(f"{p['name']}: engine {p['engine_streams_per_s']:.1f} "
+              f"streams/s vs serial {p['serial_streams_per_s']:.1f} "
+              f"({p['speedup']:.2f}x), p99 {p['engine_p99_s']:.2f}s vs "
+              f"{p['serial_p99_s']:.2f}s, byte-identical "
+              f"{p['byte_identical']}")
+    print(f"wrote {len(pts)} points -> {args.out}")

@@ -22,6 +22,10 @@ Checked invariants:
   ``container_zero_copy_identical``.
 * BENCH_chunked.json — non-empty sweep with throughput fields on every
   point.
+* BENCH_serve.json — the batched engine sustains >= 2x the serial
+  one-request-at-a-time loop's streams/sec at equal-or-better p99
+  latency, and every record seals ``byte_identical`` (engine blobs ==
+  single-request path).
 """
 
 from __future__ import annotations
@@ -88,10 +92,31 @@ def check_chunked(path: str) -> str:
     return f"{len(pts)} sweep points"
 
 
+def check_serve(path: str) -> str:
+    pts = _points(path)
+    for p in pts:
+        if not (p["serial_streams_per_s"] > 0
+                and p["engine_streams_per_s"] > 0):
+            _fail(path, f"{p['name']}: non-positive throughput")
+        if not (p["serial_p50_s"] <= p["serial_p99_s"]
+                and p["engine_p50_s"] <= p["engine_p99_s"]):
+            _fail(path, f"{p['name']}: latency percentiles out of order")
+        if p["speedup"] < 2.0:
+            _fail(path, f"{p['name']}: engine speedup {p['speedup']:.2f}x "
+                        "below the 2x continuous-batching bar")
+        if p["engine_p99_s"] > p["serial_p99_s"]:
+            _fail(path, f"{p['name']}: engine p99 worse than serial")
+        if p["byte_identical"] is not True:
+            _fail(path, f"{p['name']}: byte-identity seal missing")
+    best = max(p["speedup"] for p in pts)
+    return f"{len(pts)} points, engine {best:.2f}x serial, all sealed"
+
+
 CHECKS = {
     "BENCH_encode.json": check_encode,
     "BENCH_decode.json": check_decode,
     "BENCH_chunked.json": check_chunked,
+    "BENCH_serve.json": check_serve,
 }
 
 

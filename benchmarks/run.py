@@ -25,6 +25,7 @@ SUITES = {
     "lanes": "bench_lanes",
     "spc": "bench_spc",
     "chunked": "bench_chunked",
+    "serve": "bench_serve",
 }
 
 

@@ -69,6 +69,16 @@ def quantize_probs(probs: jax.Array, prob_bits: int = C.PROB_BITS) -> jax.Array:
     the CDF is strictly monotone (every symbol keeps f >= 1).
 
     Works on a single distribution ``(K,)`` or a batch ``(..., K)``.
+
+    §Perf: the correction runs on ONE stable ascending sort (XLA's CPU
+    sort is a scalar loop — it was 80% of the serve profile at four sorts
+    per call).  In sorted order the ascending rank is the position itself;
+    the descending stable rank follows exactly from tie-run bookkeeping
+    (``rank_desc = K - runlen + 2*pos_in_run - rank_asc`` — stable sorts
+    keep equal keys in index order, so a run member's position within its
+    run is its tie-break count for BOTH directions); inverse permutations
+    are scatters, not second sorts.  All integer identities — bit-identical
+    to the four-argsort form, pinned in tests/test_core_rans.py.
     """
     C.check_prob_bits(prob_bits)
     total = 1 << prob_bits
@@ -86,22 +96,33 @@ def quantize_probs(probs: jax.Array, prob_bits: int = C.PROB_BITS) -> jax.Array:
     delta = total - jnp.sum(f0, axis=-1, keepdims=True)  # (..., 1)
     resid = scaled - f0.astype(jnp.float32)
 
+    order_asc = jnp.argsort(resid, axis=-1, stable=True)
+    sortd = jnp.take_along_axis(resid, order_asc, axis=-1)
+    pidx = jnp.broadcast_to(jnp.arange(k, dtype=_I32), resid.shape)
+    edge = jnp.ones(resid.shape[:-1] + (1,), bool)
+    first = jnp.concatenate([edge, sortd[..., 1:] != sortd[..., :-1]], -1)
+    last = jnp.concatenate([first[..., 1:], edge], -1)
+    ax = resid.ndim - 1
+    start = jax.lax.cummax(jnp.where(first, pidx, 0), axis=ax)
+    end = jax.lax.cummin(jnp.where(last, pidx, k - 1), axis=ax, reverse=True)
+    runlen = end - start + 1                  # tie-run extent at each slot
+    rank_desc_sorted = k - runlen + 2 * (pidx - start) - pidx
+
     # --- delta > 0: distribute delta units; BF16 storage error can make
     # delta exceed K, so give floor(delta/K) to every symbol and the
     # remainder to the largest residuals (stable largest-remainder rule).
-    order_desc = jnp.argsort(-resid, axis=-1, stable=True)
-    rank_desc = jnp.argsort(order_desc, axis=-1, stable=True)  # inverse perm
+    rank_desc = jnp.put_along_axis(jnp.zeros_like(pidx), order_asc,
+                                   rank_desc_sorted, axis=-1, inplace=False)
     f_pos = f0 + delta // k + (rank_desc < delta % k).astype(_I32)
 
     # --- delta < 0: remove `-delta` units, smallest residual first, never
     # below 1.  capacity = f0 - 1; waterfill along ascending residual.
     need = (-delta).astype(_I32)                              # (..., 1)
-    order_asc = jnp.argsort(resid, axis=-1, stable=True)
     cap_sorted = jnp.take_along_axis(f0 - 1, order_asc, axis=-1)
     cum_excl = jnp.cumsum(cap_sorted, axis=-1) - cap_sorted
     take_sorted = jnp.clip(need - cum_excl, 0, cap_sorted)
-    rank_asc = jnp.argsort(order_asc, axis=-1, stable=True)
-    take = jnp.take_along_axis(take_sorted, rank_asc, axis=-1)
+    take = jnp.put_along_axis(jnp.zeros_like(pidx), order_asc, take_sorted,
+                              axis=-1, inplace=False)
     f_neg = f0 - take
 
     f = jnp.where(delta >= 0, f_pos, f_neg)

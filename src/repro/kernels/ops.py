@@ -245,6 +245,43 @@ def rans_decode_chunked(chunks: ChunkedLanes | None = None,
     return out
 
 
+def rans_decode_step_rows(buf_t: jax.Array, s: jax.Array, ptr: jax.Array,
+                          tbl: TableSet,
+                          prob_bits: int = C.PROB_BITS,
+                          candidates: jax.Array | None = None,
+                          backend: str = "kernel",
+                          interpret: bool = True):
+    """One rANS symbol pop across a flattened ``slots x lanes`` row axis.
+
+    The batched serve engine's step primitive (``serve.engine``): rows are
+    the engine's continuous-batching batch axis — every row owns a private
+    byte stream (one column of ``buf_t``), private coder state and its own
+    candidate row, so the per-step kernel that serves one request's lanes
+    serves a whole slot batch unchanged (the kernel is row-generic; this
+    wrapper is the batch-slot plumbing and the single dispatch point for
+    the engine's two step backends).  ``buf_t`` is the ``(cap, rows)``
+    TRANSPOSED stream slab — transpose once outside the scan, exactly like
+    the fused serve path.  ``tbl`` rows are the per-row per-step TableSet
+    ``(rows, K)``; ``candidates`` an optional ``(rows, topk)`` model-top-k
+    plane.  ``backend="kernel"`` runs the per-step Pallas kernel
+    (``rans_decode_step``), ``backend="coder"`` the pure-JAX
+    ``coder.decode_get`` — bit-identical on symbols AND probe counters
+    (both consume ``core.search``).  Returns
+    ``(s', ptr', symbols (rows,), probes (rows,))``.
+    """
+    if backend == "kernel":
+        return rans_decode_step(buf_t, s, ptr, tbl.freq, tbl.cdf,
+                                prob_bits=prob_bits, candidates=candidates,
+                                interpret=interpret)
+    if backend != "coder":
+        raise ValueError(f"unknown step backend {backend!r}")
+    from repro.core import coder
+    st, sym, probes = coder.decode_get(
+        coder.DecState(s, ptr), buf_t.T, tbl, prob_bits,
+        candidates=candidates)
+    return st.s, st.ptr, sym, probes
+
+
 def spc_quantize_tables(probs: jax.Array,
                         prob_bits: int = C.PROB_BITS,
                         batch_block: int = 8,

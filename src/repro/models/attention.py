@@ -26,6 +26,66 @@ from repro.models.param import ParamDef
 
 _NEG = -1e30
 
+# Ring-reduction tile (slots).  The decode softmax/value reduction runs in
+# fixed tiles of this many cache slots, accumulated sequentially, so the
+# reduction tree is a function of slot *content* only — never of the ring
+# length.  See _ring_blocks below for why that invariance is load-bearing.
+_RING_BLOCK = 32
+
+
+def _ring_blocks(x: jax.Array, axis: int) -> jax.Array:
+    """Zero-pad ``axis`` to a multiple of ``_RING_BLOCK`` and split it into
+    a leading scan axis of ``(n_blocks, ..., _RING_BLOCK, ...)`` tiles.
+
+    §Bit-exactness: XLA retiles a fused reduction with the extent of the
+    reduced axis, so the *same* 16 live cache slots summed under a 20-slot
+    vs a 32-slot ring round differently (~1 ulp).  One ulp is enough to
+    flip a quantized coding table entry, and a flipped table desyncs the
+    batched engine's rANS decode from the single-request encode it must be
+    byte-identical to.  Scanning fixed-size tiles pins every reduction tree:
+    a longer ring only appends all-zero tiles, each contributing an exact
+    +0.0 to the running accumulator.
+    """
+    n = x.shape[axis]
+    nb = -(-n // _RING_BLOCK)
+    pad = nb * _RING_BLOCK - n
+    ax = axis % x.ndim
+    if pad:
+        widths = [(0, 0)] * x.ndim
+        widths[ax] = (0, pad)
+        x = jnp.pad(x, widths)
+    x = x.reshape(x.shape[:ax] + (nb, _RING_BLOCK) + x.shape[ax + 1:])
+    return jnp.moveaxis(x, ax, 0)
+
+
+def _ring_attn(prob: jax.Array, v: jax.Array, contract) -> jax.Array:
+    """Ring-length-invariant ``contract(prob, v)`` summed over cache tiles.
+
+    ``prob`` carries the cache axis last, ``v`` carries it at axis 1;
+    ``contract`` reduces one ``_RING_BLOCK`` tile pair.  Invalid slots must
+    already hold exact zeros in ``prob`` (padding adds more zeros).
+    """
+    pb = _ring_blocks(prob, -1)
+    vb = _ring_blocks(v, 1)
+    out0 = jax.eval_shape(contract, pb[0], vb[0])
+
+    def body(acc, xs):
+        return acc + contract(*xs), None
+
+    acc, _ = jax.lax.scan(body, jnp.zeros(out0.shape, out0.dtype), (pb, vb))
+    return acc
+
+
+def _ring_sum(e: jax.Array) -> jax.Array:
+    """Ring-length-invariant sum of ``e`` over its last (cache) axis."""
+    eb = _ring_blocks(e, -1)
+
+    def body(acc, blk):
+        return acc + jnp.sum(blk, axis=-1), None
+
+    acc, _ = jax.lax.scan(body, jnp.zeros(e.shape[:-1], e.dtype), eb)
+    return acc
+
 
 def kv_head_map(cfg: ModelConfig) -> np.ndarray:
     """Static q-head -> kv-head index map (GQA groups; padded heads -> 0)."""
@@ -182,14 +242,80 @@ def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
             "v": jnp.zeros((batch, max_len, kv, dh), dtype)}
 
 
+def _attend_slots(q: jax.Array, ck: jax.Array, cv: jax.Array,
+                  valid: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Single-position ring attention core: q (B,1,Hp,Dh) against the cache
+    (B,R,KV,Dh) under a (B|1, R) slot-validity mask -> (B,1,Hp,Dh).
+
+    This is the ONE implementation of the decode score/softmax/value chain.
+    Both the step path (:func:`attn_decode`) and the prefill fast path
+    (:func:`attn_prefill`, which ``lax.map``s it over chunk positions) go
+    through it with identical q-extent-1 shapes — a multi-query einsum
+    rounds ~1 ulp differently than S single-query ones, which is enough to
+    flip a quantized coding table, so the shapes must literally match.
+    """
+    scale = 1.0 / math.sqrt(cfg.head_dim_)
+    hp, kv = cfg.n_heads_padded, cfg.n_kv_heads
+    grouped = kv > 0 and hp % kv == 0
+    # Scores are computed per _RING_BLOCK tile of cache slots: a full-width
+    # GEMM rounds its remainder columns (cache_len % vector width) through a
+    # different instruction path, so the same slot's score drifts ~1 ulp
+    # with the ring length.  Per-tile GEMMs have one fixed shape.
+    if grouped:
+        # §Perf: grouped GQA decode — contract q-head groups against the kv
+        # cache directly, never materializing the (S, H) expanded cache
+        # (16x the cache bytes for kv=8, H=128).
+        g = hp // kv
+        qg = q.reshape(q.shape[0], 1, kv, g, q.shape[-1])
+        sb = jax.lax.map(
+            lambda kb: jnp.einsum("bqhgd,bkhd->bhgqk", qg, kb,
+                                  preferred_element_type=jnp.float32),
+            _ring_blocks(ck, 1))
+    else:
+        sb = jax.lax.map(
+            lambda kb: jnp.einsum("bqhd,bkhd->bhqk", q, kb,
+                                  preferred_element_type=jnp.float32),
+            _ring_blocks(_expand_kv(ck, cfg), 1))
+    # (nb, ..., BLOCK) -> (..., nb * BLOCK): the padded cache axis
+    sb = jnp.moveaxis(sb, 0, -2)
+    s = sb.reshape(sb.shape[:-2] + (-1,)) * scale
+    # Slots past cache_len are tile padding: never valid.
+    validp = jnp.pad(valid, ((0, 0), (0, s.shape[-1] - valid.shape[-1])))
+    vshape = (validp.shape[0],) + (1,) * (s.ndim - 2) + (s.shape[-1],)
+    vmask = validp.reshape(vshape)
+    s = jnp.where(vmask, s, _NEG)
+    # Ring-length-invariant softmax: max is exactly associative, exp is
+    # elementwise, and the two reductions (denominator, weighted values)
+    # run over fixed slot tiles — see _ring_blocks.  Invalid slots are
+    # forced to an exact 0.0 weight rather than trusting exp underflow.
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.where(vmask, jnp.exp(s - m), 0.0)
+    prob = (e / _ring_sum(e)[..., None]).astype(q.dtype)
+    if grouped:
+        out = _ring_attn(prob, cv,
+                         lambda pb, vb: jnp.einsum("bhgqk,bkhd->bqhgd",
+                                                   pb, vb))
+        return out.reshape(out.shape[0], 1, hp, out.shape[-1])
+    return _ring_attn(prob, _expand_kv(cv, cfg),
+                      lambda pb, vb: jnp.einsum("bhqk,bkhd->bqhd", pb, vb))
+
+
 def attn_decode(p: dict, x1: jax.Array, cache: dict, pos: jax.Array,
                 cfg: ModelConfig, mem: jax.Array | None = None,
                 window: int | None = None):
-    """One-token decode.  x1: (B,1,D); pos: scalar int32 absolute position.
+    """One-token decode.  x1: (B,1,D); pos: absolute position — a scalar
+    int32, or a ``(B,)`` vector of per-row positions (the batched serve
+    engine's continuous-batching slots: every row advances its own ring
+    independently).  The scalar path is float-identical to the vector path
+    with a constant vector (same broadcasted graph, one row of masks).
 
     With ``window`` (or cfg.sliding_window/local_window) and a cache sized
     to the window, indexing is a ring buffer — O(window) memory at 500k+
-    context.  Cross-attention decodes against full ``mem`` (no cache).
+    context.  A cache shorter than the sequence *always* rings (slot =
+    pos % cache_len; entries older than cache_len are overwritten and
+    masked out by age), window or not — the engine's shared-cache wrap
+    contract, pinned logit-level in tests/test_serve_engine.py.
+    Cross-attention decodes against full ``mem`` (no cache).
     """
     if mem is not None:
         q, k, v = _project_qkv(p, x1, cfg, mem)
@@ -199,51 +325,94 @@ def attn_decode(p: dict, x1: jax.Array, cache: dict, pos: jax.Array,
         return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), cache
 
     q, k, v = _project_qkv(p, x1, cfg, None)
-    posb = jnp.asarray(pos)[None]
-    q = apply_rope(q, posb[None, :], cfg.rope_theta)
-    k = apply_rope(k, posb[None, :], cfg.rope_theta)
+    pos_v = jnp.asarray(pos)
+    # rows: (B,) per-row positions, or a broadcast (1,) row for scalar pos
+    pos_b = pos_v if pos_v.ndim == 1 else pos_v[None]
+    q = apply_rope(q, pos_b[:, None], cfg.rope_theta)
+    k = apply_rope(k, pos_b[:, None], cfg.rope_theta)
     cache_len = cache["k"].shape[1]
-    slot = pos % cache_len
+    slot = pos_b % cache_len
     # §Perf (llama3-405b decode_32k): masked ring write instead of
     # dynamic_update_slice — elementwise select keeps the context-parallel
     # cache sharded (DUS at a traced offset forced SPMD to materialize the
     # full cache per chip: 2x cache temp + reshard).
-    hot = (jnp.arange(cache_len) == slot)[None, :, None, None]
+    hot = (jnp.arange(cache_len)[None, :] == slot[:, None])[:, :, None, None]
     ck = jnp.where(hot, k.astype(cache["k"].dtype), cache["k"])
     cv = jnp.where(hot, v.astype(cache["v"].dtype), cache["v"])
 
-    scale = 1.0 / math.sqrt(cfg.head_dim_)
-    hp, kv = cfg.n_heads_padded, cfg.n_kv_heads
-    grouped = kv > 0 and hp % kv == 0
-    if grouped:
-        # §Perf: grouped GQA decode — contract q-head groups against the kv
-        # cache directly, never materializing the (S, H) expanded cache
-        # (16x the cache bytes for kv=8, H=128).
-        g = hp // kv
-        qg = q.reshape(q.shape[0], 1, kv, g, q.shape[-1])
-        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, ck,
-                       preferred_element_type=jnp.float32) * scale
-    else:
-        kf = _expand_kv(ck, cfg)
-        s = jnp.einsum("bqhd,bkhd->bhqk", q, kf,
-                       preferred_element_type=jnp.float32) * scale
     idx = jnp.arange(cache_len)
     # Unified ring semantics (covers the linear cache too, where slot == pos):
     # age of the entry in each slot; unwritten slots have age > pos.
-    age = (slot - idx) % cache_len
-    valid = age <= pos
+    # Per-row when pos is a vector — each batch row masks its own ring.
+    age = (slot[:, None] - idx[None, :]) % cache_len      # (1|B, cache_len)
+    valid = age <= pos_b[:, None]
     win = window if window is not None else (cfg.local_window
                                              or cfg.sliding_window)
     if win:
         valid &= age < win
-    vshape = (1,) * (s.ndim - 1) + (cache_len,)
-    s = jnp.where(valid.reshape(vshape), s, _NEG)
-    prob = jax.nn.softmax(s, axis=-1).astype(q.dtype)
-    if grouped:
-        out = jnp.einsum("bhgqk,bkhd->bqhgd", prob, cv)
-        out = out.reshape(out.shape[0], 1, hp, out.shape[-1])
-    else:
-        vf = _expand_kv(cv, cfg)
-        out = jnp.einsum("bhqk,bkhd->bqhd", prob, vf)
+    out = _attend_slots(q, ck, cv, valid, cfg)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, {"k": ck, "v": cv}
+
+
+def attn_prefill(p: dict, xs: jax.Array, cache: dict, pos0: jax.Array,
+                 n_valid: jax.Array, cfg: ModelConfig,
+                 window: int | None = None):
+    """Teacher-forced multi-position decode: one block-parallel pass over
+    ``S`` positions per row, bit-identical to ``S`` sequential
+    :func:`attn_decode` steps.  ``xs``: (B,S,D); ``pos0``/``n_valid``: (B,)
+    per-row chunk start and live step count (rows beyond ``n_valid`` are
+    frozen — their queries are computed and discarded, nothing is written).
+
+    Identity argument: projections/norms are batch-extent-independent on
+    the target backend (each output element of a GEMM/rmsnorm is its own
+    fixed-order reduction), and the attend itself runs the SAME q-extent-1
+    :func:`_attend_slots` core as the step path, ``lax.map``-ed over the S
+    positions — a multi-query score/value einsum rounds ~1 ulp differently
+    than S single-query ones, so the shapes must literally match.  The one
+    structural divergence — this writes all S entries before any query
+    attends — is masked out: a future in-chunk entry is ``valid=False``
+    for earlier queries exactly where the step path would have seen a dead
+    zero slot.  That argument needs ``pos0 + S <= cache_len`` (no slot
+    still visible to a query is overwritten); callers gate wrapped streams
+    to the step path.
+    """
+    q, k, v = _project_qkv(p, xs, cfg, None)
+    S = xs.shape[1]
+    pq = pos0[:, None] + jnp.minimum(jnp.arange(S)[None, :],
+                                     n_valid[:, None])          # (B, S)
+    q = apply_rope(q, pq, cfg.rope_theta)
+    k = apply_rope(k, pq, cfg.rope_theta)
+    cache_len = cache["k"].shape[1]
+    offs = (jnp.arange(cache_len)[None, :] - pos0[:, None]) % cache_len
+    wr = offs < n_valid[:, None]                                # (B, R)
+    src = jnp.minimum(offs, S - 1)
+    knew = jnp.take_along_axis(k, src[..., None, None], axis=1)
+    vnew = jnp.take_along_axis(v, src[..., None, None], axis=1)
+    ck = jnp.where(wr[..., None, None], knew.astype(cache["k"].dtype),
+                   cache["k"])
+    cv = jnp.where(wr[..., None, None], vnew.astype(cache["v"].dtype),
+                   cache["v"])
+    # absolute position each slot holds after the chunk's writes; slots the
+    # chunk left alone hold pre-chunk entries (negative = never written)
+    spos = jnp.where(wr, pos0[:, None] + offs,
+                     pos0[:, None] - cache_len + offs)          # (B, R)
+    valid = ((spos[:, None, :] <= pq[:, :, None])
+             & (spos[:, None, :] >= 0))                         # (B, S, R)
+    win = window if window is not None else (cfg.local_window
+                                             or cfg.sliding_window)
+    if win:
+        valid &= (pq[:, :, None] - spos[:, None, :]) < win
+
+    # Per-position attend at the step path's exact q-extent-1 shapes; only
+    # the O(S·R) attend loops — the O(S·D²) projections/norms stay batched,
+    # which is where the prefill speedup lives.
+    def one_pos(xs_t):
+        q1, val = xs_t                                      # (B,Hp,Dh),(B,R)
+        return _attend_slots(q1[:, None], ck, cv, val, cfg)[:, 0]
+
+    out = jax.lax.map(one_pos, (jnp.moveaxis(q, 1, 0),
+                                jnp.moveaxis(valid, 1, 0)))
+    out = jnp.moveaxis(out, 0, 1)                           # (B,S,Hp,Dh)
     y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
     return y, {"k": ck, "v": cv}

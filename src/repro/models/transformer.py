@@ -24,8 +24,8 @@ from dataclasses import replace
 import jax
 import jax.numpy as jnp
 
-from repro.models.attention import (attn_decode, attn_forward, init_kv_cache,
-                                    make_attn_defs)
+from repro.models.attention import (attn_decode, attn_forward, attn_prefill,
+                                    init_kv_cache, make_attn_defs)
 from repro.models.config import ModelConfig
 from repro.models.layers import (chunked_xent_loss, embed, logits,
                                  make_embedding, make_mlp, make_rmsnorm, mlp,
@@ -122,6 +122,32 @@ def block_decode(kind: str, p: dict, x1: jax.Array, cache: dict,
     return x1 + h, new_cache
 
 
+def block_prefill(kind: str, p: dict, xs: jax.Array, cache: dict,
+                  pos0: jax.Array, n_valid: jax.Array, cfg: ModelConfig):
+    """Teacher-forced block over S positions — bit-identical to S
+    sequential ``block_decode`` steps (attention kinds only; see
+    :func:`can_prefill`)."""
+    h = rmsnorm(p["ln1"], xs, cfg.norm_eps)
+    h, kv = attn_prefill(p["attn"], h, cache["kv"], pos0, n_valid, cfg)
+    new_cache = dict(cache, kv=kv)
+    xs = xs + h
+    h = rmsnorm(p["ln2"], xs, cfg.norm_eps)
+    if kind == "attn_moe":
+        h, _ = moe(p["ffn"], h, cfg)
+    else:
+        h = mlp(p["ffn"], h)
+    return xs + h, new_cache
+
+
+def can_prefill(cfg: ModelConfig) -> bool:
+    """True when every block is a self-attention kind, so teacher-forced
+    chunks can run block-parallel (ssm/rec/cross carry sequential state or
+    memory the prefill path does not model)."""
+    return not cfg.is_encdec and all(
+        kind in ("attn", "attn_moe")
+        for pat, _reps in cfg.stages for kind in pat)
+
+
 def init_block_cache(kind: str, cfg: ModelConfig, batch: int, max_len: int,
                      dtype) -> dict:
     if kind in ("attn", "attn_moe", "dec"):
@@ -208,6 +234,35 @@ def stage_decode(params: dict, cache: dict, x1: jax.Array, pos: jax.Array,
         outs.append(c)
     new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
     return x1, new_cache
+
+
+def stage_prefill(params: dict, cache: dict, xs: jax.Array, pos0: jax.Array,
+                  n_valid: jax.Array, pattern: tuple[str, ...],
+                  cfg: ModelConfig):
+    def unit(xs, layer_p, layer_c):
+        new_c = {}
+        for i, kind in enumerate(pattern):
+            key = f"b{i}_{kind}"
+            xs, c = block_prefill(kind, layer_p[key], xs, layer_c[key],
+                                  pos0, n_valid, cfg)
+            new_c[key] = c
+        return xs, new_c
+
+    if cfg.scan_layers:
+        def body(carry, xs_):
+            layer_p, layer_c = xs_
+            return unit(carry, layer_p, layer_c)
+        xs, new_cache = jax.lax.scan(body, xs, (params, cache))
+        return xs, new_cache
+    reps = jax.tree.leaves(params)[0].shape[0]
+    outs = []
+    for r in range(reps):
+        layer_p = jax.tree.map(lambda a: a[r], params)
+        layer_c = jax.tree.map(lambda a: a[r], cache)
+        xs, c = unit(xs, layer_p, layer_c)
+        outs.append(c)
+    new_cache = jax.tree.map(lambda *x: jnp.stack(x), *outs)
+    return xs, new_cache
 
 
 def init_stage_cache(pattern: tuple[str, ...], reps: int, cfg: ModelConfig,
@@ -298,7 +353,13 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
 
 def decode_step(params: dict, cache: dict, token: jax.Array, pos: jax.Array,
                 cfg: ModelConfig, memory: jax.Array | None = None):
-    """One serving step: token (B,1) int32, pos scalar -> (logits (B,V), cache')."""
+    """One serving step: token (B,1) int32 -> (logits (B,V), cache').
+
+    ``pos`` is a scalar int32 absolute position, or a ``(B,)`` vector of
+    per-row positions (batched serving: each row of the shared ring cache
+    advances independently — see ``serve.engine.BatchEngine``).  Only
+    attention consumes positions; ssm/rglru decode steps ignore them.
+    """
     x1 = embed(params["tok"], token, _dtype(cfg))
     new_cache = {}
     for i, (pat, reps) in enumerate(cfg.stages):
@@ -308,6 +369,27 @@ def decode_step(params: dict, cache: dict, token: jax.Array, pos: jax.Array,
     x1 = rmsnorm(params["final_norm"], x1, cfg.norm_eps)
     lg = logits(params["tok"], x1, cfg)[:, 0]
     return lg, new_cache
+
+
+def prefill_chunk(params: dict, cache: dict, tokens: jax.Array,
+                  pos0: jax.Array, n_valid: jax.Array, cfg: ModelConfig):
+    """Teacher-forced serving chunk: tokens (B,S) int32 inputs at per-row
+    positions ``pos0 + [0, S)`` -> (logits (B,S,V), cache').
+
+    Bit-identical to S sequential ``decode_step`` calls when the chunk
+    stays inside the ring (``pos0 + S <= cache_len``) — the batched
+    engine's fast path for compress rows, whose inputs are all known up
+    front.  Gate on :func:`can_prefill`.  Rows with ``n_valid < S`` freeze
+    after their live steps (queries discarded, no cache writes).
+    """
+    xs = embed(params["tok"], tokens, _dtype(cfg))
+    new_cache = {}
+    for i, (pat, reps) in enumerate(cfg.stages):
+        xs, c = stage_prefill(params["stages"][f"s{i}"], cache[f"s{i}"], xs,
+                              pos0, n_valid, pat, cfg)
+        new_cache[f"s{i}"] = c
+    xs = rmsnorm(params["final_norm"], xs, cfg.norm_eps)
+    return logits(params["tok"], xs, cfg), new_cache
 
 
 # convenience -----------------------------------------------------------------

@@ -62,6 +62,31 @@ def _usable(mesh: Mesh | None, n_full: int) -> bool:
             and n_full > 0 and n_full % mesh.shape["chunks"] == 0)
 
 
+def lane_mesh_usable(mesh: Mesh | None, rows: int,
+                     what: str = "fused serve decode") -> bool:
+    """Validate/route a ``("lanes",)`` mesh for an independent row axis.
+
+    The ONE routing contract shared by every lane-parallel serve program
+    (the fused decode of ``serve.compress`` and the batched engine's
+    slots x lanes row axis — both are sequential over positions, so their
+    only parallel axis is the row).  True = place ``rows`` rows on the
+    mesh; False = degrade to the single-device program (row counts that
+    don't divide the mesh fall back bit-exactly — same contract as the
+    chunk mesh's :func:`_usable`).  A mesh without a ``"lanes"`` axis
+    raises: chunk meshes place the two-pass kernel replay, not the
+    sequential row-parallel programs.
+    """
+    if mesh is None:
+        return False
+    if "lanes" not in mesh.axis_names:
+        raise ValueError(
+            f"the {what} parallelizes over the lane axis: pass a "
+            '("lanes",) mesh (parallel.chunked.lane_mesh).  Chunk meshes '
+            "place the two-pass kernel replay — use backend='two_pass' "
+            "with a ('chunks',) mesh instead")
+    return rows > 0 and rows % mesh.shape["lanes"] == 0
+
+
 def _chunked_table_specs(tbl: TableSet, sharded: bool):
     spec = P("chunks") if sharded else P()
     return jax.tree.map(lambda _: spec, tbl)

@@ -60,11 +60,24 @@ class CompressStats(NamedTuple):
     avg_probes: jax.Array | None = None
 
 
-def _step_tables(logits: jax.Array, vocab: int, prob_bits: int):
-    """Model logits (lanes, Vpad) -> TableSet (lanes, V) via the SPC."""
+def step_tables(logits: jax.Array, vocab: int, prob_bits: int):
+    """Model logits (rows, Vpad) -> TableSet (rows, V) via the SPC.
+
+    THE single-source per-step quantizer of the serve layer: one f32
+    softmax, BF16 storage, mass correction, CDF construction.  Every path
+    that prices or decodes a stream — ``collect_tables``, the sequential
+    and fused decompress scans here, and the batched engine's chunk
+    program (``serve.engine._chunk_body``) — calls this function, so the
+    tables (and therefore the bytes) cannot drift between the
+    single-request and batched services.  Rows are whatever the caller
+    batches: lanes, or the engine's flattened slots x lanes.
+    """
     lg = logits[:, :vocab].astype(jnp.float32)
     probs = jax.nn.softmax(lg, axis=-1)
     return spc.tables_from_probs(spc.store_bf16(probs), prob_bits)
+
+
+_step_tables = step_tables      # historical internal alias
 
 
 def _step_freq_cdf(logits: jax.Array, vocab: int, prob_bits: int):
@@ -224,18 +237,14 @@ def _lm_decompress_fused(params, cfg: ModelConfig, enc: coder.EncodedLanes,
 
 def _lane_mesh_check(mesh, lanes: int) -> bool:
     """Validate/route a mesh for the fused path (lanes are its parallel
-    axis — decode is sequential over positions).  True = place on mesh;
-    False = degrade to the single-device program (divisibility fallback,
-    same contract as ``parallel.chunked``); wrong-axis meshes raise."""
-    if mesh is None:
-        return False
-    if "lanes" not in mesh.axis_names:
-        raise ValueError(
-            "backend='kernel' (fused) parallelizes over the lane axis: "
-            'pass a ("lanes",) mesh (parallel.chunked.lane_mesh).  Chunk '
-            "meshes place the two-pass kernel replay — use "
-            "backend='two_pass' with a ('chunks',) mesh instead")
-    return lanes > 0 and lanes % mesh.shape["lanes"] == 0
+    axis — decode is sequential over positions).  Delegates to the shared
+    routing contract ``parallel.chunked.lane_mesh_usable`` (also consumed
+    by the batched engine for its slots x lanes row axis): True = place on
+    mesh; False = degrade to the single-device program (divisibility
+    fallback); wrong-axis meshes raise."""
+    from repro.parallel.chunked import lane_mesh_usable
+    return lane_mesh_usable(mesh, lanes, what="fused decode "
+                            "(backend='kernel')")
 
 
 def _fused_on_lane_mesh(params, enc, mesh, local_fn):

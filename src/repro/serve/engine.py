@@ -1,19 +1,42 @@
-"""Serving engine: prefill + autoregressive generation over the model zoo.
+"""Serving engine: prefill/generate plus the batched multi-stream service.
 
-``make_serve_step`` is the function the decode-shape dry-runs lower: one new
-token against a (possibly ring-buffered) cache of seq_len.  ``prefill`` and
-``generate`` drive the same step function for the runnable examples.
+Two layers live here:
+
+* the seed-era single-stream primitives — ``make_serve_step`` is the
+  function the decode-shape dry-runs lower (one new token against a
+  ring-buffered cache of ``max_len``: a cache shorter than the sequence
+  wraps, slot = pos % max_len, older entries age out — the wrap is pinned
+  logit-level in tests/test_serve_engine.py), and ``prefill`` /
+  ``generate`` drive the same step function for the runnable examples;
+
+* :class:`BatchEngine` — the request-level continuous-batching engine
+  (DESIGN.md §11).  Concurrent compress/decompress requests are admitted
+  into ``slots`` of ONE traced chunk program: the batch axis is
+  ``slots * lanes`` rows (shardable over a ``("lanes",)`` mesh), every
+  slot owns ``lanes`` rows of one shared ring-buffered model cache with
+  its own per-row positions, and the per-row rANS ``DecState`` rides the
+  same ``lax.scan`` carry.  Requests join and retire at chunk boundaries
+  without retracing (row masks, not new programs); the host double-buffers
+  container parse/pack and chunk encode against the in-flight launch.
+  Every per-request output is byte-identical to the single-request
+  ``serve.compress`` paths — the engine is a scheduler, not a new coder.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import functools
+import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.core import bitstream, coder, constants as C
+from repro.core.predictors import model_topk_candidates
 from repro.models.config import ModelConfig
-from repro.models.transformer import decode_step, init_cache
+from repro.models.transformer import (can_prefill, decode_step, init_cache,
+                                      prefill_chunk)
 
 
 def make_serve_step(cfg: ModelConfig):
@@ -37,6 +60,12 @@ def teacher_forced_scan(params, cfg: ModelConfig, tokens: jax.Array,
     contract of LM-driven lossless compression).  ``step_fn(logits, t)``
     optionally maps each step's logits before stacking; default stacks the
     raw logits.  Returns ``(cache, stacked outputs)``.
+
+    ``max_len`` < S is a real ring: positions wrap (slot = pos % max_len)
+    and entries older than ``max_len`` age out of attention, so the scan
+    conditions on a sliding window of the last ``max_len`` tokens —
+    logit-identical to ``forward`` with ``sliding_window=max_len`` (the
+    regression test in tests/test_serve_engine.py pins this).
     """
     b, s = tokens.shape
     cache = init_cache(cfg, b, max_len)
@@ -102,3 +131,579 @@ def generate(params, cfg: ModelConfig, prompt: jax.Array, n_new: int,
         logits = jnp.concatenate([last[:, None], lgs.swapaxes(0, 1)], axis=1)
         return out, logits
     return out
+
+
+# ---------------------------------------------------------------------------
+# batched multi-stream engine (continuous batching over slots x lanes rows)
+# ---------------------------------------------------------------------------
+
+BOS = 0
+MODE_IDLE, MODE_COMPRESS, MODE_DECOMPRESS = 0, 1, 2
+
+
+class EngineQueueFullError(RuntimeError):
+    """Admission queue at capacity — the graceful-degradation backstop."""
+
+
+class RequestOverflowError(RuntimeError):
+    """A request's per-request byte budget (cap) overflowed mid-stream."""
+
+
+@dataclasses.dataclass
+class RequestResult:
+    """Terminal state of one engine request.
+
+    ``ok`` requests carry ``blob`` (compress) or ``tokens`` (decompress);
+    failed requests carry the named ``error`` instead — a failure retires
+    its slot and NEVER perturbs co-batched streams (their rows are
+    independent end to end; the isolation test pins byte-exactness of the
+    neighbours).  ``probes`` is the request's total CDF-probe count
+    (decompress; the Fig. 4(b) accounting, summed over its rows).
+    """
+    rid: int
+    kind: str
+    ok: bool
+    blob: bytes | None = None
+    tokens: np.ndarray | None = None
+    error: Exception | None = None
+    n_symbols: int = 0
+    probes: int = 0
+    slot: int = -1
+    arrival: float = 0.0
+    admitted_at: float = 0.0
+    completed_at: float = 0.0
+
+
+@dataclasses.dataclass
+class _Req:
+    rid: int
+    kind: str                       # "compress" | "decompress"
+    arrival: float
+    n_symbols: int
+    cap: int                        # per-request byte budget (compress)
+    tokens: np.ndarray | None = None            # (lanes, T) compress input
+    slab: bitstream.ContainerSlab | None = None  # decompress input
+    # live-slot state
+    slot: int = -1
+    admitted_at: float = 0.0
+    pos: int = 0                    # symbols dispatched so far
+    enc_chunks: list = dataclasses.field(default_factory=list)
+    out_syms: list = dataclasses.field(default_factory=list)
+    probes: int = 0
+
+
+def _row_reset(mask, a):
+    """Zero the masked rows of a (reps, rows, ...) cache leaf."""
+    return jnp.where(mask.reshape((1, -1) + (1,) * (a.ndim - 2)),
+                     jnp.zeros_like(a), a)
+
+
+def _chunk_body(params, cache, tok, fresh, pos0, mode, n_valid, tf, buf,
+                start, *, cfg, chunk_size, prob_bits, topk, backend,
+                interpret):
+    """One continuous-batching cycle: ``chunk_size`` steps over all rows.
+
+    Rows are the flattened ``slots * lanes`` batch axis; all per-slot
+    quantities arrive rows-form (``(B,)``/``(B, ...)``) so the body is
+    row-local — shardable over a ``("lanes",)`` mesh with no collectives.
+
+      fresh   (B,) bool  — admit boundary: zero the row's cache, tok=BOS
+                           (matching ``init_cache`` zeros, so the row's
+                           evolution equals a fresh single-request scan)
+      pos0    (B,) int32 — the row's absolute position at cycle start
+      mode    (B,) int32 — MODE_COMPRESS / MODE_DECOMPRESS / MODE_IDLE
+      n_valid (B,) int32 — active steps this cycle (ragged join/retire:
+                           rows past their request freeze via masks)
+      tf      (B, chunk_size) — teacher-forced next-tokens (compress rows)
+      buf     (B, cap) uint8 / start (B,) — this cycle's standalone rANS
+                           chunk streams (decompress rows; the per-row
+                           ``DecState`` re-initializes here each cycle,
+                           exactly like the single-request chunk decode)
+
+    Each step runs the shared ``decode_step`` (per-row ring positions),
+    quantizes through the single-source ``serve.compress.step_tables``,
+    ranks model-top-k candidates and pops one symbol per row
+    (``kernels.ops.rans_decode_step_rows``).  Frozen rows clamp their
+    position to ``pos0 + n_valid`` — the write lands in the slot the next
+    cycle's first step overwrites before attending, so freezing needs no
+    cache select.  Returns ``(cache', tok', tables, syms, probes)`` with
+    scan-stacked ``(chunk_size, B, ...)`` outputs.
+    """
+    from repro.kernels.ops import rans_decode_step_rows
+    from repro.serve.compress import step_tables
+    cache = jax.tree.map(functools.partial(_row_reset, fresh), cache)
+    tok = jnp.where(fresh[:, None], jnp.int32(BOS), tok)
+    dec0 = coder.decoder_init(coder.EncodedLanes(
+        buf=buf, start=start, length=jnp.zeros_like(start), overflow=None))
+    buf_t = buf.T                   # (cap, B): transposed once, not per step
+
+    def body(carry, t):
+        cache, s, ptr, tok = carry
+        active = t < n_valid
+        pos = pos0 + jnp.minimum(t, n_valid)
+        lg, cache = decode_step(params, cache, tok, pos, cfg)
+        tbl = step_tables(lg, cfg.vocab_size, prob_bits)
+        cands = model_topk_candidates(lg[:, :cfg.vocab_size], topk)
+        s2, p2, sym, probes = rans_decode_step_rows(
+            buf_t, s, ptr, tbl, prob_bits=prob_bits, candidates=cands,
+            backend=backend, interpret=interpret)
+        s = jnp.where(active, s2, s)
+        ptr = jnp.where(active, p2, ptr)
+        nxt = jnp.where(mode == MODE_COMPRESS, tf[:, t],
+                        sym.astype(jnp.int32))
+        tok = jnp.where(active[:, None], nxt[:, None], tok)
+        return (cache, s, ptr, tok), (tbl, sym, probes)
+
+    (cache, _, _, tok), (tables, syms, probes) = jax.lax.scan(
+        body, (cache, dec0.s, dec0.ptr, tok), jnp.arange(chunk_size))
+    return cache, tok, tables, syms, probes
+
+
+def _prefill_body(params, cache, tok, fresh, pos0, mode, n_valid, tf, buf,
+                  start, *, cfg, chunk_size, prob_bits, topk, backend,
+                  interpret):
+    """All-compress fast cycle: same signature and outputs as
+    :func:`_chunk_body`, but ONE teacher-forced block pass over the chunk
+    instead of ``chunk_size`` sequential decode steps (the serving-engine
+    prefill/decode phase split — compress rows are fully known up front,
+    so there is nothing sequential about them).
+
+    Dispatched per cycle by :class:`BatchEngine` only when every live slot
+    is an unwrapped compress request and :func:`can_prefill` holds; any
+    decompress (symbols feed back step to step) or wrapped row falls back
+    to the step program.  Bit-identity with the step cycle is structural:
+    ``prefill_chunk`` is pinned bit-identical to the ``decode_step`` scan,
+    and the per-position ``step_tables`` runs at the step path's exact
+    (B, V) shape under ``lax.map``.  ``syms``/``probes`` are placeholder
+    zeros — finalize never reads them for compress rows.
+    """
+    from repro.serve.compress import step_tables
+    del mode, buf, start, topk, backend, interpret  # step-path-only inputs
+    cache = jax.tree.map(functools.partial(_row_reset, fresh), cache)
+    tok = jnp.where(fresh[:, None], jnp.int32(BOS), tok)
+    # the step body feeds the PREVIOUS token at each step: inputs are the
+    # carried token (BOS if fresh) followed by all but the last tf token
+    inputs = jnp.concatenate([tok, tf[:, :chunk_size - 1]], axis=1)
+    lgs, cache = prefill_chunk(params, cache, inputs, pos0, n_valid, cfg)
+    tables = jax.lax.map(
+        lambda lg: step_tables(lg, cfg.vocab_size, prob_bits),
+        jnp.moveaxis(lgs, 1, 0))
+    idx = jnp.clip(n_valid - 1, 0, chunk_size - 1)
+    last = jnp.take_along_axis(tf, idx[:, None], axis=1)
+    tok = jnp.where((n_valid > 0)[:, None], last, tok)
+    zeros = jnp.zeros((chunk_size, tok.shape[0]), jnp.int32)
+    return cache, tok, tables, zeros, zeros
+
+
+@functools.partial(jax.jit, static_argnames=("cap",))
+def _encode_rows(symbols, tbl, cap: int):
+    """Encode one slot's chunk against its per-(position, lane) tables."""
+    return coder.encode(symbols, tbl, cap=cap)
+
+
+@functools.lru_cache(maxsize=None)
+def _compiled_program(body, cfg, chunk_size, prob_bits, topk, backend,
+                      interpret):
+    """Process-wide program cache: engines with the same traced geometry
+    share ONE jitted executable per cycle body (a fresh ``jax.jit``
+    wrapper per engine would recompile per instance — the retrace the
+    engine exists to avoid)."""
+    return jax.jit(functools.partial(
+        body, cfg=cfg, chunk_size=chunk_size, prob_bits=prob_bits,
+        topk=topk, backend=backend, interpret=interpret))
+
+
+class BatchEngine:
+    """Continuous-batching compress/decompress service over one step program.
+
+    ``slots`` concurrent requests of ``lanes`` rANS lanes each share ONE
+    jitted chunk program (:func:`_chunk_body`): a single model cache of
+    ``slots * lanes`` rows ring-buffered at ``max_len``, per-row positions,
+    per-row coder state.  Requests join (``fresh`` row reset) and retire at
+    chunk boundaries via masks — no retracing, any slot occupancy runs the
+    same executable.  The run loop keeps ONE cycle in flight: cycle ``k+1``
+    is dispatched before cycle ``k``'s outputs are fetched, so the host
+    half (container parse / right-align windows, chunk encode, ``pack``)
+    overlaps the device half (async dispatch) — the double-buffer pipeline.
+
+    Byte-identity contract: a request of T <= ``max_len`` symbols produces
+    output byte-identical to ``lm_compress_chunked`` /
+    ``lm_decompress_chunked`` at the same ``chunk_size``/``prob_bits``/
+    ``topk`` regardless of co-batched traffic.  (Rows are independent in
+    every model op; a ring of length >= T never wraps and its unwritten
+    slots contribute exactly-zero attention mass; the per-chunk coder math
+    is the identical ``core`` single source.)  Requests longer than the
+    ring are rejected with a named error unless ``allow_wrap=True`` —
+    wrapped requests condition on a sliding window of ``max_len`` tokens
+    (engine-compressed wrapped streams round-trip through engine
+    decompress at the same ``max_len``).
+
+    Admission: FIFO by ``(arrival, rid)``, at most ``max_queue`` waiting
+    requests (``submit_*`` raises :class:`EngineQueueFullError` beyond —
+    reject-at-the-door, never corrupt in-flight streams).  Failures
+    (e.g. per-request cap overflow) retire their slot with a named error
+    in the result; co-batched rows are untouched.
+
+    ``mesh``: optional ``("lanes",)`` mesh (``parallel.chunked.lane_mesh``)
+    sharding the program's row axis; indivisible row counts degrade to the
+    single-device program bit-exactly (shared routing contract —
+    ``parallel.chunked.lane_mesh_usable``).
+
+    ``prefill``: ``"auto"`` (default) dispatches cycles whose live slots
+    are all unwrapped compress requests to the block-parallel prefill
+    program (:func:`_prefill_body` — the engine's throughput lever: one
+    teacher-forced pass replaces ``chunk_size`` sequential steps, bit
+    -identically); ``"off"`` forces every cycle onto the step program
+    (the byte-identity oracle the tests compare against).
+    ``prefill_cycles`` counts fast-path dispatches.
+    """
+
+    def __init__(self, params, cfg: ModelConfig, *, slots: int = 4,
+                 lanes: int = 8, chunk_size: int = 64,
+                 max_len: int | None = None, cap: int | None = None,
+                 prob_bits: int = C.PROB_BITS, topk: int = 4,
+                 max_queue: int = 64, step_backend: str = "coder",
+                 mesh=None, interpret: bool = True,
+                 prefill: str = "auto"):
+        if step_backend not in ("coder", "kernel"):
+            raise ValueError(f"unknown step backend {step_backend!r}")
+        if prefill not in ("auto", "off"):
+            raise ValueError(f"unknown prefill policy {prefill!r} "
+                             "(expected 'auto' or 'off')")
+        self.params = params
+        self.cfg = cfg
+        self.slots = slots
+        self.lanes = lanes
+        self.rows = slots * lanes
+        self.chunk_size = chunk_size
+        self.max_len = 4 * chunk_size if max_len is None else max_len
+        # stream window of the traced program: every decompress chunk cell
+        # must fit (validated at submit) — compress caps are per-request
+        # and unconstrained (encode runs outside the program)
+        self.cap = coder.default_cap(chunk_size) if cap is None else cap
+        self.prob_bits = prob_bits
+        self.topk = topk
+        self.max_queue = max_queue
+        self.step_backend = step_backend
+        self.interpret = interpret
+        self._cache = init_cache(cfg, self.rows, self.max_len)
+        self._tok = jnp.full((self.rows, 1), BOS, jnp.int32)
+        self._slots: list[_Req | None] = [None] * slots
+        self._queue: list[_Req] = []
+        self._next_rid = 0
+        self.admission_log: list[tuple[int, int, int]] = []  # (rid, slot, cycle)
+        self.prefill_cycles = 0      # cycles served by the prefill program
+        self._prog = self._build_program(mesh)
+        self._prog_prefill = (self._build_program(mesh, body=_prefill_body)
+                              if prefill == "auto" and can_prefill(cfg)
+                              else None)
+
+    # -- program ----------------------------------------------------------
+
+    def _build_program(self, mesh, body=_chunk_body):
+        from repro.parallel.chunked import lane_mesh_usable
+        if not lane_mesh_usable(mesh, self.rows,
+                                what="batched engine (its slots x lanes rows)"):
+            return _compiled_program(
+                body, self.cfg, self.chunk_size, self.prob_bits, self.topk,
+                self.step_backend, self.interpret)
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+        core = functools.partial(
+            body, cfg=self.cfg, chunk_size=self.chunk_size,
+            prob_bits=self.prob_bits, topk=self.topk,
+            backend=self.step_backend, interpret=self.interpret)
+        rows, rows2 = P("lanes"), P("lanes", None)
+        carry = jax.tree.map(lambda _: P(None, "lanes"), self._cache)
+        pspec = jax.tree.map(lambda _: P(), self.params)
+        core = shard_map(
+            core, mesh=mesh,
+            in_specs=(pspec, carry, rows2, rows, rows, rows, rows,
+                      rows2, rows2, rows),
+            out_specs=(carry, rows2, P(None, "lanes"), P(None, "lanes"),
+                       P(None, "lanes")),
+            check_rep=False)
+        return jax.jit(core)
+
+    # -- admission --------------------------------------------------------
+
+    def _submit(self, req: _Req) -> int:
+        if len(self._queue) >= self.max_queue:
+            raise EngineQueueFullError(
+                f"engine admission queue is full ({self.max_queue} waiting "
+                "requests): drain with run() or raise max_queue — rejecting "
+                "at the door keeps in-flight streams untouched")
+        self._queue.append(req)
+        return req.rid
+
+    def _check_len(self, t_len: int, allow_wrap: bool, what: str):
+        if t_len < 1:
+            raise ValueError(f"{what} must cover at least 1 symbol")
+        if t_len > self.max_len and not allow_wrap:
+            raise ValueError(
+                f"request of {t_len} symbols exceeds the engine ring "
+                f"(max_len={self.max_len}): the shared cache would wrap "
+                "and condition on a sliding window — pass allow_wrap=True "
+                "to accept windowed conditioning (round-trips through this "
+                "engine, but is no longer byte-identical to the "
+                "full-context single-request path)")
+
+    def submit_compress(self, tokens, arrival: float = 0.0,
+                        cap: int | None = None,
+                        allow_wrap: bool = False) -> int:
+        """Queue a compress request: tokens (lanes, T) -> container blob.
+
+        ``cap`` is the per-request per-(chunk, lane) byte budget (default
+        ``coder.default_cap`` of the chunk length — the single-request
+        default, so default-cap blobs are byte-identical to
+        ``lm_compress_chunked``).  An undersized cap fails ONLY this
+        request (:class:`RequestOverflowError` in its result).
+        """
+        tokens = np.asarray(tokens, np.int32)
+        if tokens.ndim != 2 or tokens.shape[0] != self.lanes:
+            raise ValueError(
+                f"compress tokens must be (lanes={self.lanes}, T), got "
+                f"{tokens.shape}: the engine's traced program is shaped "
+                "for slots x lanes rows")
+        t_len = int(tokens.shape[1])
+        self._check_len(t_len, allow_wrap, "a compress request")
+        cap = (coder.default_cap(min(self.chunk_size, t_len))
+               if cap is None else int(cap))
+        rid = self._next_rid
+        self._next_rid += 1
+        return self._submit(_Req(rid=rid, kind="compress", arrival=arrival,
+                                 n_symbols=t_len, cap=cap, tokens=tokens))
+
+    def submit_decompress(self, blob: bytes, arrival: float = 0.0,
+                          allow_wrap: bool = False) -> int:
+        """Queue a decompress request: container v2 blob -> tokens.
+
+        The blob is parsed and validated here (``bitstream.parse_chunked``
+        named errors surface at submit, not mid-batch) and must match the
+        engine's traced geometry: same ``lanes``, ``chunk_size`` and
+        ``prob_bits``, every cell within the engine's stream window.
+        """
+        slab = bitstream.parse_chunked(blob)
+        meta = slab.meta
+        if meta.lanes != self.lanes:
+            raise ValueError(
+                f"container has {meta.lanes} lanes but the engine is "
+                f"shaped for lanes={self.lanes}: the slots x lanes row "
+                "grid is traced into the step program")
+        if meta.chunk_size != self.chunk_size:
+            raise ValueError(
+                f"container chunk_size {meta.chunk_size} != engine "
+                f"chunk_size {self.chunk_size}: the engine decodes at its "
+                "traced chunk granularity — build a matching engine")
+        if meta.prob_bits != self.prob_bits:
+            raise ValueError(
+                f"container prob_bits {meta.prob_bits} != engine "
+                f"prob_bits {self.prob_bits}")
+        max_cell = int(np.max(slab.length)) if slab.length.size else 0
+        if max_cell > self.cap:
+            raise ValueError(
+                f"container cell of {max_cell} bytes exceeds the engine's "
+                f"stream window (cap={self.cap}): build the engine with "
+                f"cap >= {max_cell}")
+        self._check_len(int(meta.n_symbols), allow_wrap,
+                        "a decompress request")
+        rid = self._next_rid
+        self._next_rid += 1
+        return self._submit(_Req(rid=rid, kind="decompress", arrival=arrival,
+                                 n_symbols=int(meta.n_symbols), cap=self.cap,
+                                 slab=slab))
+
+    # -- one scheduling cycle --------------------------------------------
+
+    def _admit(self, now: float, cycle: int):
+        self._queue.sort(key=lambda r: (r.arrival, r.rid))
+        for s in range(self.slots):
+            if self._slots[s] is not None:
+                continue
+            pick = next((r for r in self._queue if r.arrival <= now), None)
+            if pick is None:
+                break
+            self._queue.remove(pick)
+            pick.slot, pick.admitted_at = s, now
+            self._slots[s] = pick
+            self.admission_log.append((pick.rid, s, cycle))
+
+    def _build_cycle(self):
+        """Host half of a cycle: rows-form inputs for every live slot.
+
+        For decompress slots this is the zero-copy container side — the
+        chunk's per-lane spans are right-aligned straight out of the
+        parsed payload slab into the program's stream window (the only
+        byte copy on the path).  Returns (spec, arrays) or None when no
+        slot has steps to run.
+        """
+        B, S, cap = self.rows, self.chunk_size, self.cap
+        fresh = np.zeros(B, bool)
+        pos0 = np.zeros(B, np.int32)
+        mode = np.zeros(B, np.int32)
+        n_valid = np.zeros(B, np.int32)
+        tf = np.zeros((B, S), np.int32)
+        buf = np.zeros((B, cap), np.uint8)
+        start = np.zeros(B, np.int32)
+        spec = []
+        prefillable = self._prog_prefill is not None
+        for s, req in enumerate(self._slots):
+            if req is None or req.pos >= req.n_symbols:
+                continue
+            # decompress rows feed decoded symbols back step to step, and
+            # wrapped rows overwrite slots still visible to in-chunk
+            # queries — both force the cycle onto the step program
+            if req.kind != "compress" or req.n_symbols > self.max_len:
+                prefillable = False
+            r0, r1 = s * self.lanes, (s + 1) * self.lanes
+            n_c = min(S, req.n_symbols - req.pos)
+            c = req.pos // S
+            fresh[r0:r1] = req.pos == 0
+            pos0[r0:r1] = req.pos
+            n_valid[r0:r1] = n_c
+            if req.kind == "compress":
+                mode[r0:r1] = MODE_COMPRESS
+                tf[r0:r1, :n_c] = req.tokens[:, req.pos:req.pos + n_c]
+            else:
+                mode[r0:r1] = MODE_DECOMPRESS
+                slab = req.slab
+                payload = np.asarray(slab.slab, np.uint8)
+                off = np.asarray(slab.offset)
+                ln = np.asarray(slab.length)
+                for l in range(self.lanes):
+                    o, n = int(off[c, l]), int(ln[c, l])
+                    buf[r0 + l, cap - n:] = payload[o:o + n]
+                    start[r0 + l] = cap - n
+            spec.append((req.rid, s, c, n_c,
+                         req.pos + n_c >= req.n_symbols))
+            req.pos += n_c
+        if not spec:
+            return None
+        return spec, prefillable, (jnp.asarray(fresh), jnp.asarray(pos0),
+                                   jnp.asarray(mode), jnp.asarray(n_valid),
+                                   jnp.asarray(tf), jnp.asarray(buf),
+                                   jnp.asarray(start))
+
+    def _launch(self, built):
+        """Device half: dispatch the cycle program asynchronously — the
+        prefill fast path when every live slot is an unwrapped compress
+        request, the step program otherwise."""
+        spec, prefillable, (fresh, pos0, mode, n_valid, tf, buf,
+                           start) = built
+        prog = self._prog
+        if prefillable:
+            prog = self._prog_prefill
+            self.prefill_cycles += 1
+        self._cache, self._tok, tables, syms, probes = prog(
+            self.params, self._cache, self._tok, fresh, pos0, mode,
+            n_valid, tf, buf, start)
+        return spec, tables, syms, probes
+
+    def _finalize(self, inflight, now: float, results: dict):
+        """Harvest a finished cycle: encode/pack/collect per-slot outputs.
+
+        Runs while the NEXT cycle is already in flight — ``np.asarray``
+        here blocks on this cycle's program only.  A cap overflow retires
+        its request with :class:`RequestOverflowError`; the slot frees, the
+        (at most one) already-dispatched follow-up chunk of the failed
+        request is discarded at its own finalize, and no other row is
+        touched.
+        """
+        spec, tables, syms, probes = inflight
+        for rid, s, c, n_c, last in spec:
+            req = self._slots[s]
+            if req is None or req.rid != rid or rid in results:
+                continue        # retired mid-flight (failed upstream chunk)
+            r0, r1 = s * self.lanes, (s + 1) * self.lanes
+            if req.kind == "compress":
+                tbl_c = jax.tree.map(lambda a: a[:n_c, r0:r1], tables)
+                sym_c = jnp.asarray(
+                    req.tokens[:, c * self.chunk_size:
+                               c * self.chunk_size + n_c])
+                enc = _encode_rows(sym_c, tbl_c, cap=req.cap)
+                enc = coder.EncodedLanes(*map(np.asarray, enc))
+                if enc.overflow.any():
+                    cells = np.nonzero(enc.overflow)[0].tolist()
+                    self._retire(req, now, results, error=RequestOverflowError(
+                        f"request {rid}: encode overflow in chunk {c} "
+                        f"(lanes {cells}): the per-request byte budget "
+                        f"(cap={req.cap}) truncated the stream — resubmit "
+                        "with a larger cap"))
+                    continue
+                req.enc_chunks.append(enc)
+            else:
+                req.out_syms.append(
+                    np.asarray(syms[:n_c, r0:r1]).T.astype(np.int32))
+                req.probes += int(np.asarray(probes[:n_c, r0:r1]).sum())
+            if last:
+                self._retire(req, now, results)
+
+    def _retire(self, req: _Req, now: float, results: dict,
+                error: Exception | None = None):
+        res = RequestResult(rid=req.rid, kind=req.kind, ok=error is None,
+                            error=error, n_symbols=req.n_symbols,
+                            probes=req.probes, slot=req.slot,
+                            arrival=req.arrival, admitted_at=req.admitted_at,
+                            completed_at=now)
+        if error is None:
+            if req.kind == "compress":
+                ch = jax.tree.map(lambda *xs: np.stack(xs), *req.enc_chunks)
+                res.blob = bitstream.pack_chunked(
+                    ch.buf, ch.start, ch.length, ch.overflow,
+                    chunk_size=self.chunk_size, n_symbols=req.n_symbols,
+                    prob_bits=self.prob_bits)
+            else:
+                res.tokens = np.concatenate(req.out_syms, axis=1)
+        results[req.rid] = res
+        self._slots[req.slot] = None
+
+    # -- run loop ---------------------------------------------------------
+
+    def run(self, *, clock: str = "virtual") -> dict[int, RequestResult]:
+        """Drain the queue; returns {rid: RequestResult} for every request.
+
+        ``clock="virtual"``: time is the cycle counter — fully
+        deterministic (the seeded-admission test contract): arrivals are
+        in cycle units and the loop jumps idle gaps.  ``clock="wall"``:
+        arrivals are seconds relative to run start; the loop sleeps
+        through idle gaps and stamps real latencies (the bench contract).
+
+        One cycle: admit -> build inputs (host) -> dispatch (async device)
+        -> finalize the PREVIOUS cycle (host pack/encode, blocking only on
+        the already-retired launch).  Keeping exactly one cycle in flight
+        double-buffers host container work against the device program.
+        """
+        if clock not in ("virtual", "wall"):
+            raise ValueError(f"unknown clock {clock!r}")
+        results: dict[int, RequestResult] = {}
+        t0 = time.monotonic()
+        wall = clock == "wall"
+        vnow, cycle = 0.0, 0
+        inflight = None
+        while self._queue or any(self._slots) or inflight is not None:
+            now = time.monotonic() - t0 if wall else vnow
+            if inflight is not None and self._queue \
+                    and any(last for _, _, _, _, last in inflight[0]):
+                # a retire is pending and successors are waiting: sync the
+                # in-flight cycle NOW so the freed slot refills this cycle
+                # instead of idling one (steady-state chunks keep the
+                # launch-before-finalize double-buffer).
+                self._finalize(inflight, now, results)
+                inflight = None
+            self._admit(now, cycle)
+            built = self._build_cycle()
+            nxt = self._launch(built) if built is not None else None
+            if inflight is not None:
+                now = time.monotonic() - t0 if wall else vnow
+                self._finalize(inflight, now, results)
+            inflight = nxt
+            if nxt is None and inflight is None and self._queue:
+                gap = min(r.arrival for r in self._queue)
+                if wall:
+                    time.sleep(max(0.0, gap - (time.monotonic() - t0)))
+                else:
+                    vnow = max(vnow + 1.0, gap)
+            else:
+                vnow += 1.0
+            cycle += 1
+        return results

@@ -99,6 +99,55 @@ def test_spc_deterministic():
     np.testing.assert_array_equal(f1, f2)
 
 
+def _quantize_probs_four_sort(probs, prob_bits=C.PROB_BITS):
+    """The original four-argsort mass correction: the reference the
+    single-sort rewrite in :func:`spc.quantize_probs` must reproduce bit
+    for bit (ascending ranks are positions; descending ranks follow from
+    tie-run bookkeeping; inverse permutations become scatters)."""
+    total = 1 << prob_bits
+    k = probs.shape[-1]
+    p = probs.astype(jnp.bfloat16).astype(jnp.float32)
+    p = jnp.where(jnp.isfinite(p) & (p > 0), p, 0.0)
+    scaled = p * jnp.float32(total)
+    f0 = jnp.maximum(1, jnp.round(scaled)).astype(jnp.int32)
+    delta = total - jnp.sum(f0, axis=-1, keepdims=True)
+    resid = scaled - f0.astype(jnp.float32)
+    order_desc = jnp.argsort(-resid, axis=-1, stable=True)
+    rank_desc = jnp.argsort(order_desc, axis=-1, stable=True)
+    f_pos = f0 + delta // k + (rank_desc < delta % k).astype(jnp.int32)
+    need = (-delta).astype(jnp.int32)
+    order_asc = jnp.argsort(resid, axis=-1, stable=True)
+    cap_sorted = jnp.take_along_axis(f0 - 1, order_asc, axis=-1)
+    cum_excl = jnp.cumsum(cap_sorted, axis=-1) - cap_sorted
+    take_sorted = jnp.clip(need - cum_excl, 0, cap_sorted)
+    rank_asc = jnp.argsort(order_asc, axis=-1, stable=True)
+    take = jnp.take_along_axis(take_sorted, rank_asc, axis=-1)
+    f_neg = f0 - take
+    return jnp.where(delta >= 0, f_pos, f_neg).astype(jnp.uint32)
+
+
+def test_spc_single_sort_matches_four_sort_reference():
+    """quantize_probs (one stable sort + scatters) is bitwise the four-
+    argsort largest-remainder rule, across adversarial tie patterns:
+    all-equal rows (every element one tie run), near-uniform dirichlet
+    (dense rounding ties), spiky distributions (deep waterfill), tiny
+    k, and batched 3-d inputs."""
+    rng = np.random.default_rng(23)
+    cases = [np.full(256, 1.0 / 256), np.full(3, 1 / 3),
+             np.r_[1.0, np.zeros(255)],
+             np.r_[np.full(200, 1e-9), rng.dirichlet(np.ones(56))]]
+    for r in sweep(104, 40):
+        k = int(ints(r, 2, 400))
+        conc = float(floats(r, 0.02, 8.0))
+        cases.append(r.dirichlet(np.full(k, conc)))
+    cases.append(rng.dirichlet(np.ones(64), size=(3, 5)))  # 3-d batch
+    for p in cases:
+        p = jnp.asarray(p, jnp.float32)
+        np.testing.assert_array_equal(
+            np.asarray(spc.quantize_probs(p)),
+            np.asarray(_quantize_probs_four_sort(p)))
+
+
 def test_spc_batched_matches_single():
     rng = np.random.default_rng(3)
     p = rng.dirichlet(np.ones(32), size=5).astype(np.float32)

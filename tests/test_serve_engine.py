@@ -123,3 +123,110 @@ def test_generate_then_fused_compress_roundtrip(params):
     dec, _ = lm_decompress(params, CFG, stats.enc, toks.shape[1],
                            backend="kernel")
     np.testing.assert_array_equal(np.asarray(dec), np.asarray(toks))
+
+
+def test_ring_cache_wrap_matches_sliding_window(params):
+    """The shared-cache wrap contract, pinned logit-level: a cache of
+    ``max_len=W`` driven past W positions IS sliding-window-W attention.
+    The docstring promised "(possibly ring-buffered)" since the seed but
+    nothing ever exercised seq > max_len — an off-by-one in the age mask
+    would have rotted silently.  Also asserts the test has teeth: the
+    windowed logits genuinely differ from full-context attention."""
+    from dataclasses import replace
+    from repro.models.transformer import forward, logits as lm_logits
+    W, S = 8, 24
+    toks = jnp.asarray(token_stream(CFG.vocab_size, (2, S), seed=11),
+                       jnp.int32)
+    _, ring_lg = teacher_forced_scan(params, CFG, toks, W)  # rings at W
+    ring_lg = jnp.stack(list(ring_lg), axis=0) if isinstance(ring_lg, list) \
+        else ring_lg                                        # (S, B, V)
+    cfg_w = replace(CFG, sliding_window=W)
+    x, _ = forward(params, toks, cfg_w)
+    full_w = lm_logits(params["tok"], x, cfg_w)             # (B, S, V)
+    np.testing.assert_allclose(np.asarray(ring_lg),
+                               np.asarray(jnp.swapaxes(full_w, 0, 1)),
+                               atol=2e-4, rtol=2e-4)
+    # teeth: past t >= W the window must change the distribution
+    x_full, _ = forward(params, toks, CFG)
+    full = lm_logits(params["tok"], x_full, CFG)
+    assert np.max(np.abs(np.asarray(full - full_w))[:, W:]) > 1e-2
+
+
+def test_ring_cache_length_invariance(params):
+    """Ring length is NOT part of the model function below capacity: the
+    same stream decoded under different cache lengths produces bit-exact
+    identical logits (the tiled attention reduction makes every float a
+    function of slot content, never of ring extent).  This is what lets
+    the batched engine serve a request under its shared ``max_len`` cache
+    byte-identically to the single-request scan at ``t_len``."""
+    from repro.models.transformer import decode_step, init_cache
+    toks = jnp.asarray(token_stream(CFG.vocab_size, (2, 12), seed=13),
+                       jnp.int32)
+
+    def roll(ml):
+        cache = init_cache(CFG, 2, ml)
+        out = []
+        for t in range(12):
+            lg, cache = decode_step(params, cache, toks[:, t:t + 1], t, CFG)
+            out.append(np.asarray(lg))
+        return np.stack(out)
+
+    a = roll(12)
+    for ml in (16, 33, 64):
+        np.testing.assert_array_equal(a, roll(ml))
+
+
+def test_prefill_chunk_bitwise_matches_decode_steps(params):
+    """The batched-prefill fast path IS the sequential step path, bit for
+    bit: one ``prefill_chunk`` over S teacher-forced positions (starting
+    mid-stream, pos0 > 0) produces the identical logits and cache as S
+    ``decode_step`` calls.  This is the identity that lets the engine
+    dispatch compress-only cycles through one fused pass — the attend
+    core runs at query extent 1 either way (a multi-query einsum rounds
+    ~1 ulp differently than S single-query ones)."""
+    from repro.models.transformer import can_prefill, prefill_chunk
+    assert can_prefill(CFG)
+    b, s, warm, max_len = 4, 8, 3, 16
+    toks = jnp.asarray(token_stream(CFG.vocab_size, (b, warm + s), seed=9),
+                       jnp.int32)
+
+    cache = init_cache(CFG, b, max_len)
+    for t in range(warm):
+        _, cache = decode_step(params, cache, toks[:, t:t + 1], t, CFG)
+    seq_cache, lgs = cache, []
+    for t in range(warm, warm + s):
+        lg, seq_cache = decode_step(params, seq_cache, toks[:, t:t + 1], t,
+                                    CFG)
+        lgs.append(lg)
+
+    pos0 = jnp.full((b,), warm, jnp.int32)
+    pf_lgs, pf_cache = prefill_chunk(params, cache, toks[:, warm:], pos0,
+                                     jnp.full((b,), s, jnp.int32), CFG)
+    np.testing.assert_array_equal(np.stack([np.asarray(x) for x in lgs], 1),
+                                  np.asarray(pf_lgs))
+    for a, bb in zip(jax.tree.leaves(seq_cache), jax.tree.leaves(pf_cache)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(bb))
+
+
+def test_prefill_chunk_ragged_live_rows_exact(params):
+    """Rows with ``n_valid < S`` freeze after their live steps; every live
+    (row, position) logit still equals the all-rows-live sequential
+    reference bitwise (same batch extent — rows are data-independent, so
+    a neighbor's freeze must not perturb a live row by even one ulp;
+    frozen positions are discarded by the engine and excluded here)."""
+    from repro.models.transformer import prefill_chunk
+    b, s, max_len = 4, 8, 16
+    toks = jnp.asarray(token_stream(CFG.vocab_size, (b, s), seed=11),
+                       jnp.int32)
+    cache, ref = init_cache(CFG, b, max_len), []
+    for t in range(s):
+        lg, cache = decode_step(params, cache, toks[:, t:t + 1], t, CFG)
+        ref.append(np.asarray(lg))
+    ref = np.stack(ref, axis=1)                    # (b, s, Vpad)
+    nv = np.asarray([s, 5, 1, 0], np.int32)
+    pf_lgs, _ = prefill_chunk(params, init_cache(CFG, b, max_len), toks,
+                              jnp.zeros((b,), jnp.int32), jnp.asarray(nv),
+                              CFG)
+    pf_lgs = np.asarray(pf_lgs)
+    for i in range(b):
+        np.testing.assert_array_equal(pf_lgs[i, :nv[i]], ref[i, :nv[i]])
