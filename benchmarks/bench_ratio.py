@@ -57,6 +57,45 @@ def _train_pimc(rows: np.ndarray, steps: int = 120):
     return cfg, state.params, float(m["loss"])
 
 
+def _latent_rung(img: np.ndarray, steps: int = 300):
+    """Bits-back VAE rung: net stack-byte cost of coding the image's 8x8
+    patches through the Bit-Swap schedule (models/vae.py over core/stack.py).
+
+    Returns ``(net_bytes, backends_identical, elbo_nats)``; the identity
+    seal asserts the coder and Pallas-kernel pop backends evolved the stack
+    byte-identically, and the decode side is asserted bit-exact (pixels AND
+    restored initial stack — the bits-back identity) before any CR ships.
+    """
+    from repro.core import stack
+    from repro.models import vae
+
+    cfg = vae.VAEConfig()
+    h, w = img.shape
+
+    def patch(im):
+        return im.reshape(h // 8, 8, w // 8, 8).swapaxes(1, 2).reshape(-1, 64)
+
+    params, loss = vae.train_vae(
+        cfg,
+        lambda i: patch(synthetic_image(h, w, seed=100 + i)).astype(np.int64),
+        steps=steps, lr=1e-2, seed=0)
+    x = jnp.asarray(patch(img), jnp.int32)
+    lanes = x.shape[0]
+    st0 = stack.stack_init_bits(lanes, 1024, n_bytes=32, seed=7)
+    st = vae.bb_encode(st0, params, x, cfg)
+    st_k = vae.bb_encode(st0, params, x, cfg, backend="kernel")
+    identical = bool(
+        np.array_equal(np.asarray(st_k.buf), np.asarray(st.buf))
+        and np.array_equal(np.asarray(st_k.s), np.asarray(st.s)))
+    st_d, x_d = vae.bb_decode(st, params, cfg)
+    assert np.array_equal(np.asarray(x_d), np.asarray(x))
+    assert np.array_equal(np.asarray(st_d.s), np.asarray(st0.s))
+    assert not np.asarray(st_d.underflow).any()
+    net = int((np.asarray(stack.stack_bytes(st))
+               - np.asarray(stack.stack_bytes(st0))).sum())
+    return net, identical, loss
+
+
 def _pack_v2(stats) -> bytes:
     """ChunkedCompressStats -> v2 container bytes (the shipped artifact)."""
     ch = stats.chunks
@@ -94,6 +133,11 @@ def run(h: int = 128, w: int = 256, seed: int = 0, chunk_size: int = 512):
     out["rANS-neural(ras-pimc)"] = len(raw) / len(blob)
     out["_pimc_train_loss_bits"] = loss / np.log(2)
     out["_backends_byte_identical"] = True
+
+    net, lat_identical, lat_loss = _latent_rung(img)
+    out["rANS-bitsback-latent(vae)"] = len(raw) / net
+    out["_vae_elbo_bits_per_pixel"] = lat_loss / np.log(2) / 64
+    out["_latent_backends_byte_identical"] = lat_identical
     return out
 
 

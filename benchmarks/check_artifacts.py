@@ -26,6 +26,10 @@ Checked invariants:
   one-request-at-a-time loop's streams/sec at equal-or-better p99
   latency, and every record seals ``byte_identical`` (engine blobs ==
   single-request path).
+* BENCH_ratio.json — a dict of CR columns (not a point list): the rANS
+  ladder must carry positive ratios including the bits-back latent column,
+  and both byte-identity seals (chunked containers AND latent stack
+  evolution across coder/kernel pop backends) must be True.
 """
 
 from __future__ import annotations
@@ -112,11 +116,30 @@ def check_serve(path: str) -> str:
     return f"{len(pts)} points, engine {best:.2f}x serial, all sealed"
 
 
+def check_ratio(path: str) -> str:
+    # ratio artifact is a single dict of named CR columns, not a point list
+    with open(path) as f:
+        r = json.load(f)
+    if not isinstance(r, dict) or not r:
+        _fail(path, "expected a non-empty dict of CR columns")
+    for col in ("rANS-static-histogram", "rANS-neural(ras-pimc)",
+                "rANS-bitsback-latent(vae)"):
+        if not (isinstance(r.get(col), float) and r[col] > 0):
+            _fail(path, f"missing or non-positive CR column {col!r}")
+    for seal in ("_backends_byte_identical",
+                 "_latent_backends_byte_identical"):
+        if r.get(seal) is not True:
+            _fail(path, f"byte-identity seal {seal!r} missing or False")
+    n = sum(1 for k in r if not k.startswith("_"))
+    return f"{n} CR columns, both byte-identity seals True"
+
+
 CHECKS = {
     "BENCH_encode.json": check_encode,
     "BENCH_decode.json": check_decode,
     "BENCH_chunked.json": check_chunked,
     "BENCH_serve.json": check_serve,
+    "BENCH_ratio.json": check_ratio,
 }
 
 

@@ -1,0 +1,83 @@
+"""Bits-back latent compression over the rANS stack (DESIGN.md §12).
+
+    PYTHONPATH=src python examples/compress_latents.py
+
+Trains the small Bit-Swap hierarchical VAE (models/vae.py) on synthetic
+image patches, then codes a held-out image with bits-back over the
+craystack-style stack (core/stack.py): latent bins pop against the
+posterior, pixels and latents push against the generative model, and the
+posterior's recovered bits pay the latent overhead back.  The script
+asserts the full contract: bit-exact round trip through BOTH pop backends
+(pure-JAX coder and the Pallas per-step decode kernel), exact restoration
+of the stack's initial bits (the bits-back identity), and a net rate that
+beats the static-histogram rANS baseline.  Runs as a CI smoke step.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import stack
+from repro.data.pipeline import synthetic_image
+from repro.models import vae
+from repro.serve.compress import histogram_compress
+
+LANES, D_X = 64, 64       # 64 patches of 8x8 pixels per image
+CAP = 4096
+
+
+def patches(img: np.ndarray) -> np.ndarray:
+    """64x64 image -> (64 patches, 64 pixels) rows (8x8 tiles)."""
+    return img.reshape(8, 8, 8, 8).transpose(0, 2, 1, 3).reshape(LANES, D_X)
+
+
+cfg = vae.VAEConfig(d_x=D_X)
+params, loss = vae.train_vae(
+    cfg, lambda i: patches(synthetic_image(64, 64, seed=i)).astype(np.int64),
+    steps=600, lr=1e-2, seed=0)
+print(f"VAE trained: ELBO {loss / np.log(2) / D_X:.3f} bits/pixel")
+
+x = jnp.asarray(patches(synthetic_image(64, 64, seed=999)), jnp.int32)
+n_pixels = LANES * D_X
+
+# bits-back encode onto a stack seeded with explicit initial bits; the net
+# message cost is the stack's byte growth (initial bits are capital, the
+# decode-side pushes restore them exactly)
+st0 = stack.stack_init_bits(LANES, CAP, n_bytes=64, seed=7)
+bytes0 = np.asarray(stack.stack_bytes(st0))
+st = vae.bb_encode(st0, params, x, cfg)
+net = int((np.asarray(stack.stack_bytes(st)) - bytes0).sum())
+print(f"bits-back: {net} net bytes for {n_pixels} pixels "
+      f"({net * 8 / n_pixels:.3f} bpp)")
+
+# decode = exact reverse schedule; pixels and the initial stack must both
+# come back bit-for-bit (the bits-back identity)
+st_d, x_d = vae.bb_decode(st, params, cfg)
+assert np.array_equal(np.asarray(x_d), np.asarray(x))
+assert np.array_equal(np.asarray(st_d.s), np.asarray(st0.s))
+assert np.array_equal(np.asarray(st_d.ptr), np.asarray(st0.ptr))
+assert not np.asarray(st_d.underflow).any()
+print("round trip: pixels bit-exact, initial stack bits restored")
+
+# the same schedule with every pop routed through the Pallas per-step
+# decode kernel — byte-identical stack evolution (shared search/refill
+# cores), so the accelerated path is a drop-in
+st_k = vae.bb_encode(st0, params, x, cfg, backend="kernel")
+assert np.array_equal(np.asarray(st_k.buf), np.asarray(st.buf))
+assert np.array_equal(np.asarray(st_k.s), np.asarray(st.s))
+st_kd, x_kd = vae.bb_decode(st_k, params, cfg, backend="kernel")
+assert np.array_equal(np.asarray(x_kd), np.asarray(x))
+assert np.array_equal(np.asarray(st_kd.s), np.asarray(st0.s))
+print("kernel pop backend: byte-identical stack, same round trip")
+
+# flushed stacks ride the existing container tooling
+enc = stack.stack_flush(st)
+st_r = stack.stack_open(enc)
+assert np.array_equal(np.asarray(st_r.s), np.asarray(st.s))
+
+# baseline: static-histogram rANS over the same pixels
+hist_enc, _ = histogram_compress(np.asarray(x), 256)
+hist = int(np.asarray(hist_enc.length).sum())
+print(f"histogram baseline: {hist} bytes ({hist * 8 / n_pixels:.3f} bpp)")
+assert net < hist, (
+    f"bits-back ({net} B) should beat the histogram baseline ({hist} B)")
+print(f"bits-back beats histogram by {(1 - net / hist) * 100:.1f}%")

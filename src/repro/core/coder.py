@@ -35,6 +35,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import constants as C
 from repro.core import search, update
@@ -242,6 +243,12 @@ def encode_chunked(symbols: jax.Array, tbl: TableSet, chunk_size: int,
     cap = default_cap(min(chunk_size, t_len)) if cap is None else cap
     per_position = is_per_position(tbl, t_len)
 
+    if t_len == 0:  # degenerate: zero chunks, empty (0, lanes, cap) stream
+        z = jnp.zeros((0, lanes), _I32)
+        return ChunkedLanes(buf=jnp.zeros((0, lanes, cap), _U8),
+                            start=z, length=z,
+                            overflow=jnp.zeros((0, lanes), bool))
+
     parts = []
     if n_full:
         full = symbols[:, :n_full * chunk_size]
@@ -291,7 +298,12 @@ def decode_chunked(chunks: ChunkedLanes, n_symbols: int, tbl: TableSet,
     if candidates is not None and candidates.shape[-1] == 0:
         candidates = None
 
-    syms, probe_sums, lane_sums = [], [], []
+    if n_symbols == 0:  # degenerate: no chunks to decode
+        lanes = chunks.buf.shape[1] if chunks.buf.ndim == 3 else 0
+        out = (jnp.zeros((lanes, 0), _I32), jnp.float32(0.0))
+        return out + (jnp.zeros((lanes,), _I32),) if lane_probes else out
+
+    syms, probe_sums, lane_sums, unders = [], [], [], []
     if n_full:
         sub = jax.tree.map(lambda a: a[:n_full], chunks)
         cand_full = (candidates[:n_full * chunk_size].reshape(
@@ -303,7 +315,8 @@ def decode_chunked(chunks: ChunkedLanes, n_symbols: int, tbl: TableSet,
                                          prob_bits, predictor=predictor,
                                          use_lut=use_lut,
                                          lane_probes=lane_probes,
-                                         candidates=cd))(
+                                         candidates=cd,
+                                         return_exhausted=True))(
                 sub, chunk_tables(tbl, n_full, chunk_size), cand_full)
         else:
             dec = jax.vmap(
@@ -311,12 +324,14 @@ def decode_chunked(chunks: ChunkedLanes, n_symbols: int, tbl: TableSet,
                                      prob_bits, predictor=predictor,
                                      use_lut=use_lut,
                                      lane_probes=lane_probes,
-                                     candidates=cd))(sub, cand_full)
+                                     candidates=cd,
+                                     return_exhausted=True))(sub, cand_full)
         if lane_probes:
-            sym_full, probes_full, lp_full = dec
+            sym_full, probes_full, lp_full, und_full = dec
             lane_sums.append(jnp.sum(lp_full, axis=0))
         else:
-            sym_full, probes_full = dec  # (n_full, lanes, S), (n_full,)
+            sym_full, probes_full, und_full = dec  # (n_full, lanes, S), ...
+        unders.append(jnp.any(und_full, axis=0))
         lanes = sym_full.shape[1]
         syms.append(sym_full.swapaxes(0, 1).reshape(
             lanes, n_full * chunk_size))
@@ -328,14 +343,18 @@ def decode_chunked(chunks: ChunkedLanes, n_symbols: int, tbl: TableSet,
             chunk_encoded(chunks, n_full), tail_len, tbl_tail, prob_bits,
             predictor=predictor, use_lut=use_lut, lane_probes=lane_probes,
             candidates=(candidates[n_full * chunk_size:]
-                        if candidates is not None else None))
+                        if candidates is not None else None),
+            return_exhausted=True)
         if lane_probes:
-            sym_tail, probes_tail, lp_tail = dec_tail
+            sym_tail, probes_tail, lp_tail, und_tail = dec_tail
             lane_sums.append(lp_tail)
         else:
-            sym_tail, probes_tail = dec_tail
+            sym_tail, probes_tail, und_tail = dec_tail
+        unders.append(und_tail)
         syms.append(sym_tail)
         probe_sums.append(probes_tail * tail_len)
+    under = functools.reduce(jnp.logical_or, unders)
+    _check_exhausted(under, "decode_chunked")
     out = jnp.concatenate(syms, axis=1)
     avg_probes = sum(probe_sums) / n_symbols
     if lane_probes:
@@ -347,9 +366,43 @@ def decode_chunked(chunks: ChunkedLanes, n_symbols: int, tbl: TableSet,
 # decoder
 # ---------------------------------------------------------------------------
 
+class StreamExhaustedError(ValueError):
+    """Decode read past the end of a lane's byte window.
+
+    Raised on every *host* decode path when more symbols are requested than
+    the stream encodes (or the stream was truncated).  Inside traced
+    contexts the condition travels as the per-lane ``DecState.underflow``
+    flag instead (checked by the caller once values are concrete)."""
+
+
+def _check_exhausted(underflow, where: str = "decode") -> None:
+    """Host-side gate on the per-lane underflow flag (no-op on tracers)."""
+    if underflow is None or isinstance(underflow, jax.core.Tracer):
+        return
+    u = np.asarray(underflow)
+    if u.any():
+        bad = np.nonzero(u.reshape(-1))[0].tolist()
+        raise StreamExhaustedError(
+            f"{where}: {int(u.sum())} lane stream(s) exhausted mid-decode "
+            f"(flat lane indices {bad[:16]}{'...' if len(bad) > 16 else ''}) "
+            "— more symbols were requested than the stream encodes, or the "
+            "stream is truncated; symbols past that point are garbage")
+
+
 class DecState(NamedTuple):
     s: jax.Array    # (lanes,) uint32
     ptr: jax.Array  # (lanes,) int32 read cursor into buf
+    # (lanes,) bool, True once a lane read past its byte window.  Optional
+    # (None == all clear) so positional DecState(s, ptr) callers keep working.
+    underflow: jax.Array | None = None
+
+
+def _read_byte(buf, lane_idx, ptr, cap):
+    """One guarded forward byte read: out-of-window reads yield 0 (matching
+    the kernels' one-hot gather semantics) and report the violation."""
+    oob = (ptr < 0) | (ptr >= cap)
+    byte = buf[lane_idx, jnp.clip(ptr, 0, cap - 1)].astype(_U32)
+    return jnp.where(oob, _U32(0), byte), oob
 
 
 def decoder_init(enc: EncodedLanes) -> DecState:
@@ -357,11 +410,13 @@ def decoder_init(enc: EncodedLanes) -> DecState:
     lane_idx = jnp.arange(lanes)
     s = jnp.zeros((lanes,), _U32)
     ptr = enc.start
+    under = jnp.zeros((lanes,), bool)
     for _ in range(4):
-        byte = enc.buf[lane_idx, jnp.clip(ptr, 0, cap - 1)].astype(_U32)
+        byte, oob = _read_byte(enc.buf, lane_idx, ptr, cap)
+        under = under | oob
         s = (s << 8) | byte
         ptr = ptr + 1
-    return DecState(s=s, ptr=ptr)
+    return DecState(s=s, ptr=ptr, underflow=under)
 
 
 def find_symbol(tbl: TableSet, slot: jax.Array,
@@ -405,22 +460,27 @@ def decode_get(st: DecState, buf: jax.Array, tbl: TableSet,
     f = _gather(tbl.freq, x)
     start = _gather(tbl.cdf[..., :-1], x)
     s = f * (s >> prob_bits) + slot - start
-    # fixed 2-step masked byte refill
+    under = (jnp.zeros((lanes,), bool) if st.underflow is None
+             else st.underflow)
+    # fixed 2-step masked byte refill; a refill that would read past the
+    # window injects 0 and raises the lane's underflow flag instead of
+    # silently re-reading the final byte.
     for _ in range(C.MAX_RENORM_STEPS):
         cond = s < _U32(C.RANS_L)
-        byte = buf[lane_idx, jnp.clip(ptr, 0, cap - 1)].astype(_U32)
+        byte, oob = _read_byte(buf, lane_idx, ptr, cap)
+        under = under | (cond & oob)
         s = jnp.where(cond, (s << C.RENORM_SHIFT) | byte, s)
         ptr = ptr + cond.astype(_I32)
-    return DecState(s, ptr), x, probes
+    return DecState(s, ptr, under), x, probes
 
 
 @functools.partial(jax.jit, static_argnames=("n_symbols", "prob_bits",
                                              "predictor", "use_lut",
                                              "lane_probes"))
-def decode(enc: EncodedLanes, n_symbols: int, tbl: TableSet,
-           prob_bits: int = C.PROB_BITS, predictor=None,
-           use_lut: bool = False, lane_probes: bool = False,
-           candidates: jax.Array | None = None):
+def _decode_traced(enc: EncodedLanes, n_symbols: int, tbl: TableSet,
+                   prob_bits: int = C.PROB_BITS, predictor=None,
+                   use_lut: bool = False, lane_probes: bool = False,
+                   candidates: jax.Array | None = None):
     """Decode ``n_symbols`` per lane.  Returns (symbols (lanes,T), avg_probes).
 
     ``predictor`` is one of core.predictors (hashable NamedTuple of static
@@ -471,9 +531,32 @@ def decode(enc: EncodedLanes, n_symbols: int, tbl: TableSet,
 
     xs = (tbl if per_position else None,
           candidates.astype(_I32) if candidates is not None else None)
-    (_, _), (sym_t, probes_t) = jax.lax.scan(
+    (st_f, _), (sym_t, probes_t) = jax.lax.scan(
         step, (decoder_init(enc), ctx0), xs, length=n_symbols)
-    avg_probes = jnp.mean(probes_t.astype(jnp.float32))
+    avg_probes = (jnp.mean(probes_t.astype(jnp.float32)) if n_symbols
+                  else jnp.float32(0.0))
     if lane_probes:
-        return sym_t.T, avg_probes, jnp.sum(probes_t, axis=0)
-    return sym_t.T, avg_probes
+        return sym_t.T, avg_probes, jnp.sum(probes_t, axis=0), st_f.underflow
+    return sym_t.T, avg_probes, st_f.underflow
+
+
+def decode(enc: EncodedLanes, n_symbols: int, tbl: TableSet,
+           prob_bits: int = C.PROB_BITS, predictor=None,
+           use_lut: bool = False, lane_probes: bool = False,
+           candidates: jax.Array | None = None,
+           return_exhausted: bool = False):
+    """Host entry around :func:`_decode_traced`.
+
+    Same return shape as before (``(symbols, avg_probes[, lane_probes])``)
+    but raises :class:`StreamExhaustedError` when any lane decoded past the
+    end of its byte window — unless ``return_exhausted`` is set, in which
+    case the per-lane flag is appended instead (the traced-caller form:
+    vmap/shard_map bodies cannot raise, so they thread the flag out).
+    """
+    out = _decode_traced(enc, n_symbols, tbl, prob_bits, predictor,
+                         use_lut, lane_probes, candidates)
+    *vals, under = out
+    if return_exhausted:
+        return (*vals, under)
+    _check_exhausted(under)
+    return tuple(vals)

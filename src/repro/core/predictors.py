@@ -43,6 +43,27 @@ class Prediction(NamedTuple):
     candidates: jax.Array | None = None  # (lanes, k) int32 trial symbols or None
 
 
+def _static_config(cls):
+    """Make a NamedTuple config hash/compare by *type* as well as fields.
+
+    Predictor configs ride jit/trace caches as static arguments, and those
+    caches key on ``__eq__``/``__hash__``.  Plain NamedTuples compare as bare
+    tuples, so ``LastValue(delta=8) == ZeroPredictor(delta=8)`` — and a
+    decode traced with one silently reuses the program traced for the other
+    (same symbols, wrong probe accounting).  Tagging the key with the class
+    keeps every config family a distinct cache entry.
+    """
+
+    def __eq__(self, other):
+        return type(other) is type(self) and tuple(self) == tuple(other)
+
+    cls.__eq__ = __eq__
+    cls.__ne__ = lambda self, other: not __eq__(self, other)
+    cls.__hash__ = lambda self: hash((cls.__qualname__,) + tuple(self))
+    return cls
+
+
+@_static_config
 class NeighborAverage(NamedTuple):
     """Running-mean-of-last-``window`` predictor with last-value/zero fallback.
 
@@ -71,6 +92,7 @@ class NeighborAverage(NamedTuple):
             [ctx[:, 1:], decoded.astype(_I32)[:, None]], axis=1)
 
 
+@_static_config
 class LastValue(NamedTuple):
     """Degenerate neighbour predictor: anchor = previous symbol."""
 
@@ -86,6 +108,7 @@ class LastValue(NamedTuple):
         return decoded.astype(_I32)[:, None]
 
 
+@_static_config
 class ZeroPredictor(NamedTuple):
     """Anchor 0 — the paper's "zero fallback"; useful for residual streams."""
 

@@ -150,16 +150,19 @@ def _ceil_div_pow2_u32(shift_amt: jax.Array, f: jax.Array) -> jax.Array:
     return rcp
 
 
-def build_tables(freq: jax.Array, prob_bits: int = C.PROB_BITS) -> TableSet:
-    """Quantized frequencies -> full fixed-point TableSet (batched OK)."""
-    C.check_prob_bits(prob_bits)
+def barrett_planes(freq: jax.Array, start: jax.Array, prob_bits: int):
+    """``(freq, start)`` -> the five encoder planes ``(rcp, rshift, bias,
+    cmpl, x_max)``.
+
+    This is the *single source* of the Barrett reciprocal construction:
+    :func:`build_tables` maps it over whole alphabets, and the stack codecs
+    (``core.stack``) call it per-symbol on gathered ``(start, freq)`` pairs —
+    structurally the same math, so push/pop over statfuns is bit-identical
+    to the table path by construction.
+    """
     total = _U32(1 << prob_bits)
     f = freq.astype(_U32)
-
-    cdf_hi = jnp.cumsum(f.astype(_I32), axis=-1).astype(_U32)
-    zeros = jnp.zeros(f.shape[:-1] + (1,), _U32)
-    cdf = jnp.concatenate([zeros, cdf_hi], axis=-1)          # (..., K+1)
-    start = cdf[..., :-1]
+    start = start.astype(_U32)
 
     is_one = f == 1
     # shift = ceil(log2 f) = bit_length(f - 1) for f >= 2.
@@ -172,7 +175,20 @@ def build_tables(freq: jax.Array, prob_bits: int = C.PROB_BITS) -> TableSet:
     bias = jnp.where(is_one, start + total - 1, start)
     cmpl = total - f
     x_max = _U32(C.x_max_scale(prob_bits)) * f
+    return rcp, rshift, bias, cmpl, x_max
 
+
+def build_tables(freq: jax.Array, prob_bits: int = C.PROB_BITS) -> TableSet:
+    """Quantized frequencies -> full fixed-point TableSet (batched OK)."""
+    C.check_prob_bits(prob_bits)
+    f = freq.astype(_U32)
+
+    cdf_hi = jnp.cumsum(f.astype(_I32), axis=-1).astype(_U32)
+    zeros = jnp.zeros(f.shape[:-1] + (1,), _U32)
+    cdf = jnp.concatenate([zeros, cdf_hi], axis=-1)          # (..., K+1)
+    start = cdf[..., :-1]
+
+    rcp, rshift, bias, cmpl, x_max = barrett_planes(f, start, prob_bits)
     return TableSet(freq=f, cdf=cdf, rcp=rcp, rshift=rshift,
                     bias=bias, cmpl=cmpl, x_max=x_max)
 

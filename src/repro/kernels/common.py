@@ -104,43 +104,56 @@ def onehot_gather_rows(buf: jax.Array, row_idx: jax.Array) -> jax.Array:
 
 
 def read_state_header(buf: jax.Array, ptr: jax.Array,
-                      gather=onehot_gather_rows):
+                      gather=onehot_gather_rows, limit=None):
     """Per-lane 4-byte big-endian rANS state header read (decoder init).
 
     buf: (cap, lanes) uint8; ptr: (lanes,) int32 read cursors.  Returns the
-    reconstructed ``(lanes,)`` uint32 states and the advanced cursors — the
-    in-kernel single source of ``coder.decoder_init``'s header walk, shared
-    by the full decode kernel's per-chunk reset and the fused serve step.
+    reconstructed ``(lanes,)`` uint32 states, the advanced cursors, and a
+    ``(lanes,)`` int32 underflow count (header reads at or past ``limit`` —
+    the lane's stream end; the one-hot gather already yields 0 there, the
+    count makes the exhaustion *detectable*).  The in-kernel single source
+    of ``coder.decoder_init``'s header walk, shared by the full decode
+    kernel's per-chunk reset and the fused serve step.
 
     ``gather`` selects the per-lane byte access: the default reads the
     dense right-aligned ``(cap, lanes)`` layout; the zero-copy slab decode
     passes :func:`onehot_gather_lanes` with a lane-major ``(lanes, cap)``
-    VMEM window (DESIGN.md §10).
+    VMEM window (DESIGN.md §10).  ``limit`` is an int or ``(lanes,)`` array
+    of one-past-the-end read bounds (``cap`` for the dense layout,
+    ``wstart + wlen`` for slab windows); None skips the accounting.
     """
     s = jnp.zeros((ptr.shape[0],), jnp.uint32)
+    under = jnp.zeros((ptr.shape[0],), jnp.int32)
     for _ in range(4):
+        if limit is not None:
+            under = under + (ptr >= limit).astype(jnp.int32)
         byte = gather(buf, ptr).astype(jnp.uint32)
         s = (s << 8) | byte
         ptr = ptr + 1
-    return s, ptr
+    return s, ptr, under
 
 
 def masked_refill(buf: jax.Array, s: jax.Array, ptr: jax.Array,
-                  gather=onehot_gather_rows):
+                  gather=onehot_gather_rows, limit=None):
     """Fixed ``MAX_RENORM_STEPS``-stage masked byte refill (decode renorm).
 
     buf: (cap, lanes) uint8; s: (lanes,) uint32; ptr: (lanes,) int32.
     Mirrors the encoder's staged renorm bound: at most two byte reads per
     symbol, lanes above ``RANS_L`` are masked out (the RTL's clock gating).
     Shared by the full decode kernel and the fused serve step kernel.
-    ``gather`` follows :func:`read_state_header`'s layout contract.
+    ``gather``/``limit`` follow :func:`read_state_header`'s contract; the
+    third return is the per-lane count of *active* refills that read at or
+    past ``limit`` (stream exhaustion — the injected byte is 0).
     """
+    under = jnp.zeros((s.shape[0],), jnp.int32)
     for _ in range(C.MAX_RENORM_STEPS):
         cond = s < jnp.uint32(C.RANS_L)
+        if limit is not None:
+            under = under + (cond & (ptr >= limit)).astype(jnp.int32)
         byte = gather(buf, ptr).astype(jnp.uint32)
         s = jnp.where(cond, (s << C.RENORM_SHIFT) | byte, s)
         ptr = ptr + cond.astype(jnp.int32)
-    return s, ptr
+    return s, ptr, under
 
 
 def next_pow2(n: int) -> int:

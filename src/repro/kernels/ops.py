@@ -38,8 +38,8 @@ from repro.core import constants as C
 # differential-tested and benchmarked against.
 from repro.core.bitstream import compact_records  # noqa: F401
 from repro.core.bitstream import ContainerSlab
-from repro.core.coder import (ChunkedLanes, EncodedLanes, default_cap,
-                              num_chunks)
+from repro.core.coder import (ChunkedLanes, EncodedLanes, _check_exhausted,
+                              default_cap, num_chunks)
 from repro.core.predictors import NeighborAverage
 from repro.core.spc import TableSet, build_tables
 from repro.kernels.rans_decode import (rans_decode_lanes, rans_decode_slab,
@@ -71,11 +71,33 @@ def rans_encode(symbols: jax.Array, tbl: TableSet,
     """
     lanes, t_len = symbols.shape
     cap = default_cap(t_len) if cap is None else cap
+    if t_len == 0:
+        return _header_only_stream(lanes, cap)
     buf, start, length, overflow = rans_encode_lanes(
         symbols, tbl, cap=cap, prob_bits=prob_bits, lane_block=lane_block,
         t_block=t_block, scatter=scatter, interpret=interpret)
     return EncodedLanes(buf=buf[0], start=start[0], length=length[0],
                         overflow=overflow[0])
+
+
+def _header_only_stream(lanes: int, cap: int) -> EncodedLanes:
+    """The ``n_symbols == 0`` stream: 4 flush bytes of the initial state.
+
+    Byte-identical to ``coder.encode`` on an empty symbol block (including
+    the overflow-flagged ``cap < 4`` corner), built host-side — the kernel
+    grid has no T blocks to run.
+    """
+    hdr = [(C.RANS_L >> sh) & 0xFF for sh in (0, 8, 16, 24)]
+    buf = np.zeros((lanes, cap), np.uint8)
+    p = cap
+    for b in hdr:                   # backward emit with the drop sentinel
+        if p > 0:
+            buf[:, p - 1] = b
+        p -= 1
+    return EncodedLanes(buf=jnp.asarray(buf),
+                        start=jnp.full((lanes,), max(p, 0), jnp.int32),
+                        length=jnp.full((lanes,), cap - p, jnp.int32),
+                        overflow=jnp.full((lanes,), p < 0))
 
 
 def rans_encode_chunked(symbols: jax.Array, tbl: TableSet, chunk_size: int,
@@ -100,6 +122,11 @@ def rans_encode_chunked(symbols: jax.Array, tbl: TableSet, chunk_size: int,
     lanes, t_len = symbols.shape
     num_chunks(t_len, chunk_size)           # validates chunk_size > 0
     cap = default_cap(min(chunk_size, t_len)) if cap is None else cap
+    if t_len == 0:                          # degenerate: zero chunks
+        z = jnp.zeros((0, lanes), jnp.int32)
+        return ChunkedLanes(buf=jnp.zeros((0, lanes, cap), jnp.uint8),
+                            start=z, length=z,
+                            overflow=jnp.zeros((0, lanes), bool))
     buf, start, length, overflow = rans_encode_lanes(
         symbols, tbl, cap=cap, chunk_size=chunk_size, prob_bits=prob_bits,
         lane_block=lane_block, t_block=t_block, scatter=scatter,
@@ -116,7 +143,8 @@ def rans_decode(enc: EncodedLanes, n_symbols: int, tbl: TableSet,
                 lane_block: int = 128,
                 t_block: int | None = None,
                 interpret: bool = True,
-                lane_probes: bool = False):
+                lane_probes: bool = False,
+                exhausted_flags: bool = False):
     """Kernel-backed decode; returns (symbols (lanes,T), avg probes/symbol).
 
     Static ``(K,)`` and adaptive ``(T, K)`` / ``(T, lanes, K)`` TableSets
@@ -129,22 +157,33 @@ def rans_decode(enc: EncodedLanes, n_symbols: int, tbl: TableSet,
     the ``lane_block`` grid the block collapses to one lane group
     (correctness over occupancy — the serve/parallel paths run narrow lane
     counts).  ``lane_probes``: also return the per-lane counters
-    ``(lanes,)``.
+    ``(lanes,)``.  A decode that reads past a lane's stream end raises
+    :class:`~repro.core.coder.StreamExhaustedError` host-side; traced
+    callers (shard_map bodies) pass ``exhausted_flags=True`` to get the
+    per-lane bool flag appended instead.
     """
     if predictor is None and use_pred:
         predictor = NeighborAverage(window=window, delta=delta)
     lanes = enc.buf.shape[0]
     if lanes % lane_block:
         lane_block = lanes
-    sym, probes = rans_decode_lanes(
+    if n_symbols == 0:                      # degenerate: nothing to decode
+        out = (jnp.zeros((lanes, 0), jnp.int32), jnp.float32(0.0))
+        if lane_probes:
+            out = out + (jnp.zeros((lanes,), jnp.int32),)
+        return out + (jnp.zeros((lanes,), bool),) if exhausted_flags else out
+    sym, probes, under = rans_decode_lanes(
         enc.buf, enc.start, tbl.freq, tbl.cdf, t_len=n_symbols,
         prob_bits=prob_bits, predictor=predictor, candidates=candidates,
         lane_block=lane_block, t_block=t_block, interpret=interpret)
     probes = probes[0]
+    under = under[0] > 0
     avg = jnp.mean(probes.astype(jnp.float32)) / n_symbols
-    if lane_probes:
-        return sym, avg, probes
-    return sym, avg
+    out = (sym, avg, probes) if lane_probes else (sym, avg)
+    if exhausted_flags:
+        return out + (under,)
+    _check_exhausted(under, "rans_decode")
+    return out
 
 
 def rans_decode_chunked(chunks: ChunkedLanes | None = None,
@@ -159,6 +198,7 @@ def rans_decode_chunked(chunks: ChunkedLanes | None = None,
                         interpret: bool = True,
                         lane_probes: bool = False,
                         chunk_probes: bool = False,
+                        exhausted_flags: bool = False,
                         from_container: ContainerSlab | None = None):
     """Kernel-backed chunked decode (mirrors :func:`rans_encode_chunked`).
 
@@ -206,6 +246,15 @@ def rans_decode_chunked(chunks: ChunkedLanes | None = None,
             "decode with the chunk_size the stream was encoded with")
     if lanes % lane_block:
         lane_block = lanes
+    if n_symbols == 0:                      # degenerate: zero chunks
+        out = (jnp.zeros((lanes, 0), jnp.int32), jnp.float32(0.0))
+        if lane_probes:
+            out = out + (jnp.zeros((lanes,), jnp.int32),)
+        if chunk_probes:
+            out = out + (jnp.zeros((0, lanes), jnp.int32),)
+        if exhausted_flags:
+            out = out + (jnp.zeros((0, lanes), bool),)
+        return out
     if from_container is not None:
         if cs.slab.shape[0] >= 2 ** 31:
             raise ValueError(
@@ -223,14 +272,14 @@ def rans_decode_chunked(chunks: ChunkedLanes | None = None,
         base = np.clip(cs.offset, 0, slab.shape[0] - cap).astype(np.int32)
         wstart = (cs.offset - base).astype(np.int32)
         wlen = cs.length.astype(np.int32)
-        sym, cprobes = rans_decode_slab(
+        sym, cprobes, cunder = rans_decode_slab(
             jnp.asarray(slab), jnp.asarray(base), jnp.asarray(wstart),
             jnp.asarray(wlen), tbl.freq, tbl.cdf, cap=cap,
             t_len=n_symbols, chunk_size=chunk_size, prob_bits=prob_bits,
             predictor=predictor, candidates=candidates,
             lane_block=lane_block, t_block=t_block, interpret=interpret)
     else:
-        sym, cprobes = rans_decode_lanes(
+        sym, cprobes, cunder = rans_decode_lanes(
             chunks.buf, chunks.start, tbl.freq, tbl.cdf, t_len=n_symbols,
             chunk_size=chunk_size, prob_bits=prob_bits, predictor=predictor,
             candidates=candidates, lane_block=lane_block, t_block=t_block,
@@ -242,6 +291,9 @@ def rans_decode_chunked(chunks: ChunkedLanes | None = None,
         out = out + (jnp.sum(cprobes, axis=0),)
     if chunk_probes:
         out = out + (cprobes,)
+    if exhausted_flags:
+        return out + (cunder > 0,)
+    _check_exhausted(cunder > 0, "rans_decode_chunked")
     return out
 
 
@@ -267,19 +319,22 @@ def rans_decode_step_rows(buf_t: jax.Array, s: jax.Array, ptr: jax.Array,
     (``rans_decode_step``), ``backend="coder"`` the pure-JAX
     ``coder.decode_get`` — bit-identical on symbols AND probe counters
     (both consume ``core.search``).  Returns
-    ``(s', ptr', symbols (rows,), probes (rows,))``.
+    ``(s', ptr', symbols (rows,), probes (rows,), under (rows,))`` with
+    ``under`` int32 0/1 (this step read past the row's stream end) —
+    normalized across both backends.
     """
     if backend == "kernel":
-        return rans_decode_step(buf_t, s, ptr, tbl.freq, tbl.cdf,
-                                prob_bits=prob_bits, candidates=candidates,
-                                interpret=interpret)
+        s2, ptr2, sym, probes, under = rans_decode_step(
+            buf_t, s, ptr, tbl.freq, tbl.cdf, prob_bits=prob_bits,
+            candidates=candidates, interpret=interpret)
+        return s2, ptr2, sym, probes, (under > 0).astype(jnp.int32)
     if backend != "coder":
         raise ValueError(f"unknown step backend {backend!r}")
     from repro.core import coder
     st, sym, probes = coder.decode_get(
         coder.DecState(s, ptr), buf_t.T, tbl, prob_bits,
         candidates=candidates)
-    return st.s, st.ptr, sym, probes
+    return st.s, st.ptr, sym, probes, st.underflow.astype(jnp.int32)
 
 
 def spc_quantize_tables(probs: jax.Array,

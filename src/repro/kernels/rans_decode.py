@@ -92,9 +92,10 @@ def _decode_kernel(*refs,
     if has_cands:
         cand_ref, *rest = rest
     if slab:
-        sym_ref, probes_ref, s_scr, ptr_scr, ctx_scr, win_scr, sem = rest
+        sym_ref, probes_ref, under_ref, s_scr, ptr_scr, ctx_scr, win_scr, \
+            sem = rest
     else:
-        sym_ref, probes_ref, s_scr, ptr_scr, ctx_scr = rest
+        sym_ref, probes_ref, under_ref, s_scr, ptr_scr, ctx_scr = rest
     lanes = sym_ref.shape[1]
     mask = _U32((1 << prob_bits) - 1)
     i = pl.program_id(0)      # lane-block index
@@ -128,19 +129,26 @@ def _decode_kernel(*refs,
             win = win_scr[...]
             live = (col >= ws[:, None]) & (col < (ws + wl)[:, None])
             win_scr[...] = jnp.where(live, win, _U8(0))
-            s, ptr = read_state_header(win_scr[...], ws,
-                                       gather=byte_gather)
+            s, ptr, und = read_state_header(win_scr[...], ws,
+                                            gather=byte_gather,
+                                            limit=ws + wl)
         else:
-            s, ptr = read_state_header(buf_ref[0],
-                                       start_ref[0].astype(_I32))
+            s, ptr, und = read_state_header(buf_ref[0],
+                                            start_ref[0].astype(_I32),
+                                            limit=buf_ref.shape[1])
         s_scr[0, :] = s
         ptr_scr[0, :] = ptr
         probes_ref[0, :] = jnp.zeros((lanes,), _I32)
+        under_ref[0, :] = und
         if predictor is not None and ctx_w:
             ctx_scr[...] = predictor.init(lanes)
 
     # this chunk's byte source, resident in VMEM across its T blocks
     buf = win_scr[...] if slab else buf_ref[0]
+    # one-past-the-end read bound per lane: the window span end for the
+    # slab layout, the (right-aligned) buffer cap for the dense layout
+    read_limit = (wstart_ref[0].astype(_I32) + wlen_ref[0].astype(_I32)
+                  if slab else buf.shape[0])
 
     if layout == "static":
         freq_all = freq_ref[0]        # (K,)
@@ -162,7 +170,7 @@ def _decode_kernel(*refs,
     sym_ref[...] = jnp.zeros(sym_ref.shape, _I32)
 
     def body(t, carry):
-        s, ptr, probes, ctx = carry
+        s, ptr, probes, under, ctx = carry
         slot = s & mask
         if layout == "static":
             freq_t, cdf_t, g = freq_all, cdf_all, onehot_gather
@@ -191,16 +199,19 @@ def _decode_kernel(*refs,
         start = g(cdf_t[..., :k], x)
         s = f * (s >> prob_bits) + slot - start
         if slab:
-            s, ptr = masked_refill(buf, s, ptr, gather=byte_gather)
+            s, ptr, u = masked_refill(buf, s, ptr, gather=byte_gather,
+                                      limit=read_limit)
         else:
-            s, ptr = masked_refill(buf, s, ptr)
-        return s, ptr, probes + p, ctx
+            s, ptr, u = masked_refill(buf, s, ptr, limit=read_limit)
+        return s, ptr, probes + p, under + u, ctx
 
-    s, ptr, probes, ctx = jax.lax.fori_loop(
-        0, n_t, body, (s_scr[0, :], ptr_scr[0, :], probes_ref[0, :], ctx0))
+    s, ptr, probes, under, ctx = jax.lax.fori_loop(
+        0, n_t, body, (s_scr[0, :], ptr_scr[0, :], probes_ref[0, :],
+                       under_ref[0, :], ctx0))
     s_scr[0, :] = s
     ptr_scr[0, :] = ptr
     probes_ref[0, :] = probes
+    under_ref[0, :] = under
     if predictor is not None and ctx_w:
         ctx_scr[...] = ctx
 
@@ -328,7 +339,7 @@ def rans_decode_lanes(buf: jax.Array,      # (lanes, cap) uint8 forward stream
              if predictor is not None else 0)
     grid = (lanes // lane_block, n_chunks, n_tb)
 
-    sym, probes = pl.pallas_call(
+    sym, probes, under = pl.pallas_call(
         functools.partial(_decode_kernel, t_len=t_len, chunk_size=chunk,
                           t_block=tb, n_tb=n_tb, prob_bits=prob_bits, k=k,
                           layout=layout, predictor=predictor, ctx_w=ctx_w,
@@ -343,9 +354,11 @@ def rans_decode_lanes(buf: jax.Array,      # (lanes, cap) uint8 forward stream
         out_specs=[
             pl.BlockSpec((tb, lane_block), lambda i, c, j: (c * n_tb + j, i)),
             pl.BlockSpec((1, lane_block), lambda i, c, j: (c, i)),
+            pl.BlockSpec((1, lane_block), lambda i, c, j: (c, i)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((total_rows, lanes), _I32),
+            jax.ShapeDtypeStruct((n_chunks, lanes), _I32),
             jax.ShapeDtypeStruct((n_chunks, lanes), _I32),
         ],
         scratch_shapes=[
@@ -356,7 +369,7 @@ def rans_decode_lanes(buf: jax.Array,      # (lanes, cap) uint8 forward stream
         interpret=interpret,
     )(buf3.swapaxes(1, 2), start2.astype(_I32), freq_in, cdf_in, *extra_in)
     sym = unpad_chunk_rows(sym, t_len, chunk, n_chunks, padded_chunk)
-    return sym.T, probes
+    return sym.T, probes, under
 
 
 @functools.partial(jax.jit,
@@ -476,6 +489,7 @@ def rans_decode_slab(slab: jax.Array,      # (S,) uint8 packed payload slab
             pl.BlockSpec((tb, lane_block),
                          lambda i, c, j, *_: (c * n_tb + j, i)),
             pl.BlockSpec((1, lane_block), lambda i, c, j, *_: (c, i)),
+            pl.BlockSpec((1, lane_block), lambda i, c, j, *_: (c, i)),
         ],
         scratch_shapes=[
             pltpu.VMEM((1, lane_block), _U32),              # rANS states
@@ -485,7 +499,7 @@ def rans_decode_slab(slab: jax.Array,      # (S,) uint8 packed payload slab
             pltpu.SemaphoreType.DMA,                        # window copies
         ],
     )
-    sym, probes = pl.pallas_call(
+    sym, probes, under = pl.pallas_call(
         functools.partial(_decode_kernel, t_len=t_len, chunk_size=chunk,
                           t_block=tb, n_tb=n_tb, prob_bits=prob_bits, k=k,
                           layout=layout, predictor=predictor, ctx_w=ctx_w,
@@ -494,12 +508,13 @@ def rans_decode_slab(slab: jax.Array,      # (S,) uint8 packed payload slab
         out_shape=[
             jax.ShapeDtypeStruct((total_rows, lanes), _I32),
             jax.ShapeDtypeStruct((n_chunks, lanes), _I32),
+            jax.ShapeDtypeStruct((n_chunks, lanes), _I32),
         ],
         interpret=interpret,
     )(base.astype(_I32), slab, wstart.astype(_I32), wlen.astype(_I32),
       freq_in, cdf_in, *extra_in)
     sym = unpad_chunk_rows(sym, t_len, chunk, n_chunks, padded_chunk)
-    return sym.T, probes
+    return sym.T, probes, under
 
 
 # ---------------------------------------------------------------------------
@@ -518,9 +533,9 @@ def _decode_step_kernel(buf_ref, s_ref, ptr_ref, freq_ref, cdf_ref, *rest,
                         has_cands: bool):
     if has_cands:
         cand_ref = rest[0]
-        s_out, ptr_out, sym_ref, probes_ref = rest[1:]
+        s_out, ptr_out, sym_ref, probes_ref, under_ref = rest[1:]
     else:
-        s_out, ptr_out, sym_ref, probes_ref = rest
+        s_out, ptr_out, sym_ref, probes_ref, under_ref = rest
     s = s_ref[0, :]
     ptr = ptr_ref[0, :]
     slot = s & _U32((1 << prob_bits) - 1)
@@ -533,11 +548,13 @@ def _decode_step_kernel(buf_ref, s_ref, ptr_ref, freq_ref, cdf_ref, *rest,
     f = g(freq_t, x)
     start = g(cdf_t[..., :k], x)
     s = f * (s >> prob_bits) + slot - start
-    s, ptr = masked_refill(buf_ref[...], s, ptr)
+    s, ptr, u = masked_refill(buf_ref[...], s, ptr,
+                              limit=buf_ref.shape[0])
     s_out[0, :] = s
     ptr_out[0, :] = ptr
     sym_ref[0, :] = x
     probes_ref[0, :] = p
+    under_ref[0, :] = u
 
 
 def rans_decode_step(buf: jax.Array,    # (cap, lanes) uint8, lane-minor
@@ -552,7 +569,8 @@ def rans_decode_step(buf: jax.Array,    # (cap, lanes) uint8, lane-minor
     Tables are this step's rows: ``(K,)`` shared or ``(lanes, K)`` per-lane
     (``cdf`` with trailing ``K+1``); ``candidates`` an optional
     ``(lanes, topk)`` row of trial symbols.  Returns
-    ``(s', ptr', symbols (lanes,), probes (lanes,))``.  Designed to be
+    ``(s', ptr', symbols (lanes,), probes (lanes,), under (lanes,))`` —
+    ``under`` counts refills that read past the stream end.  Designed to be
     traced inside a ``lax.scan`` (interpret mode inlines the kernel into the
     surrounding XLA program), with the initial ``(s, ptr)`` coming from
     ``core.coder.decoder_init`` and ``buf`` transposed once outside the scan.
@@ -576,7 +594,7 @@ def rans_decode_step(buf: jax.Array,    # (cap, lanes) uint8, lane-minor
         extra_specs.append(tbl_block(candidates.shape))
     freq_in = freq if lane_tables else freq.reshape(1, k)
     cdf_in = cdf if lane_tables else cdf.reshape(1, k + 1)
-    s2, ptr2, sym, probes = pl.pallas_call(
+    s2, ptr2, sym, probes, under = pl.pallas_call(
         functools.partial(_decode_step_kernel, prob_bits=prob_bits, k=k,
                           lane_tables=lane_tables, has_cands=has_cands),
         grid=(1,),
@@ -587,9 +605,10 @@ def rans_decode_step(buf: jax.Array,    # (cap, lanes) uint8, lane-minor
             tbl_block(freq_in.shape),
             tbl_block(cdf_in.shape),
         ] + extra_specs,
-        out_specs=[tbl_block((1, lanes))] * 4,
+        out_specs=[tbl_block((1, lanes))] * 5,
         out_shape=[
             jax.ShapeDtypeStruct((1, lanes), _U32),
+            jax.ShapeDtypeStruct((1, lanes), _I32),
             jax.ShapeDtypeStruct((1, lanes), _I32),
             jax.ShapeDtypeStruct((1, lanes), _I32),
             jax.ShapeDtypeStruct((1, lanes), _I32),
@@ -597,4 +616,4 @@ def rans_decode_step(buf: jax.Array,    # (cap, lanes) uint8, lane-minor
         interpret=interpret,
     )(buf, s.reshape(1, lanes), ptr.astype(_I32).reshape(1, lanes),
       freq_in, cdf_in, *extra_in)
-    return s2[0], ptr2[0], sym[0], probes[0]
+    return s2[0], ptr2[0], sym[0], probes[0], under[0]

@@ -269,22 +269,30 @@ def decode_chunked(chunks: ChunkedLanes | ContainerSlab, n_symbols: int,
     per_position = coder.is_per_position(tbl, n_symbols)
     sub = jax.tree.map(lambda a: a[:n_full], chunks)
     n_loc = n_full // mesh.shape["chunks"]
-    out_specs = (P("chunks"), P("chunks"))
+    out_specs = (P("chunks"), P("chunks"), P("chunks"))
 
-    def _decode_one(enc, tb, n=chunk_size, cand=None):
+    def _decode_one(enc, tb, n=chunk_size, cand=None, flags=False):
+        """One chunk decode.  ``flags=True`` threads the per-lane stream
+        exhaustion flag out instead of raising — required inside traced
+        shard_map/vmap bodies, where the host-level
+        ``StreamExhaustedError`` cannot fire (checked after the mesh
+        program returns)."""
         if backend == "kernel":
             return kops.rans_decode(enc, n, tb, prob_bits=prob_bits,
                                     predictor=predictor, candidates=cand,
-                                    interpret=interpret)
+                                    interpret=interpret,
+                                    exhausted_flags=flags)
         return coder.decode(enc, n, tb, prob_bits,
                             predictor=predictor, use_lut=use_lut,
-                            candidates=cand)
+                            candidates=cand, return_exhausted=flags)
 
     def _slab_decode(enc_loc, tbl_loc, chunk_major: bool, cand_loc=None):
         """Decode the local (n_loc, lanes, cap) chunk slab.  ``tbl_loc`` is
         chunk-major ``(n_loc, chunk_size, ...)`` when ``chunk_major`` else a
         replicated static/shared TableSet; ``cand_loc`` is the local
-        chunk-major ``(n_loc, chunk_size, lanes, topk)`` candidate slab."""
+        chunk-major ``(n_loc, chunk_size, lanes, topk)`` candidate slab.
+        Returns ``(sym3, per_chunk_probes, under)`` with ``under`` the
+        per-(chunk, lane) exhaustion flags."""
         if backend == "kernel":
             # one pallas_call for the whole local slab: the kernel's chunk
             # grid axis decodes every local chunk in a single launch (the
@@ -296,31 +304,33 @@ def decode_chunked(chunks: ChunkedLanes | ContainerSlab, n_symbols: int,
             cand_flat = (cand_loc.reshape((n_loc * chunk_size,)
                                           + cand_loc.shape[2:])
                          if cand_loc is not None else None)
-            sym, _, cpro = kops.rans_decode_chunked(
+            sym, _, cpro, cund = kops.rans_decode_chunked(
                 enc_loc, n_loc * chunk_size, tbl_flat, chunk_size,
                 prob_bits=prob_bits, predictor=predictor,
                 candidates=cand_flat, interpret=interpret,
-                chunk_probes=True)
+                chunk_probes=True, exhausted_flags=True)
             sym3 = sym.reshape(lanes, n_loc, chunk_size).swapaxes(0, 1)
             per_chunk = (jnp.sum(cpro.astype(jnp.float32), axis=1)
                          / (lanes * chunk_size))
-            return sym3, per_chunk
+            return sym3, per_chunk, cund
         # coder path: batch the local chunk slab through one vmapped scan
         if chunk_major:
             if cand_loc is not None:
                 return jax.vmap(
                     lambda e, tb, cd: _decode_one(
-                        EncodedLanes(*e), TableSet(*tb), cand=cd))(
-                    enc_loc, tbl_loc, cand_loc)
+                        EncodedLanes(*e), TableSet(*tb), cand=cd,
+                        flags=True))(enc_loc, tbl_loc, cand_loc)
             return jax.vmap(
-                lambda e, tb: _decode_one(EncodedLanes(*e), TableSet(*tb)))(
-                enc_loc, tbl_loc)
+                lambda e, tb: _decode_one(EncodedLanes(*e), TableSet(*tb),
+                                          flags=True))(enc_loc, tbl_loc)
         if cand_loc is not None:
             return jax.vmap(
                 lambda e, cd: _decode_one(EncodedLanes(*e), tbl_loc,
-                                          cand=cd))(enc_loc, cand_loc)
+                                          cand=cd, flags=True))(
+                enc_loc, cand_loc)
         return jax.vmap(
-            lambda e: _decode_one(EncodedLanes(*e), tbl_loc))(enc_loc)
+            lambda e: _decode_one(EncodedLanes(*e), tbl_loc, flags=True))(
+            enc_loc)
 
     # the candidate rows of the full-size chunks, chunk-major, sharded on
     # the same "chunks" axis as the stream slab
@@ -339,7 +349,7 @@ def decode_chunked(chunks: ChunkedLanes | ContainerSlab, n_symbols: int,
             return _slab_decode(ChunkedLanes(*enc_loc), TableSet(*tbl_loc),
                                 True, cand[0] if cand else None)
 
-        sym_full, probes_full = shard_map(
+        sym_full, probes_full, under_full = shard_map(
             body, mesh=mesh,
             in_specs=(jax.tree.map(lambda _: P("chunks"), sub),
                       _chunked_table_specs(tbl, sharded=True),
@@ -351,13 +361,14 @@ def decode_chunked(chunks: ChunkedLanes | ContainerSlab, n_symbols: int,
             return _slab_decode(ChunkedLanes(*enc_loc), TableSet(*tbl_rep),
                                 False, cand[0] if cand else None)
 
-        sym_full, probes_full = shard_map(
+        sym_full, probes_full, under_full = shard_map(
             body, mesh=mesh,
             in_specs=(jax.tree.map(lambda _: P("chunks"), sub),
                       _chunked_table_specs(tbl, sharded=False),
                       *extra_specs),
             out_specs=out_specs, check_rep=False)(sub, tbl, *extra_args)
 
+    coder._check_exhausted(under_full, "parallel.decode_chunked")
     lanes = sym_full.shape[1]
     syms = [sym_full.swapaxes(0, 1).reshape(lanes, n_full * chunk_size)]
     probe_sums = [jnp.sum(probes_full) * chunk_size]

@@ -179,9 +179,10 @@ def _lm_decompress_scan(params, cfg: ModelConfig, enc: coder.EncodedLanes,
         ys = (sym, probes) + ((tbl, cands) if collect_planes else ())
         return (cache, dec, sym[:, None].astype(jnp.int32)), ys
 
-    (_, _, _), ys = jax.lax.scan(
+    (_, dec_f, _), ys = jax.lax.scan(
         body, (cache, dec0, tok0), jnp.arange(n_symbols))
-    return ys     # (symbols (T, lanes), probes (T, lanes)[, tables, cands])
+    # (symbols (T, lanes), probes (T, lanes)[, tables, cands], underflow)
+    return ys + (dec_f.underflow,)
 
 
 def _fused_scan(params, cfg: ModelConfig, enc: coder.EncodedLanes,
@@ -205,18 +206,22 @@ def _fused_scan(params, cfg: ModelConfig, enc: coder.EncodedLanes,
     buf_t = enc.buf.T      # (cap, lanes): transposed ONCE, outside the scan
 
     def body(carry, t):
-        cache, s, ptr, tok = carry
+        cache, s, ptr, under, tok = carry
         lg, cache = decode_step(params, cache, tok, t, cfg)
         freq, cdf = _step_freq_cdf(lg, cfg.vocab_size, prob_bits)
         cands = model_topk_candidates(lg[:, :cfg.vocab_size], topk)
-        s, ptr, sym, probes = rans_decode_step(
+        s, ptr, sym, probes, u = rans_decode_step(
             buf_t, s, ptr, freq, cdf, prob_bits=prob_bits,
             candidates=cands, interpret=interpret)
-        return (cache, s, ptr, sym[:, None].astype(jnp.int32)), (sym, probes)
+        carry = (cache, s, ptr, under | (u > 0),
+                 sym[:, None].astype(jnp.int32))
+        return carry, (sym, probes)
 
-    (cache, _, _, tok), (sym, probes) = jax.lax.scan(
-        body, (cache, dec0.s, dec0.ptr, tok), t0 + jnp.arange(n))
-    return cache, tok, sym.T, probes   # sym (lanes, n), probes (n, lanes)
+    (cache, _, _, under, tok), (sym, probes) = jax.lax.scan(
+        body, (cache, dec0.s, dec0.ptr, dec0.underflow, tok),
+        t0 + jnp.arange(n))
+    # sym (lanes, n), probes (n, lanes), under (lanes,)
+    return cache, tok, sym.T, probes, under
 
 
 @functools.partial(jax.jit,
@@ -229,10 +234,10 @@ def _lm_decompress_fused(params, cfg: ModelConfig, enc: coder.EncodedLanes,
     lanes = enc.buf.shape[0]
     cache = init_cache(cfg, lanes, n_symbols)
     tok = jnp.full((lanes, 1), BOS, jnp.int32)
-    _, _, sym, probes = _fused_scan(params, cfg, enc, cache, tok,
-                                    jnp.int32(0), n_symbols, prob_bits,
-                                    topk, interpret)
-    return sym, probes
+    _, _, sym, probes, under = _fused_scan(params, cfg, enc, cache, tok,
+                                           jnp.int32(0), n_symbols,
+                                           prob_bits, topk, interpret)
+    return sym, probes, under
 
 
 def _lane_mesh_check(mesh, lanes: int) -> bool:
@@ -262,8 +267,9 @@ def _fused_on_lane_mesh(params, enc, mesh, local_fn):
     espec = jax.tree.map(lambda _: P(*([None] * lane_axis + ["lanes"])), enc)
     pspec = jax.tree.map(lambda _: P(), params)
     probes_spec = P("lanes") if enc.buf.ndim == 3 else P(None, "lanes")
+    # third output: the per-lane stream-exhaustion flag (lanes,)
     return shard_map(local_fn, mesh=mesh, in_specs=(pspec, espec),
-                     out_specs=(P("lanes"), probes_spec),
+                     out_specs=(P("lanes"), probes_spec, P("lanes")),
                      check_rep=False)(params, enc)
 
 
@@ -299,8 +305,9 @@ def lm_decompress(params, cfg: ModelConfig, enc: coder.EncodedLanes,
             "an independent (lane) axis to place — the coder and two-pass "
             "reference paths are single-device")
     if backend == "coder":
-        symbols, probes = _lm_decompress_scan(params, cfg, enc, n_symbols,
-                                              prob_bits, topk)
+        symbols, probes, under = _lm_decompress_scan(
+            params, cfg, enc, n_symbols, prob_bits, topk)
+        coder._check_exhausted(under, "lm_decompress")
         out = (symbols.T, jnp.mean(probes.astype(jnp.float32)))
         if lane_probes:
             out = out + (jnp.sum(probes, axis=0),)
@@ -310,10 +317,12 @@ def lm_decompress(params, cfg: ModelConfig, enc: coder.EncodedLanes,
             def local(params_l, enc_l):
                 return _lm_decompress_fused(params_l, cfg, enc_l, n_symbols,
                                             prob_bits, topk, interpret)
-            sym, probes = _fused_on_lane_mesh(params, enc, mesh, local)
+            sym, probes, under = _fused_on_lane_mesh(params, enc, mesh,
+                                                     local)
         else:
-            sym, probes = _lm_decompress_fused(params, cfg, enc, n_symbols,
-                                               prob_bits, topk, interpret)
+            sym, probes, under = _lm_decompress_fused(
+                params, cfg, enc, n_symbols, prob_bits, topk, interpret)
+        coder._check_exhausted(under, "lm_decompress")
         out = (sym, jnp.mean(probes.astype(jnp.float32)))
         if lane_probes:
             out = out + (jnp.sum(probes, axis=0),)
@@ -321,9 +330,11 @@ def lm_decompress(params, cfg: ModelConfig, enc: coder.EncodedLanes,
     if backend != "two_pass":
         raise ValueError(f"unknown decode backend {backend!r}")
     from repro.kernels.ops import rans_decode
-    _, _, tables, cands = _lm_decompress_scan(params, cfg, enc, n_symbols,
-                                              prob_bits, topk,
-                                              collect_planes=True)
+    # pass-1 flags are discarded: pass 2 (the kernel replay) re-detects
+    # exhaustion on the authoritative stream walk and raises host-side
+    _, _, tables, cands, _ = _lm_decompress_scan(params, cfg, enc,
+                                                 n_symbols, prob_bits, topk,
+                                                 collect_planes=True)
     sym, avg, per_lane = rans_decode(enc, n_symbols, tables,
                                      prob_bits=prob_bits, candidates=cands,
                                      interpret=interpret, lane_probes=True)
@@ -401,10 +412,10 @@ def _lm_decompress_chunk(params, cfg: ModelConfig, enc: coder.EncodedLanes,
         ys = (sym, probes) + ((tbl, cands) if collect_planes else ())
         return (cache, dec, sym[:, None].astype(jnp.int32)), ys
 
-    (cache, _, tok), ys = jax.lax.scan(
+    (cache, dec_f, tok), ys = jax.lax.scan(
         body, (cache, dec0, tok), t0 + jnp.arange(n))
     symbols, probes = ys[0], ys[1]
-    out = (cache, tok, symbols.T, jnp.sum(probes, axis=0))
+    out = (cache, tok, symbols.T, jnp.sum(probes, axis=0), dec_f.underflow)
     if collect_planes:
         out = out + (ys[2], ys[3])
     return out
@@ -444,15 +455,17 @@ def _fused_chunked_local(params, cfg: ModelConfig,
     cache = init_cache(cfg, lanes, n_symbols)
     tok = jnp.full((lanes, 1), BOS, jnp.int32)
     outs, lane_sum = [], jnp.zeros((lanes,), jnp.int32)
+    under = jnp.zeros((lanes,), bool)
     for c, n in enumerate(coder.chunk_lengths(n_symbols, chunk_size)):
         enc = (bitstream.chunk_encoded_from_slab(chunks, c) if slab_in
                else coder.chunk_encoded(chunks, c))
-        cache, tok, sym, probes = _lm_decompress_fused_chunk(
+        cache, tok, sym, probes, und = _lm_decompress_fused_chunk(
             params, cfg, enc, cache, tok, jnp.int32(c * chunk_size), n=n,
             prob_bits=prob_bits, topk=topk, interpret=interpret)
         outs.append(sym)
         lane_sum = lane_sum + jnp.sum(probes, axis=0)
-    return jnp.concatenate(outs, axis=1), lane_sum
+        under = under | und
+    return jnp.concatenate(outs, axis=1), lane_sum, under
 
 
 def lm_decompress_chunked(params, cfg: ModelConfig,
@@ -536,11 +549,13 @@ def lm_decompress_chunked(params, cfg: ModelConfig,
                 return _fused_chunked_local(params_l, cfg, chunks_l,
                                             n_symbols, chunk_size,
                                             prob_bits, topk, interpret)
-            sym, lane_sum = _fused_on_lane_mesh(params, chunks, mesh, local)
+            sym, lane_sum, under = _fused_on_lane_mesh(params, chunks, mesh,
+                                                       local)
         else:
-            sym, lane_sum = _fused_chunked_local(
+            sym, lane_sum, under = _fused_chunked_local(
                 params, cfg, chunks, n_symbols, chunk_size, prob_bits,
                 topk, interpret)
+        coder._check_exhausted(under, "lm_decompress_chunked")
         out = (sym, jnp.sum(lane_sum.astype(jnp.float32))
                / (lanes * n_symbols))
         if lane_probes:
@@ -550,21 +565,24 @@ def lm_decompress_chunked(params, cfg: ModelConfig,
     cache = init_cache(cfg, lanes, n_symbols)
     tok = jnp.full((lanes, 1), BOS, jnp.int32)
     outs, lane_sum, planes = [], jnp.zeros((lanes,), jnp.int32), []
+    under = jnp.zeros((lanes,), bool)
     for c, n in enumerate(coder.chunk_lengths(n_symbols, chunk_size)):
         enc = (bitstream.chunk_encoded_from_slab(chunks, c) if slab_in
                else coder.chunk_encoded(chunks, c))
         res = _lm_decompress_chunk(
             params, cfg, enc, cache, tok, jnp.int32(c * chunk_size), n=n,
             prob_bits=prob_bits, topk=topk, collect_planes=collect)
-        cache, tok, sym, probes = res[:4]
+        cache, tok, sym, probes, und = res[:5]
         if collect:
             # two-pass probe purity: pass-1 counters are NEVER accumulated —
             # the reported Fig. 4(b) accounting comes from the kernel pass
-            # only (and pass-1 symbols are likewise discarded)
-            planes.append(res[4:])
+            # only (and pass-1 symbols, exhaustion flags are likewise
+            # discarded — pass 2 re-detects and raises)
+            planes.append(res[5:])
         else:
             outs.append(sym)
             lane_sum = lane_sum + probes
+            under = under | und
     if collect:
         tables = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0),
                               *[p[0] for p in planes])
@@ -593,6 +611,7 @@ def lm_decompress_chunked(params, cfg: ModelConfig,
         if lane_probes:
             return sym, avg, per_lane
         return sym, avg
+    coder._check_exhausted(under, "lm_decompress_chunked")
     out = (jnp.concatenate(outs, axis=1),
            jnp.sum(lane_sum.astype(jnp.float32)) / (lanes * n_symbols))
     if lane_probes:

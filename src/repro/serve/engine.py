@@ -244,19 +244,20 @@ def _chunk_body(params, cache, tok, fresh, pos0, mode, n_valid, tf, buf,
         lg, cache = decode_step(params, cache, tok, pos, cfg)
         tbl = step_tables(lg, cfg.vocab_size, prob_bits)
         cands = model_topk_candidates(lg[:, :cfg.vocab_size], topk)
-        s2, p2, sym, probes = rans_decode_step_rows(
+        s2, p2, sym, probes, u = rans_decode_step_rows(
             buf_t, s, ptr, tbl, prob_bits=prob_bits, candidates=cands,
             backend=backend, interpret=interpret)
         s = jnp.where(active, s2, s)
         ptr = jnp.where(active, p2, ptr)
+        und = (active & (u > 0)).astype(jnp.int32)
         nxt = jnp.where(mode == MODE_COMPRESS, tf[:, t],
                         sym.astype(jnp.int32))
         tok = jnp.where(active[:, None], nxt[:, None], tok)
-        return (cache, s, ptr, tok), (tbl, sym, probes)
+        return (cache, s, ptr, tok), (tbl, sym, probes, und)
 
-    (cache, _, _, tok), (tables, syms, probes) = jax.lax.scan(
+    (cache, _, _, tok), (tables, syms, probes, unders) = jax.lax.scan(
         body, (cache, dec0.s, dec0.ptr, tok), jnp.arange(chunk_size))
-    return cache, tok, tables, syms, probes
+    return cache, tok, tables, syms, probes, unders
 
 
 def _prefill_body(params, cache, tok, fresh, pos0, mode, n_valid, tf, buf,
@@ -292,7 +293,7 @@ def _prefill_body(params, cache, tok, fresh, pos0, mode, n_valid, tf, buf,
     last = jnp.take_along_axis(tf, idx[:, None], axis=1)
     tok = jnp.where((n_valid > 0)[:, None], last, tok)
     zeros = jnp.zeros((chunk_size, tok.shape[0]), jnp.int32)
-    return cache, tok, tables, zeros, zeros
+    return cache, tok, tables, zeros, zeros, zeros
 
 
 @functools.partial(jax.jit, static_argnames=("cap",))
@@ -421,7 +422,7 @@ class BatchEngine:
             in_specs=(pspec, carry, rows2, rows, rows, rows, rows,
                       rows2, rows2, rows),
             out_specs=(carry, rows2, P(None, "lanes"), P(None, "lanes"),
-                       P(None, "lanes")),
+                       P(None, "lanes"), P(None, "lanes")),
             check_rep=False)
         return jax.jit(core)
 
@@ -594,10 +595,10 @@ class BatchEngine:
         if prefillable:
             prog = self._prog_prefill
             self.prefill_cycles += 1
-        self._cache, self._tok, tables, syms, probes = prog(
+        self._cache, self._tok, tables, syms, probes, unders = prog(
             self.params, self._cache, self._tok, fresh, pos0, mode,
             n_valid, tf, buf, start)
-        return spec, tables, syms, probes
+        return spec, tables, syms, probes, unders
 
     def _finalize(self, inflight, now: float, results: dict):
         """Harvest a finished cycle: encode/pack/collect per-slot outputs.
@@ -609,7 +610,7 @@ class BatchEngine:
         request is discarded at its own finalize, and no other row is
         touched.
         """
-        spec, tables, syms, probes = inflight
+        spec, tables, syms, probes, unders = inflight
         for rid, s, c, n_c, last in spec:
             req = self._slots[s]
             if req is None or req.rid != rid or rid in results:
@@ -632,6 +633,16 @@ class BatchEngine:
                     continue
                 req.enc_chunks.append(enc)
             else:
+                und = np.asarray(unders[:n_c, r0:r1])
+                if und.any():
+                    cells = np.nonzero(und.any(axis=0))[0].tolist()
+                    self._retire(req, now, results,
+                                 error=coder.StreamExhaustedError(
+                        f"request {rid}: decode over-read in chunk {c} "
+                        f"(lanes {cells}): a lane's stream ran out of "
+                        "bytes mid-decode — the container is truncated "
+                        "or was produced with a different geometry"))
+                    continue
                 req.out_syms.append(
                     np.asarray(syms[:n_c, r0:r1]).T.astype(np.int32))
                 req.probes += int(np.asarray(probes[:n_c, r0:r1]).sum())

@@ -37,6 +37,22 @@ CASES = [
 ]
 
 
+# stack golden vectors (core/stack.py): frozen flushed-stack streams for
+# the push/pop interface — uniform, NonUniform statfun, serial-composed,
+# and a bits-back schedule drawing on nonzero initial bits.  The test pops
+# every stored stream back on BOTH backends (coder + per-step kernel).
+STACK_CASES = [
+    dict(name="stack_uniform", seed=51, lanes=4, cap=256, bits=6, t=24,
+         init_bytes=0),
+    dict(name="stack_nonuniform", seed=52, lanes=4, cap=256, k=16, t=24,
+         init_bytes=0),
+    dict(name="stack_serial", seed=53, lanes=4, cap=256, k=16, t=10,
+         init_bytes=0),
+    dict(name="stack_bitsback", seed=54, lanes=4, cap=256, k=16, kx=32,
+         t=12, init_bytes=48),
+]
+
+
 def blob_path(case: dict) -> str:
     return os.path.join(HERE, case["name"] + ".ras")
 
@@ -73,11 +89,153 @@ def pack_case(case: dict) -> bytes:
                                   checksums=case["checksums"])
 
 
+def _dirichlet_tables(rng, k: int, lanes: int | None = None):
+    """Seeded quantized (freq, cdf) planes via the BF16 storage path."""
+    import jax.numpy as jnp
+    from repro.core import spc
+    probs = rng.dirichlet(np.full(k, 0.5),
+                          size=None if lanes is None else (lanes,))
+    return spc.freq_cdf_from_probs(
+        spc.store_bf16(jnp.asarray(probs, jnp.float32)))
+
+
+def _nonuniform_codec(freq, cdf):
+    """A genuinely statfun-driven codec (craystack's ``NonUniform``) over
+    frozen quantized planes — NOT ``Categorical``, so the statfun entry
+    point itself is pinned by the golden bytes."""
+    from repro.core import search, stack
+    k = freq.shape[-1]
+
+    def enc_statfun(x):
+        return stack._gather(cdf[..., :-1], x), stack._gather(freq, x)
+
+    def dec_statfun(slot):
+        return search.find_symbol(cdf, k, slot)[0]
+
+    return stack.NonUniform(enc_statfun, dec_statfun)
+
+
+def run_stack_case(case: dict, backend: str = "coder"):
+    """Deterministically run a stack case's push schedule.
+
+    Returns ``(st0, st, aux)``: initial stack, pushed stack, and an aux
+    dict with the symbols + table planes the pop schedule needs.  The
+    ``backend`` selects how encode-time *pops* run (bits-back case only) —
+    both must land on identical bytes.
+    """
+    import jax.numpy as jnp
+    from repro.core import stack
+    rng = np.random.default_rng(case["seed"])
+    lanes, cap, t = case["lanes"], case["cap"], case["t"]
+    st0 = (stack.stack_init_bits(lanes, cap, n_bytes=case["init_bytes"],
+                                 seed=case["seed"])
+           if case["init_bytes"] else stack.stack_init(lanes, cap))
+    st = st0
+    if case["name"] == "stack_uniform":
+        x = rng.integers(0, 1 << case["bits"], (lanes, t)).astype(np.int32)
+        codec = stack.Uniform(case["bits"])
+        for i in reversed(range(t)):     # LIFO: push reversed, pop forward
+            st = codec.push(st, jnp.asarray(x[:, i]))
+        return st0, st, {"x": x}
+    if case["name"] == "stack_nonuniform":
+        freq, cdf = _dirichlet_tables(rng, case["k"])
+        x = rng.integers(0, case["k"], (lanes, t)).astype(np.int32)
+        codec = _nonuniform_codec(freq, cdf)
+        for i in reversed(range(t)):
+            st = codec.push(st, jnp.asarray(x[:, i]))
+        return st0, st, {"x": x, "freq": freq, "cdf": cdf}
+    if case["name"] == "stack_serial":
+        freq, cdf = _dirichlet_tables(rng, case["k"])
+        xa = rng.integers(0, 1 << 4, (lanes, t)).astype(np.int32)
+        xb = rng.integers(0, case["k"], (lanes, t)).astype(np.int32)
+        xc = rng.integers(0, 1 << 6, (lanes, t)).astype(np.int32)
+        codec = stack.serial([stack.Uniform(4),
+                              stack.Categorical(freq, cdf),
+                              stack.Uniform(6)])
+        for i in reversed(range(t)):
+            st = codec.push(st, tuple(jnp.asarray(v[:, i])
+                                      for v in (xa, xb, xc)))
+        return st0, st, {"x": (xa, xb, xc), "freq": freq, "cdf": cdf}
+    # stack_bitsback: per step pop k ~ q (posterior, per-lane tables,
+    # drawing on the initial bits), push x ~ p, push k ~ Uniform prior
+    qf, qc = _dirichlet_tables(rng, case["k"], lanes=lanes)
+    pf, pc = _dirichlet_tables(rng, case["kx"])
+    x = rng.integers(0, case["kx"], (lanes, t)).astype(np.int32)
+    bits = int(np.log2(case["k"]))
+    q = stack.Categorical(qf, qc, backend=backend)
+    p = stack.Categorical(pf, pc, backend=backend)
+    u = stack.Uniform(bits)
+    ks = []
+    for i in range(t):
+        st, k_i = q.pop(st)
+        ks.append(np.asarray(k_i))
+        st = p.push(st, jnp.asarray(x[:, i]))
+        st = u.push(st, k_i)
+    assert not np.asarray(st.underflow).any(), "bits-back case under-seeded"
+    return st0, st, {"x": x, "k": np.stack(ks, axis=1), "bits": bits,
+                     "tables": (qf, qc, pf, pc)}
+
+
+def pop_stack_case(case: dict, st, aux, backend: str = "coder"):
+    """Run the matching pop schedule; returns ``(state, symbols)`` with
+    symbols shaped like the aux record (the test compares them exactly)."""
+    import jax.numpy as jnp
+    from repro.core import stack
+    t = case["t"]
+    if case["name"] == "stack_uniform":
+        codec = stack.Uniform(case["bits"])
+    elif case["name"] == "stack_nonuniform":
+        codec = (stack.Categorical(aux["freq"], aux["cdf"], backend="kernel")
+                 if backend == "kernel"
+                 else _nonuniform_codec(aux["freq"], aux["cdf"]))
+    elif case["name"] == "stack_serial":
+        codec = stack.serial([stack.Uniform(4),
+                              stack.Categorical(aux["freq"], aux["cdf"],
+                                                backend=backend),
+                              stack.Uniform(6)])
+    else:  # stack_bitsback: exact reverse schedule restores the initial bits
+        qf, qc, pf, pc = aux["tables"]
+        q = stack.Categorical(qf, qc, backend=backend)
+        p = stack.Categorical(pf, pc, backend=backend)
+        u = stack.Uniform(aux["bits"])
+        xs, ks = [], []
+        for i in reversed(range(t)):
+            st, k_i = u.pop(st)
+            st, x_i = p.pop(st)
+            st = q.push(st, k_i)
+            xs.append(np.asarray(x_i))
+            ks.append(np.asarray(k_i))
+        return st, {"x": np.stack(xs[::-1], axis=1),
+                    "k": np.stack(ks[::-1], axis=1)}
+    xs = []
+    for _ in range(t):
+        st, x_i = codec.pop(st)
+        xs.append(x_i)
+    if case["name"] == "stack_serial":
+        return st, tuple(np.stack([np.asarray(x[j]) for x in xs], axis=1)
+                         for j in range(3))
+    return st, np.stack([np.asarray(x) for x in xs], axis=1)
+
+
+def pack_stack_case(case: dict) -> bytes:
+    """Push schedule -> flushed stack -> v1 container bytes (the frozen
+    wire artifact; ``stack_flush`` output is EncodedLanes-compatible)."""
+    from repro.core import bitstream, stack
+    _, st, _ = run_stack_case(case)
+    enc = stack.stack_flush(st)
+    return bitstream.pack(*map(np.asarray, enc), n_symbols=case["t"])
+
+
 def main():
     import jax
     jax.config.update("jax_platforms", "cpu")
     for case in CASES:
         blob = pack_case(case)
+        with open(blob_path(case), "wb") as f:
+            f.write(blob)
+        print(f"wrote {blob_path(case)} ({len(blob)} bytes)")
+    for case in STACK_CASES:
+        blob = pack_stack_case(case)
         with open(blob_path(case), "wb") as f:
             f.write(blob)
         print(f"wrote {blob_path(case)} ({len(blob)} bytes)")

@@ -272,10 +272,15 @@ def test_kernel_front_door_flip_fuzz(corpus, name):
 def test_kernel_span_clamp_never_reads_out_of_slab(corpus):
     """Defense in depth behind ``parse_chunked``: a ContainerSlab whose
     index was poisoned AFTER validation (offsets past the payload end,
-    lengths past the window) must still decode without any exception —
-    the host-side base clip plus the in-kernel span clamp turn every
-    hostile (offset, length) into in-bounds reads of zero-padded windows,
-    never an OOB access (which interpret mode would raise on)."""
+    lengths past the window) must still decode without an OOB access
+    (which interpret mode would raise on) — the host-side base clip plus
+    the in-kernel span clamp turn every hostile (offset, length) into
+    in-bounds reads of zero-padded windows.  Since the over-read bugfix
+    the hostile windows are also *detectable*: the zero-injected refills
+    raise the per-lane underflow counters, surfaced via
+    ``exhausted_flags=True`` (the host entry would raise the named
+    ``StreamExhaustedError`` instead of returning garbage)."""
+    from repro.core.coder import StreamExhaustedError
     from repro.kernels import ops
     cs = bitstream.parse_chunked(corpus["blobs"]["v2_nocrc"])
     tbl, t, chunk = corpus["tbl"], corpus["t"], corpus["chunk"]
@@ -290,6 +295,12 @@ def test_kernel_span_clamp_never_reads_out_of_slab(corpus):
             length=np.full_like(cs.length, cs.cap + 3)),
     }
     for name, bad in poisons.items():
-        sym, _ = ops.rans_decode_chunked(
-            n_symbols=t, tbl=tbl, chunk_size=chunk, from_container=bad)
+        sym, _, under = ops.rans_decode_chunked(
+            n_symbols=t, tbl=tbl, chunk_size=chunk, from_container=bad,
+            exhausted_flags=True)
         assert np.asarray(sym).shape == corpus["syms"].shape, name
+    # the fully-hostile offsets are not just clamped but FLAGGED — and the
+    # raising host entry turns them into the named error
+    with pytest.raises(StreamExhaustedError):
+        ops.rans_decode_chunked(n_symbols=t, tbl=tbl, chunk_size=chunk,
+                                from_container=poisons["offset_past_end"])

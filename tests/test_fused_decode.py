@@ -59,8 +59,8 @@ def _step_decode_stream(enc, t, tbl, t0=0, prob_bits=C.PROB_BITS):
     def body(carry, xs):
         s, ptr = carry
         f, c = xs
-        s, ptr, sym, p = rans_decode_step(buf_t, s, ptr, f, c,
-                                          prob_bits=prob_bits)
+        s, ptr, sym, p, _ = rans_decode_step(buf_t, s, ptr, f, c,
+                                             prob_bits=prob_bits)
         return (s, ptr), (sym, p)
 
     (_, _), (sym, probes) = jax.lax.scan(body, (dec.s, dec.ptr),

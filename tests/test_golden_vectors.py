@@ -119,6 +119,86 @@ def test_v1_blob_unpacks_through_chunked_reader():
 
 
 # ---------------------------------------------------------------------------
+# stack golden vectors (core/stack.py): frozen flushed-stack streams for
+# the push/pop interface — uniform, NonUniform statfun, serial-composed,
+# and a bits-back schedule with nonzero initial bits (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+_STACK_IDS = [c["name"] for c in golden.STACK_CASES]
+
+
+@pytest.mark.parametrize("case", golden.STACK_CASES, ids=_STACK_IDS)
+def test_stack_pack_is_byte_identical_to_golden(case):
+    """Re-running each push schedule through the live stack + stack_flush
+    reproduces the frozen container bytes bit-for-bit."""
+    assert golden.pack_stack_case(case) == _stored(case), (
+        f"{case['name']}: flushed stack bytes drifted from the golden "
+        "vector — the push path (barrett_planes/encode_step/_emit_backward) "
+        "no longer lands the same stream")
+
+
+def test_stack_bitsback_kernel_pops_same_bytes():
+    """The bits-back schedule's encode-time pops routed through the Pallas
+    per-step kernel must land the identical frozen bytes."""
+    case = next(c for c in golden.STACK_CASES
+                if c["name"] == "stack_bitsback")
+    from repro.core import bitstream, stack
+    _, st, _ = golden.run_stack_case(case, backend="kernel")
+    blob = bitstream.pack(*map(np.asarray, stack.stack_flush(st)),
+                          n_symbols=case["t"])
+    assert blob == _stored(case)
+
+
+@pytest.mark.parametrize("backend", ["coder", "kernel"])
+@pytest.mark.parametrize("case", golden.STACK_CASES, ids=_STACK_IDS)
+def test_stored_stack_blob_pops_on_every_backend(case, backend):
+    """``stack_open(unpack(stored bytes))`` -> the pop schedule recovers
+    the seeded symbols exactly, on the pure-JAX coder AND the Pallas
+    per-step kernel backend."""
+    from repro.core import stack
+    st0, st_ref, aux = golden.run_stack_case(case)
+    buf, start, meta = bitstream.unpack(_stored(case))
+    enc = coder.EncodedLanes(jnp.asarray(buf), jnp.asarray(start),
+                             jnp.asarray(buf.shape[1] - start))
+    st = stack.stack_open(enc)
+    assert not np.asarray(st.underflow).any()
+    np.testing.assert_array_equal(np.asarray(st.s), np.asarray(st_ref.s))
+    st, got = golden.pop_stack_case(case, st, aux, backend=backend)
+    if case["name"] == "stack_bitsback":
+        np.testing.assert_array_equal(got["x"], aux["x"])
+        np.testing.assert_array_equal(got["k"], aux["k"])
+        # the bits-back identity: the reverse schedule re-pushes the
+        # posterior bins, restoring the *initial* stack's state exactly
+        np.testing.assert_array_equal(np.asarray(st.s), np.asarray(st0.s))
+    elif case["name"] == "stack_serial":
+        for g, x in zip(got, aux["x"]):
+            np.testing.assert_array_equal(g, x)
+    else:
+        np.testing.assert_array_equal(got, aux["x"])
+    assert not np.asarray(st.underflow).any()
+
+
+def test_stack_overpop_of_stored_blob_flags_underflow():
+    """Popping past the end of a frozen stack stream must raise the
+    per-lane underflow flag — exhaustion is detectable, never silent."""
+    from repro.core import stack
+    case = next(c for c in golden.STACK_CASES
+                if c["name"] == "stack_uniform")
+    _, _, aux = golden.run_stack_case(case)
+    buf, start, _ = bitstream.unpack(_stored(case))
+    enc = coder.EncodedLanes(jnp.asarray(buf), jnp.asarray(start),
+                             jnp.asarray(buf.shape[1] - start))
+    st = stack.stack_open(enc)
+    codec = stack.Uniform(case["bits"])
+    for _ in range(case["t"]):
+        st, _x = codec.pop(st)
+    assert not np.asarray(st.underflow).any()
+    for _ in range(24):                    # drain well past the stream end
+        st, _x = codec.pop(st)
+    assert np.asarray(st.underflow).all()
+
+
+# ---------------------------------------------------------------------------
 # deliberate-mutation checks: the suite must fail loudly when perturbed
 # ---------------------------------------------------------------------------
 

@@ -393,6 +393,38 @@ def test_candidate_duplicate_of_truth_charges_once(rans_case):
     np.testing.assert_array_equal(np.asarray(probes), 1)
 
 
+def test_predictor_configs_are_type_distinct_static_keys():
+    """Predictor configs are static jit/trace-cache keys; bare-NamedTuple
+    equality made ``LastValue(8) == ZeroPredictor(8)`` and let a decode
+    traced with one serve the other's program (right symbols, wrong probe
+    accounting — the cross-backend differential above only caught it when
+    the two backends desynced).  The keys must be type-tagged."""
+    assert LastValue(delta=8) != ZeroPredictor(delta=8)
+    assert hash(LastValue(delta=8)) != hash(ZeroPredictor(delta=8))
+    assert NeighborAverage(2, 4) != (2, 4)
+    assert (2, 4) != NeighborAverage(2, 4)       # reflected op, tuple on LHS
+    assert LastValue(delta=8) == LastValue(delta=8)
+    assert hash(NeighborAverage(4, 8)) == hash(NeighborAverage(4, 8))
+
+
+def test_zero_after_lastvalue_trace_order_stays_exact(rans_case):
+    """The trace-order regression behind the key fix: LastValue first, then
+    ZeroPredictor at identical shapes in the same process — the second trace
+    must NOT reuse the first's program on either backend."""
+    tbl, syms = rans_case(70, k=64, lanes=8, t=64)
+    enc = coder.encode(jnp.asarray(syms), tbl)
+    probes = {}
+    for pred in (LastValue(delta=8), ZeroPredictor(delta=8)):
+        got = ops.rans_decode(enc, 64, tbl, predictor=pred, lane_probes=True)
+        want = ref.rans_decode_ref(enc, 64, tbl, predictor=pred,
+                                   lane_probes=True)
+        _assert_identical(got, want, syms)
+        probes[type(pred).__name__] = np.asarray(got[2])
+    # distinct programs: anchor-by-last and anchor-at-zero pay different
+    # probe bills on this stream (equal bills would mean a shared trace)
+    assert not np.array_equal(probes["LastValue"], probes["ZeroPredictor"])
+
+
 # ---------------------------------------------------------------------------
 # structural guard: no private search/predictor logic outside core/search.py
 # ---------------------------------------------------------------------------

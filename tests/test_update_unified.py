@@ -327,9 +327,16 @@ def test_overflow_flagged_and_truncated_not_wrapped(overflow_case):
     bb = np.asarray(big.buf)
     np.testing.assert_array_equal(np.asarray(small.buf),
                                   bb[:, bb.shape[1] - cap:])
-    # the non-overflowed lane still decodes
-    dec, _ = coder.decode(small, syms.shape[1], tbl)
+    # the non-overflowed lane still decodes clean and unflagged; a
+    # truncated lane that over-reads its window is detected (post-sweep:
+    # the plain entry raises, the flags form isolates it per lane)
+    dec, _, under = coder.decode(small, syms.shape[1], tbl,
+                                 return_exhausted=True)
     np.testing.assert_array_equal(np.asarray(dec)[0], np.asarray(syms)[0])
+    under = np.asarray(under)
+    assert not under[0] and under.any()
+    with pytest.raises(coder.StreamExhaustedError):
+        coder.decode(small, syms.shape[1], tbl)
 
 
 def test_overflow_identical_across_encode_paths(overflow_case):
