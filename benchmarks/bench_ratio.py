@@ -12,6 +12,14 @@ neural rung ships through the production path — kernel-backed chunked
 encode packed into the v2 streaming container — and the bench asserts the
 kernel and pure-coder backends produce *byte-identical* containers before
 reporting a ratio.  CR = original bytes / compressed bytes (higher better).
+
+``_zoo_frontier`` extends the neural rung across architecture families
+(dense KV-ring / Mamba2 recurrent / RecurrentGemma hybrid — the
+model-state protocol makes the serve stack generator-agnostic): one
+ratio-vs-throughput point per family through the identical chunked
+container + fused-kernel-decode path, each sealed byte-identical across
+backends and bit-exact on the round trip.  Gated in CI by
+``benchmarks.check_artifacts``.
 """
 
 from __future__ import annotations
@@ -31,16 +39,23 @@ except ImportError:  # pragma: no cover
 
 from repro.core import bitstream
 from repro.data.pipeline import synthetic_image
-from repro.serve.compress import histogram_compress, lm_compress_chunked
+from repro.serve.compress import (histogram_compress, lm_compress_chunked,
+                                  lm_decompress_chunked)
 
 
-def _train_pimc(rows: np.ndarray, steps: int = 120):
-    """Briefly train the paper's compact probability model on image rows."""
+def _train_arch(arch: str, rows: np.ndarray, steps: int = 120):
+    """Briefly train a registry arch's smoke config on image rows.
+
+    Any ``ARCH_IDS`` entry works — the model-state protocol makes the
+    serve stack generator-agnostic, so the bench trains and ships each
+    family through the identical datapath (image bytes fit every smoke
+    vocab: all are >= 256).
+    """
     from repro.configs import get_smoke_config
     from repro.models import init_model
     from repro.train.train_loop import init_train_state, make_train_step
 
-    cfg = get_smoke_config("ras-pimc").with_(grad_accum=1)
+    cfg = get_smoke_config(arch).with_(grad_accum=1)
     params = init_model(cfg, jax.random.PRNGKey(0))
     state = init_train_state(params)
     step = jax.jit(make_train_step(cfg, base_lr=3e-3))
@@ -120,7 +135,7 @@ def run(h: int = 128, w: int = 256, seed: int = 0, chunk_size: int = 512):
     out["rANS-static-histogram"] = len(raw) / bitstream.compressed_size(
         np.asarray(enc.length))
 
-    cfg, params, loss = _train_pimc(rows)
+    cfg, params, loss = _train_arch("ras-pimc", rows)
     toks = jnp.asarray(rows, jnp.int32)
     stats = lm_compress_chunked(params, cfg, toks, chunk_size,
                                 backend="kernel")
@@ -138,7 +153,87 @@ def run(h: int = 128, w: int = 256, seed: int = 0, chunk_size: int = 512):
     out["rANS-bitsback-latent(vae)"] = len(raw) / net
     out["_vae_elbo_bits_per_pixel"] = lat_loss / np.log(2) / 64
     out["_latent_backends_byte_identical"] = lat_identical
+
+    out["_zoo_frontier"] = _zoo_frontier(
+        img, pimc=(cfg, params, float(loss)))
     return out
+
+
+def _zoo_frontier(img: np.ndarray, pimc) -> list[dict]:
+    """Ratio-vs-throughput frontier across architecture families.
+
+    One point per ``configs.SERVE_SMOKE_ARCHS`` entry — dense attention
+    (ras-pimc, pure KV ring), Mamba2 (pure recurrent ``(h, conv)``), and
+    RecurrentGemma (ring + recurrent hybrid) — every family through the
+    IDENTICAL production path: briefly trained smoke model, kernel-backed
+    chunked encode into the v2 container, and the FUSED kernel decode
+    (`lm_decompress_chunked(backend="kernel")`) carrying the state pytree
+    across chunk boundaries.  Each point seals (a) kernel/coder container
+    byte-identity and (b) decode round-trip bit-exactness before any
+    number ships; throughput is compiled-wall-clock symbols/sec over the
+    post-warmup run (interpret-mode Pallas on CPU — relative frontier
+    shape, not absolute hardware numbers).
+    """
+    import time
+
+    from repro.configs import SERVE_SMOKE_ARCHS, get_smoke_config
+    from repro.models import state_spec
+
+    lanes, t_len, csize = 16, 256, 128
+    rows = img.reshape(lanes, -1)[:, :t_len].astype(np.int64)
+    toks = jnp.asarray(rows, jnp.int32)
+    raw_bytes = rows.size  # one byte per symbol
+    points = []
+    for arch in SERVE_SMOKE_ARCHS:
+        if arch == "ras-pimc":
+            cfg, params, loss = pimc
+        else:
+            cfg, params, loss = _train_arch(arch, rows, steps=60)
+        spec = state_spec(cfg)
+
+        def compress():
+            return lm_compress_chunked(params, cfg, toks, csize,
+                                       backend="kernel")
+
+        stats = compress()                              # compile + warm
+        jax.block_until_ready(stats.chunks.buf)
+        t0 = time.perf_counter()
+        stats = compress()
+        jax.block_until_ready(stats.chunks.buf)
+        t_enc = time.perf_counter() - t0
+        blob = _pack_v2(stats)
+        ref = _pack_v2(lm_compress_chunked(params, cfg, toks, csize,
+                                           backend="coder"))
+        identical = blob == ref
+        slab = bitstream.parse_chunked(blob)
+
+        def decompress():
+            return lm_decompress_chunked(params, cfg, slab, t_len, csize,
+                                         backend="kernel")
+
+        dec, _ = decompress()                           # compile + warm
+        jax.block_until_ready(dec)
+        t0 = time.perf_counter()
+        dec, _ = decompress()
+        jax.block_until_ready(dec)
+        t_dec = time.perf_counter() - t0
+        exact = bool(np.array_equal(np.asarray(dec), rows))
+        assert identical, f"{arch}: kernel/coder containers diverge"
+        assert exact, f"{arch}: fused kernel round-trip not bit-exact"
+        points.append({
+            "arch": arch,
+            "family": cfg.family,
+            "state": ("ring+recurrent" if spec.ring and spec.recurrent
+                      else "recurrent" if spec.recurrent else "ring"),
+            "cr": raw_bytes / len(blob),
+            "bits_per_symbol": float(stats.bits_per_symbol),
+            "model_entropy_bits": loss / float(np.log(2)),
+            "encode_sym_s": rows.size / t_enc,
+            "decode_sym_s": rows.size / t_dec,
+            "backends_byte_identical": identical,
+            "roundtrip_bit_exact": exact,
+        })
+    return points
 
 
 def main(emit):
@@ -152,6 +247,11 @@ def main(emit):
          "1.0 = kernel and coder v2 containers byte-identical")
     emit("fig4c_pimc_model_entropy_bits", r["_pimc_train_loss_bits"],
          "bits/symbol after brief training")
+    for p in r["_zoo_frontier"]:
+        emit(f"zoo_CR_{p['arch']}", p["cr"],
+             f"{p['family']}/{p['state']} — higher is better")
+        emit(f"zoo_decode_sym_s_{p['arch']}", p["decode_sym_s"],
+             "fused kernel decode, interpret mode")
 
 
 if __name__ == "__main__":
@@ -165,4 +265,9 @@ if __name__ == "__main__":
         if not name.startswith("_"):
             print(f"{name}: CR={v:.3f}")
     print(f"backends byte-identical: {r['_backends_byte_identical']}")
+    for p in r["_zoo_frontier"]:
+        print(f"zoo {p['arch']} ({p['family']}/{p['state']}): "
+              f"CR={p['cr']:.3f} enc={p['encode_sym_s']:.0f} sym/s "
+              f"dec={p['decode_sym_s']:.0f} sym/s "
+              f"sealed={p['backends_byte_identical'] and p['roundtrip_bit_exact']}")
     print(f"wrote -> {args.out}")

@@ -29,7 +29,12 @@ Checked invariants:
 * BENCH_ratio.json — a dict of CR columns (not a point list): the rANS
   ladder must carry positive ratios including the bits-back latent column,
   and both byte-identity seals (chunked containers AND latent stack
-  evolution across coder/kernel pop backends) must be True.
+  evolution across coder/kernel pop backends) must be True.  The
+  ``_zoo_frontier`` list must span >= 3 distinct architecture families
+  (dense ring / ssm recurrent / hybrid), every point with positive CR and
+  encode/decode throughput and both per-point seals
+  (``backends_byte_identical``, ``roundtrip_bit_exact``) True — the
+  model-state protocol's whole-zoo guarantee, kept gated.
 """
 
 from __future__ import annotations
@@ -130,8 +135,26 @@ def check_ratio(path: str) -> str:
                  "_latent_backends_byte_identical"):
         if r.get(seal) is not True:
             _fail(path, f"byte-identity seal {seal!r} missing or False")
+    zoo = r.get("_zoo_frontier")
+    if not isinstance(zoo, list) or len(zoo) < 3:
+        _fail(path, "_zoo_frontier must carry >= 3 family points")
+    for p in zoo:
+        name = p.get("arch", "?")
+        if not (isinstance(p.get("cr"), float) and p["cr"] > 0):
+            _fail(path, f"zoo point {name}: missing or non-positive cr")
+        if not (p.get("encode_sym_s", 0) > 0 and p.get("decode_sym_s", 0) > 0):
+            _fail(path, f"zoo point {name}: non-positive throughput")
+        if p.get("backends_byte_identical") is not True \
+                or p.get("roundtrip_bit_exact") is not True:
+            _fail(path, f"zoo point {name}: identity/round-trip seal "
+                        "missing or False")
+    fams = {p.get("family") for p in zoo}
+    if len(fams) < 3:
+        _fail(path, f"_zoo_frontier spans only families {sorted(fams)}: "
+                    "need >= 3 distinct (the whole-zoo guarantee)")
     n = sum(1 for k in r if not k.startswith("_"))
-    return f"{n} CR columns, both byte-identity seals True"
+    return (f"{n} CR columns + {len(zoo)}-family zoo frontier "
+            f"({', '.join(sorted(fams))}), all seals True")
 
 
 CHECKS = {

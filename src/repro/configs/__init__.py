@@ -1,5 +1,7 @@
-from repro.configs.registry import (ARCH_IDS, SHAPES, ShapeSpec, get_config,
+from repro.configs.registry import (ARCH_IDS, SERVE_SMOKE_ARCHS, SHAPES,
+                                    ShapeSpec, get_config, get_protocol,
                                     get_smoke_config, grid, shape_applicable)
 
-__all__ = ["ARCH_IDS", "SHAPES", "ShapeSpec", "get_config",
-           "get_smoke_config", "grid", "shape_applicable"]
+__all__ = ["ARCH_IDS", "SERVE_SMOKE_ARCHS", "SHAPES", "ShapeSpec",
+           "get_config", "get_protocol", "get_smoke_config", "grid",
+           "shape_applicable"]

@@ -29,6 +29,21 @@ ARCH_IDS = (
 
 _MODULES = {a: a.replace("-", "_").replace(".", "_") for a in ARCH_IDS}
 
+# the archs whose smoke configs are wired end to end through the serve
+# stack (compress -> container -> fused kernel decompress -> engine) in
+# tier-1 CI — one per state shape: pure ring (dense), pure recurrent
+# (ssm), and ring + recurrent hybrid
+SERVE_SMOKE_ARCHS = ("ras-pimc", "mamba2-130m", "recurrentgemma-2b")
+
+
+def _module(arch: str) -> str:
+    try:
+        return _MODULES[arch]
+    except KeyError:
+        raise KeyError(
+            f"unknown arch {arch!r}: registered ids are "
+            f"{', '.join(ARCH_IDS)}") from None
+
 
 @dataclass(frozen=True)
 class ShapeSpec:
@@ -47,13 +62,19 @@ SHAPES = {
 
 
 def get_config(arch: str) -> ModelConfig:
-    mod = importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+    mod = importlib.import_module(f"repro.configs.{_module(arch)}")
     return mod.CONFIG
 
 
 def get_smoke_config(arch: str) -> ModelConfig:
-    mod = importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+    mod = importlib.import_module(f"repro.configs.{_module(arch)}")
     return mod.SMOKE
+
+
+def get_protocol(arch: str):
+    """The arch's :class:`repro.models.ModelProtocol` (family dispatch)."""
+    from repro.models import get_protocol as _by_cfg
+    return _by_cfg(get_config(arch))
 
 
 def shape_applicable(cfg: ModelConfig, shape: ShapeSpec) -> tuple[bool, str]:

@@ -24,10 +24,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_smoke_config
+from repro.configs import ARCH_IDS, get_smoke_config
 from repro.core import bitstream
 from repro.data.pipeline import token_stream
-from repro.models import init_model
+from repro.models import init_model, state_spec
 from repro.serve.compress import lm_compress, lm_decompress
 from repro.serve.engine import generate
 from repro.train import checkpoint
@@ -35,7 +35,11 @@ from repro.train import checkpoint
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="ras-pimc")
+    ap.add_argument("--arch", default="ras-pimc", metavar="ARCH",
+                    help="any registered arch id (configs.registry.ARCH_IDS)"
+                         " — the serve stack is family-agnostic behind the "
+                         "model-state protocol: SSM / rGLRU / MoE smoke "
+                         "configs all run the same datapath")
     ap.add_argument("--mode", choices=["compress", "generate", "engine"],
                     default="compress",
                     help="compress = one stream end to end; generate = "
@@ -68,7 +72,15 @@ def main(argv=None):
                          "(interpret mode off-TPU)")
     args = ap.parse_args(argv)
 
+    if args.arch not in ARCH_IDS:
+        ap.error(f"unknown --arch {args.arch!r}; registered ids: "
+                 f"{', '.join(ARCH_IDS)}")
     cfg = get_smoke_config(args.arch)
+    spec = state_spec(cfg)
+    state_kind = ("ring+recurrent" if spec.ring and spec.recurrent
+                  else "recurrent" if spec.recurrent else "ring")
+    print(f"arch={args.arch} family={cfg.family} kinds={spec.kinds} "
+          f"state={state_kind}")
     params = init_model(cfg, jax.random.PRNGKey(0))
     if args.ckpt:
         step = checkpoint.latest_step(args.ckpt)

@@ -1,7 +1,32 @@
-from repro.models.config import ModelConfig
-from repro.models.transformer import (abstract_model, decode_step, forward,
-                                      init_cache, init_model, loss_fn,
-                                      make_model_defs)
+"""The single import surface of the model zoo.
 
-__all__ = ["ModelConfig", "abstract_model", "decode_step", "forward",
-           "init_cache", "init_model", "loss_fn", "make_model_defs"]
+``serve/`` (and anything else driving models as probability generators)
+imports from HERE, never from an architecture module: the protocol
+entry points dispatch per family (``models.protocol``), so the serving
+stack is generator-agnostic — the paper's pluggable-model contract.
+"""
+
+from repro.models.config import ModelConfig
+from repro.models.protocol import (FAMILY_PROTOCOLS, ModelProtocol,
+                                   PrefillUnsupportedError, StateSpec,
+                                   can_prefill, decode_step, get_protocol,
+                                   has_recurrent_state, init_state,
+                                   prefill_chunk, recurrent_state_tree,
+                                   ring_length, state_spec, wrap_length)
+from repro.models.transformer import (abstract_model, forward, init_model,
+                                      loss_fn, make_model_defs)
+# back-compat alias: the protocol name is init_state (the state need not be
+# a transformer "cache"); existing callers keep working
+from repro.models.transformer import init_cache
+
+__all__ = [
+    "ModelConfig",
+    # protocol surface
+    "FAMILY_PROTOCOLS", "ModelProtocol", "PrefillUnsupportedError",
+    "StateSpec", "can_prefill", "decode_step", "get_protocol",
+    "has_recurrent_state", "init_state", "prefill_chunk",
+    "recurrent_state_tree", "ring_length", "state_spec", "wrap_length",
+    # training / construction surface
+    "abstract_model", "forward", "init_cache", "init_model", "loss_fn",
+    "make_model_defs",
+]

@@ -87,6 +87,23 @@ def lane_mesh_usable(mesh: Mesh | None, rows: int,
     return rows > 0 and rows % mesh.shape["lanes"] == 0
 
 
+def state_row_specs(state, row_axis: int = 1):
+    """PartitionSpec tree sharding a model-state pytree's row axis.
+
+    The model-state protocol (``repro.models.state_spec``) pins every
+    state leaf — KV rings and recurrent ``(h, conv)`` alike — to carry
+    the batch row on axis ``row_axis`` (axis 1 behind the stage ``reps``
+    axis), so ONE spec tree places *arbitrary* state on a ``("lanes",)``
+    mesh: ``P(None, "lanes")`` shards rows and replicates every
+    trailing per-leaf dimension (ring slots, conv taps, SSD planes —
+    a PartitionSpec shorter than the leaf rank replicates the rest).
+    Consumed by the batched engine's shard_map carry; the companion of
+    :func:`lane_mesh_usable` on the same routing contract.
+    """
+    spec = P(*([None] * row_axis + ["lanes"]))
+    return jax.tree.map(lambda _: spec, state)
+
+
 def _chunked_table_specs(tbl: TableSet, sharded: bool):
     spec = P("chunks") if sharded else P()
     return jax.tree.map(lambda _: spec, tbl)

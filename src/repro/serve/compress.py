@@ -47,8 +47,7 @@ import numpy as np
 
 from repro.core import bitstream, coder, constants as C, spc
 from repro.core.predictors import model_topk_candidates
-from repro.models.config import ModelConfig
-from repro.models.transformer import decode_step, init_cache
+from repro.models import ModelConfig, decode_step, init_state
 
 BOS = 0
 
@@ -165,7 +164,7 @@ def _lm_decompress_scan(params, cfg: ModelConfig, enc: coder.EncodedLanes,
     consumes (the serve two-pass kernel decode, see :func:`lm_decompress`).
     """
     lanes = enc.buf.shape[0]
-    cache = init_cache(cfg, lanes, n_symbols)
+    cache = init_state(cfg, lanes, n_symbols)
     dec0 = coder.decoder_init(enc)
     tok0 = jnp.full((lanes, 1), BOS, jnp.int32)
 
@@ -232,7 +231,7 @@ def _lm_decompress_fused(params, cfg: ModelConfig, enc: coder.EncodedLanes,
                          interpret: bool = True):
     """Monolithic fused decode: whole stream in one traced program."""
     lanes = enc.buf.shape[0]
-    cache = init_cache(cfg, lanes, n_symbols)
+    cache = init_state(cfg, lanes, n_symbols)
     tok = jnp.full((lanes, 1), BOS, jnp.int32)
     _, _, sym, probes, under = _fused_scan(params, cfg, enc, cache, tok,
                                            jnp.int32(0), n_symbols,
@@ -452,7 +451,7 @@ def _fused_chunked_local(params, cfg: ModelConfig,
     """
     slab_in = isinstance(chunks, bitstream.ContainerSlab)
     lanes = chunks.offset.shape[1] if slab_in else chunks.buf.shape[1]
-    cache = init_cache(cfg, lanes, n_symbols)
+    cache = init_state(cfg, lanes, n_symbols)
     tok = jnp.full((lanes, 1), BOS, jnp.int32)
     outs, lane_sum = [], jnp.zeros((lanes,), jnp.int32)
     under = jnp.zeros((lanes,), bool)
@@ -562,7 +561,7 @@ def lm_decompress_chunked(params, cfg: ModelConfig,
             out = out + (lane_sum,)
         return out
     collect = backend == "two_pass"
-    cache = init_cache(cfg, lanes, n_symbols)
+    cache = init_state(cfg, lanes, n_symbols)
     tok = jnp.full((lanes, 1), BOS, jnp.int32)
     outs, lane_sum, planes = [], jnp.zeros((lanes,), jnp.int32), []
     under = jnp.zeros((lanes,), bool)

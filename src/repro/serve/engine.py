@@ -34,9 +34,10 @@ import numpy as np
 
 from repro.core import bitstream, coder, constants as C
 from repro.core.predictors import model_topk_candidates
-from repro.models.config import ModelConfig
-from repro.models.transformer import (can_prefill, decode_step, init_cache,
-                                      prefill_chunk)
+from repro.models import (ModelConfig, PrefillUnsupportedError, can_prefill,
+                          decode_step, init_state, prefill_chunk,
+                          recurrent_state_tree, ring_length, state_spec,
+                          wrap_length)
 
 
 def make_serve_step(cfg: ModelConfig):
@@ -68,7 +69,7 @@ def teacher_forced_scan(params, cfg: ModelConfig, tokens: jax.Array,
     regression test in tests/test_serve_engine.py pins this).
     """
     b, s = tokens.shape
-    cache = init_cache(cfg, b, max_len)
+    cache = init_state(cfg, b, max_len)
 
     def body(carry, t):
         cache = carry
@@ -208,7 +209,7 @@ def _chunk_body(params, cache, tok, fresh, pos0, mode, n_valid, tf, buf,
     row-local — shardable over a ``("lanes",)`` mesh with no collectives.
 
       fresh   (B,) bool  — admit boundary: zero the row's cache, tok=BOS
-                           (matching ``init_cache`` zeros, so the row's
+                           (matching ``init_state`` zeros, so the row's
                            evolution equals a fresh single-request scan)
       pos0    (B,) int32 — the row's absolute position at cycle start
       mode    (B,) int32 — MODE_COMPRESS / MODE_DECOMPRESS / MODE_IDLE
@@ -223,25 +224,40 @@ def _chunk_body(params, cache, tok, fresh, pos0, mode, n_valid, tf, buf,
     Each step runs the shared ``decode_step`` (per-row ring positions),
     quantizes through the single-source ``serve.compress.step_tables``,
     ranks model-top-k candidates and pops one symbol per row
-    (``kernels.ops.rans_decode_step_rows``).  Frozen rows clamp their
-    position to ``pos0 + n_valid`` — the write lands in the slot the next
-    cycle's first step overwrites before attending, so freezing needs no
-    cache select.  Returns ``(cache', tok', tables, syms, probes)`` with
-    scan-stacked ``(chunk_size, B, ...)`` outputs.
+    (``kernels.ops.rans_decode_step_rows``).  Freezing a row past its
+    request is per state class (``repro.models.recurrent_state_tree``):
+    *ring* leaves need no select — the frozen row clamps its position to
+    ``pos0 + n_valid``, so the write lands in the slot the next cycle's
+    first step overwrites before attending; *recurrent* leaves (ssm/rec
+    ``(h, conv)``) mutate on EVERY step, so frozen rows explicitly keep
+    their old leaves (``jnp.where`` on the active mask — for ring-only
+    configs the select tree is empty and the traced program is unchanged).
+    Returns ``(cache', tok', tables, syms, probes)`` with scan-stacked
+    ``(chunk_size, B, ...)`` outputs.
     """
     from repro.kernels.ops import rans_decode_step_rows
     from repro.serve.compress import step_tables
     cache = jax.tree.map(functools.partial(_row_reset, fresh), cache)
     tok = jnp.where(fresh[:, None], jnp.int32(BOS), tok)
+    rec_tree = recurrent_state_tree(cache)      # static (trace-time) bools
     dec0 = coder.decoder_init(coder.EncodedLanes(
         buf=buf, start=start, length=jnp.zeros_like(start), overflow=None))
     buf_t = buf.T                   # (cap, B): transposed once, not per step
+
+    def _freeze(active, new_cache, old_cache):
+        def sel(rec, new, old):
+            if not rec:
+                return new
+            m = active.reshape((1, -1) + (1,) * (new.ndim - 2))
+            return jnp.where(m, new, old)
+        return jax.tree.map(sel, rec_tree, new_cache, old_cache)
 
     def body(carry, t):
         cache, s, ptr, tok = carry
         active = t < n_valid
         pos = pos0 + jnp.minimum(t, n_valid)
-        lg, cache = decode_step(params, cache, tok, pos, cfg)
+        lg, new_cache = decode_step(params, cache, tok, pos, cfg)
+        cache = _freeze(active, new_cache, cache)
         tbl = step_tables(lg, cfg.vocab_size, prob_bits)
         cands = model_topk_candidates(lg[:, :cfg.vocab_size], topk)
         s2, p2, sym, probes, u = rans_decode_step_rows(
@@ -332,12 +348,18 @@ class BatchEngine:
     ``lm_decompress_chunked`` at the same ``chunk_size``/``prob_bits``/
     ``topk`` regardless of co-batched traffic.  (Rows are independent in
     every model op; a ring of length >= T never wraps and its unwritten
-    slots contribute exactly-zero attention mass; the per-chunk coder math
-    is the identical ``core`` single source.)  Requests longer than the
-    ring are rejected with a named error unless ``allow_wrap=True`` —
-    wrapped requests condition on a sliding window of ``max_len`` tokens
-    (engine-compressed wrapped streams round-trip through engine
-    decompress at the same ``max_len``).
+    slots contribute exactly-zero attention mass; recurrent state is
+    position-free and frozen rows keep their leaves by explicit select;
+    the per-chunk coder math is the identical ``core`` single source.)
+    The length guard is state-spec-driven (``repro.models.wrap_length``):
+    pure-recurrent configs (mamba2) accept ANY length — their O(1) state
+    never wraps; windowed configs (recurrentgemma, mixtral) accept any
+    length once ``max_len >=`` the native window — both the engine ring
+    (``min(max_len, window)``) and the single-request ring saturate at
+    the window, byte-identically; only a ring that would wrap *shorter
+    than the single-request path's* is rejected with a named error unless
+    ``allow_wrap=True`` (wrapped requests condition on a sliding window
+    of ``max_len`` tokens and round-trip through this engine).
 
     Admission: FIFO by ``(arrival, rid)``, at most ``max_queue`` waiting
     requests (``submit_*`` raises :class:`EngineQueueFullError` beyond —
@@ -354,8 +376,13 @@ class BatchEngine:
     are all unwrapped compress requests to the block-parallel prefill
     program (:func:`_prefill_body` — the engine's throughput lever: one
     teacher-forced pass replaces ``chunk_size`` sequential steps, bit
-    -identically); ``"off"`` forces every cycle onto the step program
-    (the byte-identity oracle the tests compare against).
+    -identically), stepping down cleanly to the step program for families
+    without ``prefill_chunk`` (recurrent/hybrid state is sequential —
+    ``repro.models.can_prefill``); ``"off"`` forces every cycle onto the
+    step program (the byte-identity oracle the tests compare against);
+    ``"force"`` raises :class:`repro.models.PrefillUnsupportedError` at
+    construction when the family cannot prefill — the named-error guard
+    against silently assuming attention state for recurrent families.
     ``prefill_cycles`` counts fast-path dispatches.
     """
 
@@ -368,9 +395,16 @@ class BatchEngine:
                  prefill: str = "auto"):
         if step_backend not in ("coder", "kernel"):
             raise ValueError(f"unknown step backend {step_backend!r}")
-        if prefill not in ("auto", "off"):
+        if prefill not in ("auto", "off", "force"):
             raise ValueError(f"unknown prefill policy {prefill!r} "
-                             "(expected 'auto' or 'off')")
+                             "(expected 'auto', 'off' or 'force')")
+        if prefill == "force" and not can_prefill(cfg):
+            raise PrefillUnsupportedError(
+                f"prefill='force' on config {cfg.name!r} (family "
+                f"{cfg.family!r}, kinds {state_spec(cfg).kinds}): this "
+                "family carries sequential state and has no block-parallel "
+                "prefill — use prefill='auto' (steps down to the step "
+                "program) or 'off'")
         self.params = params
         self.cfg = cfg
         self.slots = slots
@@ -387,7 +421,14 @@ class BatchEngine:
         self.max_queue = max_queue
         self.step_backend = step_backend
         self.interpret = interpret
-        self._cache = init_cache(cfg, self.rows, self.max_len)
+        # state-spec-driven geometry: what the shared state actually is
+        # (ring vs recurrent), how many ring slots init_state allocated,
+        # and past which length a request's conditioning would diverge
+        # from the single-request path (None = never — see wrap_length)
+        self.state_spec = state_spec(cfg)
+        self.ring_len = ring_length(cfg, self.max_len)
+        self._wrap_len = wrap_length(cfg, self.max_len)
+        self._cache = init_state(cfg, self.rows, self.max_len)
         self._tok = jnp.full((self.rows, 1), BOS, jnp.int32)
         self._slots: list[_Req | None] = [None] * slots
         self._queue: list[_Req] = []
@@ -396,13 +437,13 @@ class BatchEngine:
         self.prefill_cycles = 0      # cycles served by the prefill program
         self._prog = self._build_program(mesh)
         self._prog_prefill = (self._build_program(mesh, body=_prefill_body)
-                              if prefill == "auto" and can_prefill(cfg)
-                              else None)
+                              if prefill in ("auto", "force")
+                              and can_prefill(cfg) else None)
 
     # -- program ----------------------------------------------------------
 
     def _build_program(self, mesh, body=_chunk_body):
-        from repro.parallel.chunked import lane_mesh_usable
+        from repro.parallel.chunked import lane_mesh_usable, state_row_specs
         if not lane_mesh_usable(mesh, self.rows,
                                 what="batched engine (its slots x lanes rows)"):
             return _compiled_program(
@@ -415,7 +456,9 @@ class BatchEngine:
             prob_bits=self.prob_bits, topk=self.topk,
             backend=self.step_backend, interpret=self.interpret)
         rows, rows2 = P("lanes"), P("lanes", None)
-        carry = jax.tree.map(lambda _: P(None, "lanes"), self._cache)
+        # arbitrary state pytrees shard by the protocol's row-axis pin
+        # (axis 1 on every leaf — ring or recurrent alike)
+        carry = state_row_specs(self._cache)
         pspec = jax.tree.map(lambda _: P(), self.params)
         core = shard_map(
             core, mesh=mesh,
@@ -440,14 +483,22 @@ class BatchEngine:
     def _check_len(self, t_len: int, allow_wrap: bool, what: str):
         if t_len < 1:
             raise ValueError(f"{what} must cover at least 1 symbol")
-        if t_len > self.max_len and not allow_wrap:
+        # state-spec-driven: pure-recurrent state never wraps (any length
+        # is byte-identical to the single-request path), a window-bounded
+        # ring with max_len >= window saturates identically at any length;
+        # only a ring the single-request path would have sized LARGER can
+        # diverge (repro.models.wrap_length)
+        if self._wrap_len is not None and t_len > self._wrap_len \
+                and not allow_wrap:
             raise ValueError(
                 f"request of {t_len} symbols exceeds the engine ring "
-                f"(max_len={self.max_len}): the shared cache would wrap "
-                "and condition on a sliding window — pass allow_wrap=True "
-                "to accept windowed conditioning (round-trips through this "
-                "engine, but is no longer byte-identical to the "
-                "full-context single-request path)")
+                f"({self.ring_len} slots at max_len={self.max_len}): the "
+                "shared cache would wrap and condition on a sliding window "
+                "narrower than the single-request path's — pass "
+                "allow_wrap=True to accept windowed conditioning "
+                "(round-trips through this engine, but is no longer "
+                "byte-identical to the single-request path), or build the "
+                "engine with a larger max_len")
 
     def submit_compress(self, tokens, arrival: float = 0.0,
                         cap: int | None = None,
@@ -552,9 +603,11 @@ class BatchEngine:
             if req is None or req.pos >= req.n_symbols:
                 continue
             # decompress rows feed decoded symbols back step to step, and
-            # wrapped rows overwrite slots still visible to in-chunk
-            # queries — both force the cycle onto the step program
-            if req.kind != "compress" or req.n_symbols > self.max_len:
+            # rows wrapping the ALLOCATED ring (ring_len = min(max_len,
+            # window), not max_len) overwrite slots still visible to
+            # in-chunk queries — both force the cycle onto the step
+            # program (attn_prefill requires pos0 + S <= ring slots)
+            if req.kind != "compress" or req.n_symbols > self.ring_len:
                 prefillable = False
             r0, r1 = s * self.lanes, (s + 1) * self.lanes
             n_c = min(S, req.n_symbols - req.pos)
